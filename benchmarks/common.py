@@ -1,0 +1,37 @@
+"""Shared benchmark harness config + CSV emission."""
+from __future__ import annotations
+
+import time
+
+# scaled-down but structure-preserving defaults (paper: ~4M pages, 1:2 ratio)
+N_PAGES = 4096
+BLOCK = 2048
+N_BLOCKS = 240
+FAST_RATIO = 1 / 3           # fast:(fast+slow) = 1:2 (paper default)
+SKETCH_W = 1 << 14           # W = 4x page count (paper: 512K for ~4M pages)
+QUOTA = 128
+
+# cadence: migration every block, Alg.1 every 4, sketch clear every 16
+SIM_KW = dict(quota_pages=QUOTA, sketch_width=SKETCH_W, migration_interval=1,
+              threshold_update_period=4, clear_interval=16)
+
+METHODS = ["neomem", "pebs", "tpp", "autonuma", "pte-scan", "first-touch"]
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        self._final = None
+        return self
+
+    def __exit__(self, *a):
+        self._final = time.perf_counter() - self.t0
+
+    @property
+    def s(self) -> float:
+        return self._final if self._final is not None \
+            else time.perf_counter() - self.t0

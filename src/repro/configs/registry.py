@@ -1,0 +1,45 @@
+"""Architecture registry: --arch <id> -> ArchConfig."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS = [
+    "llama-3.2-vision-11b",
+    "zamba2-2.7b",
+    "gemma2-27b",
+    "llama3.2-3b",
+    "stablelm-1.6b",
+    "qwen1.5-4b",
+    "whisper-base",
+    "xlstm-1.3b",
+    "kimi-k2-1t-a32b",
+    "deepseek-v3-671b",
+]
+
+_MODULES = {
+    "llama-3.2-vision-11b": "llama32_vision_11b",
+    "zamba2-2.7b": "zamba2_2p7b",
+    "gemma2-27b": "gemma2_27b",
+    "llama3.2-3b": "llama32_3b",
+    "stablelm-1.6b": "stablelm_1p6b",
+    "qwen1.5-4b": "qwen15_4b",
+    "whisper-base": "whisper_base",
+    "xlstm-1.3b": "xlstm_1p3b",
+    "kimi-k2-1t-a32b": "kimi_k2_1t",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+}
+
+
+def get_config(name: str):
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_smoke_config(name: str):
+    """Reduced same-family config for CPU smoke tests."""
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.SMOKE_CONFIG
+
+
+def list_archs():
+    return list(ARCHS)

@@ -1,0 +1,29 @@
+"""NeoMem core: sketch-based device-side profiling + tiered memory management.
+
+Public API:
+  SketchParams/SketchState + sketch_* .... Count-Min hot-page detector
+  NeoProfParams/NeoProfState/Commands .... the device-side profiler unit
+  PolicyParams/PolicyState/update_threshold ... Algorithm 1
+  TierParams/TierState + promote/touch ... two-tier page placement
+  NeoMemDaemon ........................... orchestration cadences
+  run_sim/WORKLOADS ...................... paper-evaluation simulator
+"""
+from repro.core.sketch import (  # noqa: F401
+    SketchParams, SketchState, sketch_init, sketch_update, sketch_query,
+    sketch_clear, sketch_histogram, error_bound_from_hist, quantile_from_hist,
+    h3_hash, make_seeds,
+)
+from repro.core.neoprof import (  # noqa: F401
+    NeoProfParams, NeoProfState, NeoProfCommands, neoprof_init, neoprof_observe,
+)
+from repro.core.policy import (  # noqa: F401
+    PolicyParams, PolicyState, StaticPolicy, update_threshold,
+)
+from repro.core.tiering import (  # noqa: F401
+    TierParams, TierState, tier_init, touch, promote, migrate_data,
+    drain_period_stats, lookup,
+)
+from repro.core.daemon import DaemonParams, NeoMemDaemon  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    MemModel, SimResult, WORKLOADS, run_sim, geomean_speedup,
+)

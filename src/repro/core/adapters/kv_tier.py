@@ -1,0 +1,77 @@
+"""Paged-KV tiering — NeoMem applied to long-context KV caches (§3.2).
+
+The access stream is the set of page ids whose content contributed non-
+trivial attention mass at each decode step (the analogue of LLC misses to
+CXL memory: pages the model actually pulled from).  Between steps the daemon
+promotes sketch-hot pages from the host-resident full history into the
+fast-tier page slots that decode attends over (models.decode paged cache).
+
+Scoring stream construction: we feed NeoProf the pages ranked by their
+attention mass quantile — computed device-side from the paged kernel's
+per-page softmax denominators — so a page's "access count" is the number of
+steps it mattered.  This keeps the exact NeoMem machinery (sketch, hot
+buffer, threshold policy) unchanged.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.daemon import DaemonParams, NeoMemDaemon
+from repro.core.neoprof import NeoProfParams, neoprof_init, neoprof_observe
+from repro.core.sketch import SketchParams
+from repro.core.tiering import TierParams, tier_init
+from repro.core import tiering
+
+
+@dataclasses.dataclass
+class KVTierConfig:
+    n_pages_total: int           # full history pages (slow tier)
+    hot_slots: int               # fast-tier page slots (per layer group)
+    quota_pages: int = 64
+    sketch_width: int = 1 << 14
+    mass_threshold: float = 0.02  # page matters if it carries >=2% softmax mass
+
+
+class KVTier:
+    def __init__(self, cfg: KVTierConfig, migrate_fn=None):
+        self.cfg = cfg
+        self.prof_params = NeoProfParams(sketch=SketchParams(width=cfg.sketch_width))
+        self.prof = neoprof_init(self.prof_params)
+        tp = TierParams(cfg.n_pages_total, cfg.hot_slots, cfg.quota_pages)
+        self.tier = tier_init(tp)
+        self.daemon = NeoMemDaemon(self.prof_params, tp,
+                                   DaemonParams(quota_pages=cfg.quota_pages),
+                                   migrate_fn=migrate_fn)
+
+    @staticmethod
+    def important_pages(page_mass: jax.Array, page_ids: jax.Array,
+                        threshold: float) -> jax.Array:
+        """page_mass: (P,) per-page softmax mass; -> page-id stream (P,)
+        with unimportant pages masked to -1 (NeoProf padding)."""
+        total = jnp.maximum(jnp.sum(page_mass), 1e-30)
+        keep = page_mass / total >= threshold
+        return jnp.where(keep, page_ids, -1)
+
+    def observe_step(self, page_mass: np.ndarray | jax.Array,
+                     page_ids: np.ndarray | jax.Array) -> None:
+        stream = self.important_pages(jnp.asarray(page_mass),
+                                      jnp.asarray(page_ids, jnp.int32),
+                                      self.cfg.mass_threshold)
+        self.prof = neoprof_observe(self.prof, stream, self.prof_params)
+        self.tier = tiering.touch(self.tier, stream)
+
+    def tick(self):
+        self.prof, self.tier = self.daemon.tick(self.prof, self.tier)
+
+    def resident_pages(self) -> np.ndarray:
+        sp = np.asarray(self.tier.slot_page)
+        return sp[sp >= 0]
+
+    def hit_rate(self) -> float:
+        f = float(self.tier.fast_reads) + self.daemon.state.total_fast
+        s = float(self.tier.slow_reads) + self.daemon.state.total_slow
+        return f / max(f + s, 1.0)

@@ -1,0 +1,370 @@
+"""Two-tier memory simulator + workload generators (paper §VI evaluation).
+
+Drives the *real* NeoMem components (JAX sketch / policy / TieredStore) and
+the baseline profilers over page-access streams modeled on the paper's eight
+benchmarks, and converts hit/miss/migration/overhead accounting into modeled
+runtime via the measured tier characteristics of paper Fig. 3:
+
+    fast tier  ~120 ns load-to-use,   slow tier ~430 ns  (3.6x),
+    page migration at slow-tier bandwidth, profiling overhead per §II-C.
+
+This is the engine behind benchmarks/fig11..fig16 — the CPU-runnable,
+pure-algorithm reproduction of the paper's end-to-end results (repro band 5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiering
+from repro.core.baselines import BaselineCosts
+from repro.core.neoprof import NeoProfCommands, NeoProfParams, neoprof_init, neoprof_observe
+from repro.core.policy import PolicyParams, PolicyState, update_threshold
+from repro.core.sketch import SketchParams
+from repro.core.tiering import TierParams
+
+
+@dataclasses.dataclass
+class MemModel:
+    """Tier timing model (paper Fig. 3 + Table II)."""
+
+    fast_lat: float = 120e-9
+    slow_lat: float = 430e-9
+    page_bytes: int = 4096
+    slow_bw: float = 12e9          # bytes/s (FPGA DDR4-2666 2ch, derated)
+    line_bytes: int = 64
+
+    def access_time(self, fast_hits: int, slow_hits: int) -> float:
+        return fast_hits * self.fast_lat + slow_hits * self.slow_lat
+
+    def migration_time(self, pages: int) -> float:
+        return pages * self.page_bytes / self.slow_bw
+
+
+# ---------------------------------------------------------------------------
+# Workload stream generators — page-id streams mirroring the paper's suite
+# ---------------------------------------------------------------------------
+
+def _zipf_pages(rng, n_pages, s, size):
+    # bounded zipf via inverse-CDF on precomputed weights (cheap for n<=1M)
+    ranks = np.arange(1, n_pages + 1, dtype=np.float64)
+    w = ranks ** (-s)
+    cdf = np.cumsum(w) / np.sum(w)
+    u = rng.random(size)
+    pages = np.searchsorted(cdf, u)
+    perm = rng.permutation(n_pages)  # decorrelate rank from address
+    return perm[pages]
+
+
+def gups(n_pages: int, block: int, n_blocks: int, seed: int = 0,
+         hot_frac: float = 0.1, hot_prob: float = 0.9,
+         shift_at: int | None = None) -> Iterator[np.ndarray]:
+    """HeMem-style skewed GUPS: hot_prob of traffic to a hot_frac region.
+
+    ``shift_at`` relocates the hot set mid-stream (Fig. 16 convergence)."""
+    rng = np.random.default_rng(seed)
+    hot_n = max(1, int(n_pages * hot_frac))
+    # hot region sits at the END of the address space: the init sweep has
+    # already first-touch-filled the fast tier with low (cold) pages, so the
+    # hot set starts slow-resident — the tiering system must earn its keep.
+    hot_base = n_pages - hot_n
+    for b in range(n_blocks):
+        if shift_at is not None and b == shift_at:
+            hot_base = (hot_base + n_pages // 2) % (n_pages - hot_n)
+        is_hot = rng.random(block) < hot_prob
+        hot = hot_base + rng.integers(0, hot_n, block)
+        uni = rng.integers(0, n_pages, block)
+        yield np.where(is_hot, hot, uni).astype(np.int64)
+
+
+def xsbench(n_pages, block, n_blocks, seed=0):
+    """MC neutronics macro-XS lookups: very skewed (paper: 'skewed hot regions')."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_blocks):
+        yield _zipf_pages(rng, n_pages, 1.2, block).astype(np.int64)
+
+
+def silo_ycsb(n_pages, block, n_blocks, seed=0):
+    """YCSB-C zipf(0.99) point lookups."""
+    rng = np.random.default_rng(seed)
+    for _ in range(n_blocks):
+        yield _zipf_pages(rng, n_pages, 0.99, block).astype(np.int64)
+
+
+def btree(n_pages, block, n_blocks, seed=0):
+    """Index lookups: tiny ultra-hot index levels + zipf leaves."""
+    rng = np.random.default_rng(seed)
+    idx_n = max(1, n_pages // 100)
+    for _ in range(n_blocks):
+        to_idx = rng.random(block) < 0.7
+        idx = rng.integers(0, idx_n, block)
+        leaf = idx_n + _zipf_pages(rng, n_pages - idx_n, 0.8, block)
+        yield np.where(to_idx, idx, leaf).astype(np.int64)
+
+
+def pagerank(n_pages, block, n_blocks, seed=0, n_iters: int = 16):
+    """Graph iterations: power-law-hot vertices + per-iteration edge sweep.
+
+    Phase structure (hot set intensity varies by iteration) drives the
+    Fig. 14 dynamic-threshold study."""
+    rng = np.random.default_rng(seed)
+    per_iter = max(1, n_blocks // n_iters)
+    for b in range(n_blocks):
+        it = b // per_iter
+        sweep_frac = 0.5 if it % 4 == 0 else 0.25   # phase change
+        n_sweep = int(block * sweep_frac)
+        sweep = (np.arange(n_sweep, dtype=np.int64) * 7 + b * block) % n_pages
+        hot = _zipf_pages(rng, n_pages, 1.05, block - n_sweep)
+        yield np.concatenate([sweep, hot]).astype(np.int64)
+
+
+def deathstar(n_pages, block, n_blocks, seed=0):
+    """Microservice mix: zipf(0.9) with slow working-set drift."""
+    rng = np.random.default_rng(seed)
+    for b in range(n_blocks):
+        drift = (b * 17) % n_pages
+        yield ((_zipf_pages(rng, n_pages, 0.9, block) + drift) % n_pages).astype(np.int64)
+
+
+def stream_stencil(n_pages, block, n_blocks, seed=0):
+    """bwaves/roms-like: dominant sequential sweep + small resident hot set."""
+    rng = np.random.default_rng(seed)
+    hot_n = max(1, n_pages // 50)
+    pos = 0
+    for _ in range(n_blocks):
+        n_seq = int(block * 0.8)
+        seq = (pos + np.arange(n_seq, dtype=np.int64)) % n_pages
+        pos = (pos + n_seq) % n_pages
+        hot = rng.integers(0, hot_n, block - n_seq)
+        yield np.concatenate([seq, hot]).astype(np.int64)
+
+
+WORKLOADS = {
+    "deathstar": deathstar,
+    "pagerank": pagerank,
+    "xsbench": xsbench,
+    "gups": gups,
+    "silo": silo_ycsb,
+    "btree": btree,
+    "bwaves": stream_stencil,
+    "roms": lambda *a, **k: stream_stencil(*a, **{**k, "seed": k.get("seed", 0) + 1}),
+}
+
+
+# ---------------------------------------------------------------------------
+# Harness
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SimResult:
+    name: str
+    runtime: float                 # modeled seconds
+    access_time: float
+    migration_time: float
+    overhead_time: float
+    fast_hits: int
+    slow_hits: int
+    promoted: int
+    ping_pong: int
+    trace: list = dataclasses.field(default_factory=list)  # per-block dicts
+
+    @property
+    def hit_rate(self) -> float:
+        t = self.fast_hits + self.slow_hits
+        return self.fast_hits / max(t, 1)
+
+
+def _first_touch_alloc(first_seen, free_slots, pages, tier):
+    """Uniform first-touch allocation: new pages land in fast while it has room."""
+    new = pages[~first_seen[pages]]
+    if len(new) == 0 or free_slots <= 0:
+        return tier, free_slots, np.empty((0,), np.int64)
+    new = new[: free_slots]
+    uniq = np.unique(new)
+    first_seen[uniq] = True
+    k = len(uniq)
+    batch = np.asarray(uniq, np.int32)
+    tier, promoted, victims = tiering.promote(tier, jnp.asarray(batch), k)
+    return tier, free_slots - int(np.sum(np.asarray(promoted) >= 0)), uniq
+
+
+def run_sim(
+    method: str,
+    stream: Iterator[np.ndarray],
+    n_pages: int,
+    fast_ratio: float = 1 / 3,           # fast:(fast+slow); 1:2 -> 1/3
+    mem: MemModel | None = None,
+    sketch_width: int = 1 << 14,
+    sketch_depth: int = 2,
+    quota_pages: int = 256,
+    migration_interval: int = 1,
+    threshold_update_period: int = 8,
+    clear_interval: int = 64,
+    fixed_theta: int | None = None,
+    costs: BaselineCosts | None = None,
+    epoch_blocks: int = 8,               # baseline scan epoch, in blocks
+    collect_trace: bool = False,
+    init_sweep: bool = True,             # sequential allocation pre-phase
+) -> SimResult:
+    """Run one (method x workload) cell and return modeled accounting.
+
+    methods: neomem | neomem-fixed | pte-scan | pebs | autonuma | tpp |
+             first-touch
+    """
+    mem = mem or MemModel()
+    costs = costs or BaselineCosts()
+    num_slots = max(1, int(n_pages * fast_ratio))
+    tier = tiering.tier_init(TierParams(n_pages, num_slots, quota_pages))
+    first_seen = np.zeros(n_pages, bool)
+    free_slots = num_slots
+
+    prof = policy = cmd = baseline = None
+    pparams = None
+    if method.startswith("neomem"):
+        pparams = NeoProfParams(sketch=SketchParams(width=sketch_width, depth=sketch_depth))
+        prof = neoprof_init(pparams)
+        cmd = NeoProfCommands(pparams)
+        # policy quota bound: 4x the migration CAPACITY (paper's 256MB/s is
+        # ~100x its typical demand; equal-to-capacity degenerates into a
+        # starve/flood oscillation of p)
+        pol_params = PolicyParams(
+            m_quota_pages=4 * quota_pages * threshold_update_period)
+        policy = PolicyState.init(pol_params)
+        theta0 = fixed_theta if fixed_theta is not None else policy.theta
+        prof = cmd.set_threshold(prof, theta0)
+    else:
+        from repro.core import baselines as B
+        mk = {
+            "first-touch": B.FirstTouch,
+            "pte-scan": B.PteScan,
+            "pebs": B.PebsSampler,
+            "autonuma": lambda n, s, **kw: B.HintFault(n, s, promote_after=1, **kw),
+            "tpp": lambda n, s, **kw: B.HintFault(n, s, promote_after=2, **kw),
+        }[method]
+        baseline = mk(n_pages, num_slots, costs=costs)
+
+    res = SimResult(method, 0.0, 0.0, 0.0, 0.0, 0, 0, 0, 0)
+    migrated_this_period = 0
+    pending = np.empty((0,), np.int64)   # hot pages awaiting quota
+    MAX_PENDING = 1 << 14
+
+    if init_sweep:
+        # Application init: sequentially touch every page once (e.g. array
+        # initialization).  First-touch allocation fills the fast tier with
+        # the LOW pages — for every method alike, as on a real kernel.
+        for lo in range(0, n_pages, 1 << 14):
+            blk = np.arange(lo, min(lo + (1 << 14), n_pages), dtype=np.int64)
+            tier, free_slots, _ = _first_touch_alloc(first_seen, free_slots, blk, tier)
+            tier = tiering.touch(tier, jnp.asarray(blk, jnp.int32))
+        tier, init_stats = tiering.drain_period_stats(tier)
+        # init accesses count toward runtime (via the final access_time
+        # recomputation) but not toward promotion/ping-pong stats
+        res.fast_hits += int(init_stats["fast_reads"])
+        res.slow_hits += int(init_stats["slow_reads"])
+
+    for b, pages in enumerate(stream):
+        # --- allocation (uniform across methods) ---------------------------
+        tier, free_slots, _ = _first_touch_alloc(first_seen, free_slots, pages, tier)
+
+        # --- profiling ------------------------------------------------------
+        hot: np.ndarray = np.empty((0,), np.int64)
+        if prof is not None:
+            # NeoProf sits in the SLOW tier's controller: it only ever sees
+            # accesses that miss the fast tier (paper Fig. 2).  Promoted
+            # pages vanish from its stream, so the counter quantile
+            # continuously re-targets the hottest still-slow pages.
+            page_slot = np.asarray(tier.page_slot)
+            slow_pages = pages[page_slot[pages] < 0]
+            blk = np.full(len(pages), -1, np.int64)
+            blk[: len(slow_pages)] = slow_pages
+            prof = neoprof_observe(
+                prof, jnp.asarray(blk, jnp.int32), pparams,
+                rd_bytes=float(len(slow_pages) * mem.line_bytes),
+                budget_bytes=float(len(pages) * mem.line_bytes) * 2.0,
+            )
+            if (b + 1) % migration_interval == 0:
+                prof, hot = cmd.drain_hotpages(prof)
+                res.overhead_time += costs.neoprof_readout
+        else:
+            hot = baseline.observe(pages)
+            if (b + 1) % epoch_blocks == 0:
+                hot = np.union1d(hot, baseline.epoch_end())
+
+        # --- migration (quota-bounded; overflow stays queued) -----------------
+        n_migrated = 0
+        if method != "first-touch":
+            hot = np.concatenate([pending, np.asarray(hot, np.int64)])
+        if len(hot) > 0 and method != "first-touch":
+            take = min(quota_pages, len(hot))
+            batch = np.full((quota_pages,), -1, np.int32)
+            batch[:take] = hot[:take]
+            pending = hot[take:][:MAX_PENDING]
+            tier, promoted, _ = tiering.promote(tier, jnp.asarray(batch), quota_pages)
+            n_migrated = int(np.sum(np.asarray(promoted) >= 0))
+            res.migration_time += mem.migration_time(n_migrated)
+            migrated_this_period += n_migrated
+
+        # --- access accounting ------------------------------------------------
+        tier = tiering.touch(tier, jnp.asarray(pages, jnp.int32))
+
+        # --- NeoMem policy cadence --------------------------------------------
+        if prof is not None and (b + 1) % threshold_update_period == 0:
+            hist = cmd.get_hist(prof)
+            bw = cmd.bandwidth_util(prof)
+            err = cmd.get_error_bound(prof, hist)
+            tier, stats = tiering.drain_period_stats(tier)
+            res.fast_hits += int(stats["fast_reads"])
+            res.slow_hits += int(stats["slow_reads"])
+            res.promoted += int(stats["promoted"])
+            res.ping_pong += int(stats["ping_pong"])
+            if fixed_theta is None:
+                # Laplace-damped ping-pong ratio: at low promotion
+                # volume a single bounce would read as pp=1.0 and crash p
+                # (beta=2 quarters it) into a starvation equilibrium.
+                pp_ratio = float(stats["ping_pong"]) / max(
+                    int(stats["promoted"]), quota_pages // 2, 1)
+                # M = migration DEMAND (migrated + still queued): the quota
+                # constraint (Alg.1 line 13) throttles when demand exceeds
+                # capacity, not merely when running at capacity.
+                demand = migrated_this_period + len(pending)
+                policy = update_threshold(policy, pol_params,
+                                          hist, bw, pp_ratio, demand, err)
+                prof = cmd.set_threshold(prof, policy.theta)
+            migrated_this_period = 0
+            if collect_trace:
+                res.trace.append({
+                    "block": b, "theta": int(policy.theta), "bw": bw, "err": err,
+                    "hit_rate": res.hit_rate,
+                })
+        elif prof is None and (b + 1) % threshold_update_period == 0:
+            tier, stats = tiering.drain_period_stats(tier)
+            res.fast_hits += int(stats["fast_reads"])
+            res.slow_hits += int(stats["slow_reads"])
+            res.promoted += int(stats["promoted"])
+            res.ping_pong += int(stats["ping_pong"])
+            if collect_trace:
+                res.trace.append({"block": b, "hit_rate": res.hit_rate})
+
+        if prof is not None and (b + 1) % clear_interval == 0:
+            prof = cmd.reset(prof)
+
+    # flush remaining period stats
+    tier, stats = tiering.drain_period_stats(tier)
+    res.fast_hits += int(stats["fast_reads"])
+    res.slow_hits += int(stats["slow_reads"])
+    res.promoted += int(stats["promoted"])
+    res.ping_pong += int(stats["ping_pong"])
+    if baseline is not None:
+        res.overhead_time += baseline.overhead
+
+    res.access_time = mem.access_time(res.fast_hits, res.slow_hits)
+    res.runtime = res.access_time + res.migration_time + res.overhead_time
+    return res
+
+
+def geomean_speedup(base: list[float], ours: list[float]) -> float:
+    r = np.asarray(base) / np.asarray(ours)
+    return float(np.exp(np.mean(np.log(r))))

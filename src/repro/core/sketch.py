@@ -1,0 +1,257 @@
+"""Count-Min Sketch hot-page detector — the NeoProf core (paper §IV-B).
+
+Faithful algorithmic port of NeoProf's sketch pipeline:
+
+  * D hash lanes x W counters, H3 hash functions (paper Eq. 5),
+  * valid bits for O(1) logical reset  -> generalized to an 8-bit *epoch tag*
+    per entry (same lazy-reset semantics, no contiguous-bit hardware needed),
+  * hot bits for in-sketch Bloom-style hot-page filtering (paper Fig. 7 (2)/(6)),
+  * tight error-bound estimation via the counter histogram (paper Fig. 9,
+    after Chen et al.): e = top-(W * delta^(1/D))-percentile counter value.
+
+Everything here is pure JAX (jit-able, runs on-device inside a step — the
+"device-side offload" analogue).  The Pallas kernel in
+``repro.kernels.neoprof_update`` accelerates :func:`sketch_update` on TPU;
+this module is also its reference semantics.
+
+Block-synchronous semantics: the hardware pipeline processes one address per
+cycle; we process a *block* of S addresses at once.  A page is "newly hot"
+for a block iff (a) its post-block estimate exceeds theta, (b) its hot bits
+were not all set *before* the block, and (c) it is the first occurrence of
+that page within the block (intra-block dedup — the parallel analogue of the
+serial hot filter).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Page ids are < 2**PAGE_ID_BITS.  32-bit ids address 16 TB of 4K pages in the
+# paper (Table III); our logical page spaces (experts / KV pages / vocab rows)
+# are far smaller, but we keep the width for fidelity.
+PAGE_ID_BITS = 30
+HIST_BINS = 64
+
+
+class SketchParams(NamedTuple):
+    """Static sketch geometry (paper Table III defaults: W=512K, D=2)."""
+
+    width: int = 1 << 14  # W counters per lane
+    depth: int = 2        # D lanes
+    counter_bits: int = 16  # saturate like the paper's 16-bit counters
+
+    @property
+    def counter_max(self) -> int:
+        return (1 << self.counter_bits) - 1
+
+
+class SketchState(NamedTuple):
+    """Device-resident sketch state (a pytree; donate-able)."""
+
+    counts: jax.Array      # (D, W) int32, saturating at counter_max
+    epochs: jax.Array      # (D, W) uint8 epoch tags (generalized valid bits)
+    hot: jax.Array         # (D, W) bool hot bits
+    cur_epoch: jax.Array   # () uint8 current epoch
+    n_seen: jax.Array      # () int32 items streamed this epoch (N in Eq. 3)
+    seeds: jax.Array       # (D, PAGE_ID_BITS) int32 H3 seeds
+
+
+def make_seeds(key: jax.Array, depth: int, width: int) -> jax.Array:
+    """H3 seed matrix: one m-bit row seed per input bit per lane."""
+    m_bits = int(np.log2(width))
+    assert 1 << m_bits == width, "sketch width must be a power of two"
+    return jax.random.randint(
+        key, (depth, PAGE_ID_BITS), 0, 1 << m_bits, dtype=jnp.int32
+    )
+
+
+def sketch_init(params: SketchParams, key: jax.Array | None = None) -> SketchState:
+    key = key if key is not None else jax.random.PRNGKey(0)
+    d, w = params.depth, params.width
+    return SketchState(
+        counts=jnp.zeros((d, w), jnp.int32),
+        epochs=jnp.zeros((d, w), jnp.uint8),
+        hot=jnp.zeros((d, w), jnp.bool_),
+        cur_epoch=jnp.zeros((), jnp.uint8),
+        n_seen=jnp.zeros((), jnp.int32),
+        seeds=make_seeds(key, d, w),
+    )
+
+
+def h3_hash(page_ids: jax.Array, seeds: jax.Array) -> jax.Array:
+    """Vectorized H3 hash (paper Eq. 5): XOR of seeds at set input bits.
+
+    page_ids: (...,) int32; seeds: (D, PAGE_ID_BITS) int32 -> (D, ...) int32.
+    """
+    h = jnp.zeros((seeds.shape[0],) + page_ids.shape, jnp.int32)
+    for bit in range(PAGE_ID_BITS):  # static unroll — PAGE_ID_BITS XORs
+        mask = ((page_ids >> bit) & 1).astype(jnp.bool_)
+        h = jnp.where(mask[None], h ^ seeds[:, bit][(...,) + (None,) * page_ids.ndim], h)
+    return h
+
+
+def sketch_clear(state: SketchState) -> SketchState:
+    """O(1) logical reset (paper's valid-bit trick): bump the epoch tag.
+
+    Counters whose tag != cur_epoch read as zero and are re-initialized on
+    their next touch.  Hot bits are cleared for real (they are one bit-plane;
+    the paper resets them contiguously "in a few cycles").
+    """
+    return state._replace(
+        cur_epoch=(state.cur_epoch + jnp.uint8(1)),
+        hot=jnp.zeros_like(state.hot),
+        n_seen=jnp.zeros_like(state.n_seen),
+    )
+
+
+def _live_counts(state: SketchState) -> jax.Array:
+    """Counters, with stale-epoch entries reading as zero."""
+    return jnp.where(state.epochs == state.cur_epoch, state.counts, 0)
+
+
+def _first_occurrence(page_ids: jax.Array, valid: jax.Array) -> jax.Array:
+    """Mask of first occurrence of each id within the block (O(S^2) compare)."""
+    s = page_ids.shape[0]
+    eq = (page_ids[:, None] == page_ids[None, :]) & valid[None, :]
+    earlier = jnp.tril(jnp.ones((s, s), jnp.bool_), k=-1)
+    return valid & ~jnp.any(eq & earlier, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def sketch_update(
+    state: SketchState,
+    page_ids: jax.Array,
+    theta: jax.Array,
+    params: SketchParams,
+) -> tuple[SketchState, jax.Array]:
+    """Stream a block of page ids into the sketch; return newly-hot mask.
+
+    page_ids: (S,) int32, negative entries are padding.
+    theta:    () int32 hotness threshold.
+    Returns (new_state, newly_hot) with newly_hot: (S,) bool — True on the
+    first in-block occurrence of a page that crossed theta and whose hot bits
+    were not already all set.
+    """
+    valid = page_ids >= 0
+    safe_ids = jnp.where(valid, page_ids, 0)
+    idx = h3_hash(safe_ids, state.seeds)  # (D, S)
+
+    live = _live_counts(state)
+    d = params.depth
+
+    # Counter increments: per-lane bincount of the block (the MXU-friendly
+    # form the Pallas kernel mirrors with segment tiles).
+    def lane_add(lane_counts, lane_idx):
+        return lane_counts.at[lane_idx].add(valid.astype(jnp.int32))
+
+    new_counts = jax.vmap(lane_add)(live, idx)
+    new_counts = jnp.minimum(new_counts, params.counter_max)
+
+    # Post-block estimate (Eq. 2): min over lanes of the hashed counters.
+    gathered = jax.vmap(lambda c, i: c[i])(new_counts, idx)  # (D, S)
+    est = jnp.min(gathered, axis=0)
+
+    # Hot filter (paper Fig. 7 (6)): previously-recorded iff all hot bits set.
+    hot_bits_before = jax.vmap(lambda hb, i: hb[i])(state.hot, idx)  # (D, S)
+    already_hot = jnp.all(hot_bits_before, axis=0)
+    is_hot = valid & (est > theta)
+    newly_hot = is_hot & ~already_hot & _first_occurrence(safe_ids, valid)
+
+    # Set hot bits for every detected hot page (incl. re-detections).
+    def lane_set_hot(lane_hot, lane_idx):
+        return lane_hot.at[lane_idx].max(is_hot)
+
+    new_hot = jax.vmap(lane_set_hot)(state.hot, idx)
+
+    del d
+    # Storing the full lazily-zeroed array makes every entry current, so the
+    # epoch tag can be refreshed wholesale (identical read-back semantics to
+    # the hardware's per-entry valid bit; keeps exact state parity with the
+    # Pallas kernel which rewrites whole segments anyway).
+    new_state = state._replace(
+        counts=new_counts,
+        epochs=jnp.full_like(state.epochs, state.cur_epoch),
+        hot=new_hot,
+        n_seen=state.n_seen + jnp.sum(valid, dtype=jnp.int32),
+    )
+    return new_state, newly_hot
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def sketch_query(state: SketchState, page_ids: jax.Array, params: SketchParams) -> jax.Array:
+    """Point-query estimated access counts (Eq. 2)."""
+    idx = h3_hash(page_ids, state.seeds)
+    live = _live_counts(state)
+    gathered = jax.vmap(lambda c, i: c[i])(live, idx)
+    return jnp.min(gathered, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Histogram unit + error bound (paper Fig. 9)
+# ---------------------------------------------------------------------------
+
+def hist_edges(counter_bits: int = 16, bins: int = HIST_BINS) -> np.ndarray:
+    """Static geometric-ish bin edges over [0, counter_max].
+
+    bin k covers [edges[k], edges[k+1]).  First bins are exact small counts
+    (0,1,2,...) — where hot-threshold decisions live — then geometric growth.
+    """
+    max_v = (1 << counter_bits) - 1
+    exact = list(range(17))  # 0..16 exact
+    geo = np.unique(
+        np.round(np.geomspace(17, max_v + 1, bins + 1 - len(exact))).astype(np.int64)
+    )
+    edges = np.unique(np.concatenate([np.array(exact, np.int64), geo]))
+    # pad/trim to exactly bins+1 edges
+    while len(edges) < bins + 1:
+        edges = np.append(edges, edges[-1] + 1)
+    return edges[: bins + 1].astype(np.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("params",))
+def sketch_histogram(state: SketchState, params: SketchParams) -> jax.Array:
+    """64-bin histogram of row-0 live counters (the NeoProf histogram unit)."""
+    edges = jnp.asarray(hist_edges(params.counter_bits))
+    row0 = _live_counts(state)[0]
+    bin_idx = jnp.clip(jnp.searchsorted(edges, row0, side="right") - 1, 0, HIST_BINS - 1)
+    return jnp.zeros((HIST_BINS,), jnp.int32).at[bin_idx].add(1)
+
+
+def error_bound_from_hist(
+    hist: jax.Array | np.ndarray,
+    params: SketchParams,
+    delta: float = 0.25,
+) -> jax.Array:
+    """Tight error bound e (paper §IV-B, after Chen et al. [13]).
+
+    e = the value at rank W * delta^(1/D) counting from the LARGEST counter
+    (with D=2, delta=0.25 -> the median, as in the paper's example).  We read
+    it off the histogram: the upper edge of the bin where the from-the-top
+    cumulative count crosses the rank.
+    """
+    edges = jnp.asarray(hist_edges(params.counter_bits))
+    hist = jnp.asarray(hist)
+    rank = params.width * (delta ** (1.0 / params.depth))
+    cum_from_top = jnp.cumsum(hist[::-1])[::-1]  # pages with bin >= k
+    crossed = cum_from_top >= rank
+    # highest bin index where cumulative-from-top still >= rank
+    bin_id = jnp.max(jnp.where(crossed, jnp.arange(HIST_BINS), -1))
+    return jnp.where(bin_id < 0, 0, edges[jnp.clip(bin_id + 1, 0, HIST_BINS)]).astype(jnp.int32)
+
+
+def quantile_from_hist(hist: jax.Array | np.ndarray, q: jax.Array | float) -> jax.Array:
+    """Q_F(q): counter value such that a fraction q of counters lie below.
+
+    Used by Algorithm 1 line 16: theta = Q_F(1 - p).
+    """
+    edges = jnp.asarray(hist_edges())
+    hist = jnp.asarray(hist)
+    total = jnp.maximum(jnp.sum(hist), 1)
+    cum = jnp.cumsum(hist)
+    target = q * total
+    bin_id = jnp.argmax(cum >= target)  # first bin reaching the quantile
+    return edges[jnp.clip(bin_id + 1, 0, HIST_BINS)].astype(jnp.int32)

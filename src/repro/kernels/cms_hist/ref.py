@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the cms_hist kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.sketch import HIST_BINS
+
+
+def hist_ref(counts_row0, epochs_row0, cur_epoch, edges):
+    live = jnp.where(epochs_row0 == cur_epoch, counts_row0, 0)
+    bin_idx = jnp.clip(jnp.searchsorted(edges, live, side="right") - 1, 0, HIST_BINS - 1)
+    return jnp.zeros((HIST_BINS,), jnp.int32).at[bin_idx].add(1)

@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the neoprof_update kernel (block-synchronous semantics).
+
+This mirrors repro.core.sketch.sketch_update exactly; it exists separately so
+kernel tests compare kernel vs oracle without importing the stateful API.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.sketch import PAGE_ID_BITS
+
+
+def h3_ref(page_ids: jax.Array, seeds: jax.Array) -> jax.Array:
+    depth = seeds.shape[0]
+    h = jnp.zeros((depth,) + page_ids.shape, jnp.int32)
+    for bit in range(PAGE_ID_BITS):
+        mask = ((page_ids >> bit) & 1).astype(jnp.bool_)
+        h = jnp.where(mask[None], h ^ seeds[:, bit][:, None], h)
+    return h
+
+
+def update_ref(counts, epochs, hot, page_ids, seeds, cur_epoch, counter_max):
+    """Returns (new_counts, new_epochs, est (D,S), hot_before (D,S))."""
+    valid = page_ids >= 0
+    idx = h3_ref(jnp.where(valid, page_ids, 0), seeds)           # (D, S)
+    live = jnp.where(epochs == cur_epoch, counts, 0)
+    new_counts = jax.vmap(lambda c, i: c.at[i].add(valid.astype(jnp.int32)))(live, idx)
+    new_counts = jnp.minimum(new_counts, counter_max)
+    new_epochs = jnp.full_like(epochs, cur_epoch)
+    est = jax.vmap(lambda c, i: c[i])(new_counts, idx)
+    est = jnp.where(valid[None], est, 0)
+    hot_before = jax.vmap(lambda hh, i: hh[i])(hot, idx)
+    hot_before = jnp.where(valid[None], hot_before, 0)
+    return new_counts, new_epochs, est, hot_before
+
+
+def mark_hot_ref(hot, page_ids, is_hot, seeds):
+    valid = (page_ids >= 0) & (is_hot > 0)
+    idx = h3_ref(jnp.where(page_ids >= 0, page_ids, 0), seeds)
+    return jax.vmap(lambda hh, i: hh.at[i].max(valid.astype(jnp.int32)))(hot, idx)

@@ -1,0 +1,47 @@
+"""Jitted wrappers for paged decode attention.
+
+``paged_attention``          — single-device (or replicated) call.
+``paged_attention_sharded``  — fast-tier pages sharded across mesh axes;
+    each shard runs the kernel over its local slots, then the partial
+    (m, l, acc) flash-decode stats are combined with a max/psum pair —
+    cross-device flash-decoding, the optimized serve path for long_500k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attn.paged_attn import (
+    paged_attention as _kernel,
+    paged_attention_raw as _kernel_raw,
+)
+
+
+def _interp():
+    return jax.default_backend() != "tpu"
+
+
+def paged_attention(q, k_pages, v_pages, page_lengths, *,
+                    scale=None, softcap: float = 0.0, interpret=None):
+    if interpret is None:
+        interpret = _interp()
+    return _kernel(q, k_pages, v_pages, page_lengths,
+                   scale=scale, softcap=softcap, interpret=interpret)
+
+
+def paged_attention_local_stats(q, k_pages, v_pages, page_lengths, *,
+                                scale=None, softcap: float = 0.0,
+                                interpret=None):
+    if interpret is None:
+        interpret = _interp()
+    return _kernel_raw(q, k_pages, v_pages, page_lengths,
+                       scale=scale, softcap=softcap, interpret=interpret)
+
+
+def combine_stats(m, l, acc, axis_names):
+    """Flash-decoding cross-shard softmax combine over ``axis_names``."""
+    m_glob = jax.lax.pmax(m, axis_names)
+    w = jnp.exp(m - m_glob)
+    l_glob = jax.lax.psum(l * w, axis_names)
+    acc_glob = jax.lax.psum(acc * w, axis_names)
+    return acc_glob / jnp.maximum(l_glob, 1e-30)

@@ -1,0 +1,125 @@
+"""Paged decode attention over NeoMem-resident hot KV pages (Pallas TPU).
+
+The serving hot path for tiered long-context decode (DESIGN.md §3.2): one new
+query token attends over the fast-tier-resident KV *pages* selected by the
+NeoMem policy.  Flash-decoding style online softmax, gridded over pages so
+each page's KV block streams HBM->VMEM exactly once; (m, l, acc) running
+stats live in revisited output blocks (the TPU grid is sequential over the
+last axis, so read-modify-write accumulation is well-defined).
+
+Supports GQA (q heads grouped over kv heads), per-page token counts (partial
+last page), invalid-page masking (pages the tiering layer could not promote)
+and gemma2-style logit soft-capping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(
+    q_ref,        # (1, H, dh)
+    k_ref,        # (1, 1, T, Hkv, dh)  — one page
+    v_ref,        # (1, 1, T, Hkv, dh)
+    len_ref,      # (1, 1) int32 — valid tokens in this page (0 => invalid)
+    m_ref,        # (1, H, 1)  f32 running max
+    l_ref,        # (1, H, 1)  f32 running denom
+    acc_ref,      # (1, H, dh) f32 running numerator
+    *, scale: float, softcap: float, groups: int,
+):
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # (H, dh)
+    k = k_ref[0, 0].astype(jnp.float32)                   # (T, Hkv, dh)
+    v = v_ref[0, 0].astype(jnp.float32)
+    t, hkv, dh = k.shape
+    h = q.shape[0]
+    n_valid = len_ref[0, 0]
+
+    # GQA: repeat kv heads across the query-head groups.
+    k = jnp.repeat(k, groups, axis=1)                     # (T, H, dh)
+    v = jnp.repeat(v, groups, axis=1)
+
+    s = jnp.einsum("hd,thd->ht", q, k,
+                   preferred_element_type=jnp.float32) * scale   # (H, T)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    tok = jax.lax.broadcasted_iota(jnp.int32, (h, t), 1)
+    s = jnp.where(tok < n_valid, s, NEG_INF)
+
+    m_prev = m_ref[0, :, 0]                               # (H,)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    # guard fully-masked pages: keep m finite math stable
+    alpha = jnp.exp(jnp.minimum(m_prev - m_cur, 0.0))
+    p_ij = jnp.exp(s - m_cur[:, None])
+    p_ij = jnp.where(tok < n_valid, p_ij, 0.0)
+
+    l_cur = l_ref[0, :, 0] * alpha + jnp.sum(p_ij, axis=1)
+    acc = acc_ref[0] * alpha[:, None] + jnp.einsum(
+        "ht,thd->hd", p_ij, v, preferred_element_type=jnp.float32)
+
+    m_ref[0, :, 0] = m_cur
+    l_ref[0, :, 0] = l_cur
+    acc_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+def paged_attention_raw(
+    q: jax.Array,          # (B, H, dh)
+    k_pages: jax.Array,    # (B, P, T, Hkv, dk)
+    v_pages: jax.Array,    # (B, P, T, Hkv, dv)
+    page_lengths: jax.Array,  # (B, P) int32 — 0 marks an invalid page
+    *, scale: float | None = None, softcap: float = 0.0,
+    interpret: bool = True,
+):
+    """Unnormalized flash-decode stats (m, l, acc) — for cross-shard combine."""
+    b, h, dh = q.shape
+    _, p, t, hkv, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    groups = h // hkv
+    scale = (dh ** -0.5) if scale is None else scale
+    kern = functools.partial(
+        _paged_attn_kernel, scale=scale, softcap=softcap, groups=groups)
+
+    m, l, acc = pl.pallas_call(
+        kern,
+        grid=(b, p),
+        in_specs=[
+            pl.BlockSpec((1, h, dh), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, 1, t, hkv, dh), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1, t, hkv, dv), lambda i, j: (i, j, 0, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, 1), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, h, 1), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, h, dv), lambda i, j: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_pages, v_pages, page_lengths.astype(jnp.int32))
+    return m, l, acc
+
+
+def paged_attention(q, k_pages, v_pages, page_lengths, *,
+                    scale=None, softcap: float = 0.0, interpret: bool = True):
+    m, l, acc = paged_attention_raw(
+        q, k_pages, v_pages, page_lengths,
+        scale=scale, softcap=softcap, interpret=interpret)
+    out = acc / jnp.maximum(l, 1e-30)
+    return out.astype(q.dtype)

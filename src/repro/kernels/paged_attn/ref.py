@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_lengths,
+                        scale=None, softcap: float = 0.0):
+    b, h, dk = q.shape
+    _, p, t, hkv, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    groups = h // hkv
+    scale = (dk ** -0.5) if scale is None else scale
+
+    k = jnp.repeat(k_pages, groups, axis=3).reshape(b, p * t, h, dk)
+    v = jnp.repeat(v_pages, groups, axis=3).reshape(b, p * t, h, dv)
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    tok = jnp.arange(p * t) % t
+    page = jnp.arange(p * t) // t
+    valid = tok[None, :] < page_lengths[:, page]            # (B, P*T)
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = jnp.where(valid[:, None, :], w, 0.0)
+    out = jnp.einsum("bht,bthd->bhd", w, v.astype(jnp.float32))
+    out = out / jnp.maximum(jnp.sum(w, axis=-1)[..., None], 1e-30)
+    return out.astype(q.dtype)

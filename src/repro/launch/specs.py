@@ -1,0 +1,249 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch x shape) cell.
+
+Weak-type-correct, shardable, zero allocation — the dry-run lowers against
+these.  Returns (fn, args, in_shardings, label) per cell:
+
+  train_4k      -> train_step(state, batch)
+  prefill_32k   -> prefill(params, tokens)
+  decode_32k    -> decode_step(params, cache, token)     (full KV cache)
+  long_500k     -> decode_step_paged(params, cache, token) (NeoMem fast tier)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ArchConfig, cell_is_skipped
+from repro.configs.registry import get_config
+from repro.dist.sharding import cache_pspecs, param_pspecs
+from repro.models import decode as dec
+from repro.models import transformer as tr
+from repro.train import step as train_step_mod
+
+PAGE_T = 256            # tokens per KV page (NeoMem tiering page)
+HOT_SLOTS = 512         # fast-tier page slots per layer (long_500k)
+
+
+def _dp(mesh):
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _sds(shape, dtype, mesh=None, spec=None):
+    sh = NamedSharding(mesh, spec) if mesh is not None and spec is not None else None
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def _abstract_params(cfg: ArchConfig, mesh):
+    shapes = jax.eval_shape(lambda: tr.init_params(cfg, jax.random.PRNGKey(0)))
+    specs = param_pspecs(shapes, mesh)
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                          sharding=NamedSharding(mesh, p)),
+        shapes, specs, is_leaf=lambda x: hasattr(x, "shape")), specs
+
+
+def _microbatches(cfg: ArchConfig, global_batch: int, seq: int, mesh) -> int:
+    """Grad-accumulation factor: keep per-device microbatch tokens ~<= 8K."""
+    dp = int(np.prod([mesh.shape[a] for a in _dp(mesh)]))
+    per_dev_rows = max(1, global_batch // dp)
+    target_rows = max(1, (8192 + seq - 1) // seq)
+    m = max(1, per_dev_rows // target_rows)
+    while per_dev_rows % m:
+        m -= 1
+    return m
+
+
+HOT_EXPERT_FRAC = 16    # E_hot = E / frac resident (NeoMem fast tier)
+N_FETCH = 16            # cold experts DMA'd per interval (1 per EP shard)
+
+
+def _tiered_expert_params(cfg: ArchConfig, params, mesh):
+    """Swap full FSDP expert weights for NeoMem fast-tier residents:
+    (G, E, D, F) -> hot (G, E_hot, D, F) TP-sharded + replicated fetch
+    buffers + residency map.  (§Perf cell A optimization.)"""
+    e = cfg.moe.n_experts
+    e_hot = max(mesh.shape["model"], e // HOT_EXPERT_FRAC)
+    g = cfg.n_groups
+    d, f = cfg.d_model, cfg.moe.expert_ff
+    ns = lambda spec: NamedSharding(mesh, spec)
+    mk = lambda shape, spec: jax.ShapeDtypeStruct(
+        shape, jnp.bfloat16, sharding=ns(spec))
+    for blk in params["blocks"]:
+        ffn = blk.get("ffn")
+        if ffn is None or "w_gate" not in ffn or len(ffn["w_gate"].shape) < 4:
+            continue
+        ffn["w_gate"] = mk((g, e_hot, d, f), P(None, "model", None, None))
+        ffn["w_in"] = mk((g, e_hot, d, f), P(None, "model", None, None))
+        ffn["w_out"] = mk((g, e_hot, f, d), P(None, "model", None, None))
+        ffn["fetch_gate"] = mk((g, N_FETCH, d, f), P(None, "model", None, None))
+        ffn["fetch_in"] = mk((g, N_FETCH, d, f), P(None, "model", None, None))
+        ffn["fetch_out"] = mk((g, N_FETCH, f, d), P(None, "model", None, None))
+        ffn["fetch_ids"] = jax.ShapeDtypeStruct(
+            (g, N_FETCH), jnp.int32, sharding=ns(P(None, "model")))
+        ffn["residency"] = jax.ShapeDtypeStruct(
+            (g, e), jnp.int32, sharding=ns(P(None, None)))
+    return params
+
+
+def cell_specs(arch: str, shape_name: str, mesh, *, tcfg=None,
+               variant: str | None = None) -> dict[str, Any]:
+    """Build the lowerable (fn, args, shardings) for one dry-run cell.
+
+    variants: None (baseline) | 'tiered_experts' (§Perf A) | 'fsdp' (§Perf B)
+    """
+    skip = cell_is_skipped(arch, shape_name)
+    if skip:
+        return {"skip": skip}
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    b, s = shp["global_batch"], shp["seq_len"]
+    dp = _dp(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    bspec = P(dp, None)
+    label = f"{arch}:{shape_name}"
+
+    if variant == "fsdp":
+        shapes = jax.eval_shape(lambda: tr.init_params(cfg, jax.random.PRNGKey(0)))
+        from repro.dist.sharding import param_pspecs as pps
+        specs = pps(shapes, mesh, fsdp=True)
+        params = jax.tree.map(
+            lambda sd, p: jax.ShapeDtypeStruct(
+                sd.shape, sd.dtype, sharding=NamedSharding(mesh, p)),
+            shapes, specs, is_leaf=lambda x: hasattr(x, "shape"))
+        pspecs = specs
+    else:
+        params, pspecs = _abstract_params(cfg, mesh)
+    if variant == "tiered_experts":
+        assert cfg.moe is not None, "tiered_experts needs a MoE arch"
+        params = _tiered_expert_params(cfg, params, mesh)
+    ep = train_step_mod._ep_context(cfg, mesh)
+
+    if shp["kind"] == "train":
+        from repro.optim.optimizers import OptConfig
+        tcfg = tcfg or train_step_mod.TrainConfig(
+            opt=OptConfig(kind="adafactor" if cfg.moe else "adamw"),
+            microbatches=_microbatches(cfg, b, s, mesh),
+            local_grads=(variant == "local_grads"))
+        state = train_step_mod.make_state_shapes(cfg, tcfg)
+        st_sh = train_step_mod.state_shardings(state, mesh,
+                                               fsdp=(variant == "fsdp"))
+        state = jax.tree.map(
+            lambda sd, sh: jax.ShapeDtypeStruct(sd.shape, sd.dtype, sharding=sh),
+            state, st_sh)
+        batch = {
+            "tokens": _sds((b, s), jnp.int32, mesh, bspec),
+            "labels": _sds((b, s), jnp.int32, mesh, bspec),
+        }
+        if cfg.n_aux_tokens:
+            batch["aux_embeds"] = _sds((b, cfg.n_aux_tokens, cfg.d_model),
+                                       jnp.bfloat16, mesh, P(dp, None, None))
+        fn = train_step_mod.build_train_step(cfg, mesh, tcfg)
+        return {"fn": fn, "args": (state, batch), "label": label,
+                "donate": (0,), "tcfg": tcfg, "cfg": cfg}
+
+    if shp["kind"] == "prefill":
+        def fn(params, batch):
+            logits, _ = dec.prefill(cfg, params, batch["tokens"],
+                                    aux_embeds=batch.get("aux_embeds"),
+                                    ep_axes=ep)
+            return logits
+        batch = {"tokens": _sds((b, s), jnp.int32, mesh, bspec)}
+        if cfg.n_aux_tokens:
+            batch["aux_embeds"] = _sds((b, cfg.n_aux_tokens, cfg.d_model),
+                                       jnp.bfloat16, mesh, P(dp, None, None))
+        return {"fn": fn, "args": (params, batch), "label": label, "cfg": cfg}
+
+    if shp["kind"] == "decode":
+        cache_shapes = jax.eval_shape(
+            lambda: dec.init_cache(cfg, b, s, dtype=jnp.bfloat16))
+        cspecs = _decode_cache_specs(cache_shapes, mesh, dp)
+        cache = jax.tree.map(
+            lambda sd, sp: jax.ShapeDtypeStruct(
+                sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)),
+            cache_shapes, cspecs)
+        token = _sds((b, 1), jnp.int32, mesh, bspec)
+        aux = None
+        if cfg.n_aux_tokens:
+            n_aux = cfg.n_aux_tokens
+            aux = _sds((b, n_aux, cfg.d_model), jnp.bfloat16, mesh,
+                       P(dp, None, None))
+
+        def fn(params, cache, token, aux_embeds=None):
+            return dec.decode_step(cfg, params, cache, token,
+                                   aux_embeds=aux_embeds, ep_axes=ep)
+        args = (params, cache, token) + ((aux,) if aux is not None else ())
+        return {"fn": fn, "args": args, "label": label, "donate": (1,),
+                "cfg": cfg}
+
+    # long_500k paged decode
+    n_slots = HOT_SLOTS
+    cache_shapes = jax.eval_shape(
+        lambda: dec.init_paged_cache(cfg, b, n_slots, PAGE_T,
+                                     dtype=jnp.bfloat16))
+    slot_axes = tuple(mesh.axis_names)
+    cspecs = _paged_cache_specs(cache_shapes, mesh, slot_axes)
+    cache = jax.tree.map(
+        lambda sd, sp: jax.ShapeDtypeStruct(
+            sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)),
+        cache_shapes, cspecs)
+    token = _sds((b, 1), jnp.int32, mesh, P(None, None))
+    smesh = {"mesh": mesh, "axes": slot_axes}
+
+    def fn(params, cache, token):
+        return dec.decode_step_paged(cfg, params, cache, token,
+                                     page_t=PAGE_T, ep_axes=ep, smesh=smesh)
+    return {"fn": fn, "args": (params, cache, token), "label": label,
+            "donate": (1,), "cfg": cfg}
+
+
+def _decode_cache_specs(cache_shapes, mesh, dp):
+    """decode_32k: batch over DP; SEQUENCE over 'model' (baseline — XLA
+    all-gathers per layer; the hillclimb replaces this with sharded
+    flash-decode)."""
+    m = "model" if "model" in mesh.axis_names else None
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+
+    def leaf(kp, l):
+        from repro.dist.sharding import path_str
+        p = path_str(kp)
+        nd = len(l.shape)
+        if nd == 0:
+            return P()
+        lead = 1 if "blocks" in p else 0
+        dims = [None] * nd
+        if nd > lead and l.shape[lead] % max(dp_size, 1) == 0 \
+                and l.shape[lead] >= dp_size:
+            dims[lead] = dp
+        # seq dim of k/v caches: (lead, B, S, ...) -> index lead+1
+        if any(p.endswith(suf) for suf in ("/k", "/v", "c_kv", "k_rope")) \
+                and nd > lead + 1 and m \
+                and l.shape[lead + 1] % mesh.shape["model"] == 0:
+            dims[lead + 1] = m
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
+
+
+def _paged_cache_specs(cache_shapes, mesh, slot_axes):
+    """long_500k: page slots sharded over ALL mesh axes (B=1)."""
+    n_shards = int(np.prod([mesh.shape[a] for a in slot_axes]))
+
+    def leaf(kp, l):
+        from repro.dist.sharding import path_str
+        p = path_str(kp)
+        nd = len(l.shape)
+        if nd == 0:
+            return P()
+        lead = 1 if "blocks" in p else 0
+        dims = [None] * nd
+        if ("k_pages" in p or "v_pages" in p or "page_len" in p) \
+                and nd > lead + 1 and l.shape[lead + 1] % n_shards == 0:
+            dims[lead + 1] = slot_axes
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)

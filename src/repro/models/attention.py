@@ -1,0 +1,272 @@
+"""Attention variants: GQA (full / sliding-window / cross) and DeepSeek MLA.
+
+All attention math runs in fp32; params bf16.  Each variant exposes
+  init(key, cfg-ish dims) -> params
+  apply(params, x, ..., mode) -> y                    (training, full seq)
+  decode(params, x_t, cache, pos) -> (y_t, cache)     (single-token decode)
+
+Caches are dicts of arrays so they stack cleanly across scanned layers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPE, apply_rope
+
+NEG_INF = -1e30
+
+
+# -- GQA ----------------------------------------------------------------------
+
+def gqa_init(key, d, h, hkv, dh, bias=False, dtype=DTYPE):
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, h * dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv * dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv * dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (h * dh, d)) * (h * dh) ** -0.5).astype(dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((h * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def _proj_qkv(p, x, h, hkv, dh):
+    b, s, _ = x.shape
+    q = x @ p["wq"] + p.get("bq", 0)
+    k = x @ p["wk"] + p.get("bk", 0)
+    v = x @ p["wv"] + p.get("bv", 0)
+    return (q.reshape(b, s, h, dh), k.reshape(b, s, hkv, dh),
+            v.reshape(b, s, hkv, dh))
+
+
+def sdpa(q, k, v, *, causal=True, window: int = 0, softcap: float = 0.0,
+         scale=None, q_offset: int | jax.Array = 0,
+         k_offset: int | jax.Array = 0):
+    """q: (B,Sq,H,dh), k/v: (B,Sk,Hkv,dh).  window>0 = sliding-window causal.
+
+    q_offset / k_offset: absolute positions of q[0] / k[0] (decode, chunked
+    prefill, windowed-KV slices)."""
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    scale = (dh ** -0.5) if scale is None else scale
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, dh)
+    kf = k.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf) * scale   # (B,Hkv,g,Sq,Sk)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk) + k_offset
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window > 0:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v.astype(jnp.float32))
+    dv = v.shape[-1]   # MLA uses d_v != d_qk
+    return out.reshape(b, sq, h, dv).astype(q.dtype)
+
+
+CHUNK_Q = 512          # query-chunked attention kicks in above this length
+
+
+def sdpa_chunked(q, k, v, *, causal=True, window=0, softcap=0.0, scale=None,
+                 chunk=CHUNK_Q):
+    """Memory-bounded attention: lax.scan over query chunks.
+
+    Peak live scores are (B, H, chunk, Sk) instead of (B, H, Sq, Sk) — the
+    XLA-level analogue of flash attention's O(S) memory (the inner softmax
+    is still fused by XLA; only the chunk x Sk panel is ever live).
+    """
+    b, sq, h, dh = q.shape
+    if sq <= chunk or sq % chunk != 0:   # small or ragged: plain path
+        return sdpa(q, k, v, causal=causal, window=window, softcap=softcap,
+                    scale=scale)
+    qc = q.reshape(b, sq // chunk, chunk, h, dh).swapaxes(0, 1)
+
+    # sliding-window layers only ever need the trailing `window` keys per
+    # query chunk: slice K/V instead of masking the full row (perf pass §C:
+    # drops local-layer attention FLOPs from O(S^2) to O(S * window)).
+    sk = k.shape[1]
+    kv_span = min(sk, window + chunk) if (window > 0 and causal) else sk
+
+    def body(_, args):
+        i, q_i = args
+        if kv_span < sk:
+            start = jnp.clip(i * chunk - (kv_span - chunk), 0, sk - kv_span)
+            k_i = jax.lax.dynamic_slice_in_dim(k, start, kv_span, axis=1)
+            v_i = jax.lax.dynamic_slice_in_dim(v, start, kv_span, axis=1)
+        else:
+            start = 0
+            k_i, v_i = k, v
+        o_i = sdpa(q_i, k_i, v_i, causal=causal, window=window,
+                   softcap=softcap, scale=scale, q_offset=i * chunk,
+                   k_offset=start)
+        return None, o_i
+
+    _, oc = jax.lax.scan(body, None,
+                         (jnp.arange(sq // chunk), qc))
+    return oc.swapaxes(0, 1).reshape(b, sq, h, -1)   # -1: MLA has dv != dk
+
+
+def gqa_apply(p, x, *, h, hkv, dh, rope_theta=10000.0, causal=True,
+              window=0, softcap=0.0, positions=None, scale=None):
+    b, s, d = x.shape
+    q, k, v = _proj_qkv(p, x, h, hkv, dh)
+    pos = jnp.arange(s)[None, :] if positions is None else positions
+    if rope_theta > 0:
+        q = apply_rope(q, pos, rope_theta)
+        k = apply_rope(k, pos, rope_theta)
+    o = sdpa_chunked(q, k, v, causal=causal, window=window, softcap=softcap,
+                     scale=scale)
+    return o.reshape(b, s, h * dh) @ p["wo"]
+
+
+def gqa_init_cache(batch, smax, hkv, dh, dtype=DTYPE):
+    return {
+        "k": jnp.zeros((batch, smax, hkv, dh), dtype),
+        "v": jnp.zeros((batch, smax, hkv, dh), dtype),
+    }
+
+
+def gqa_decode(p, x_t, cache, pos, *, h, hkv, dh, rope_theta=10000.0,
+               window=0, softcap=0.0, scale=None):
+    """x_t: (B,1,D); pos: () current position; full-cache decode."""
+    b = x_t.shape[0]
+    q, k, v = _proj_qkv(p, x_t, h, hkv, dh)
+    pos_b = jnp.full((b, 1), pos)
+    if rope_theta > 0:
+        q = apply_rope(q, pos_b, rope_theta)
+        k = apply_rope(k, pos_b, rope_theta)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, pos, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, pos, 0, 0))
+    smax = ck.shape[1]
+    scale_ = (dh ** -0.5) if scale is None else scale
+    g = h // hkv
+    qf = q.astype(jnp.float32).reshape(b, 1, hkv, g, dh)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, ck.astype(jnp.float32)) * scale_
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    kpos = jnp.arange(smax)
+    mask = kpos <= pos
+    if window > 0:
+        mask &= kpos > pos - window
+    s = jnp.where(mask[None, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, cv.astype(jnp.float32))
+    o = o.reshape(b, 1, h * dh).astype(x_t.dtype)
+    return o @ p["wo"], {"k": ck, "v": cv}
+
+
+# -- cross attention (vision / encoder-decoder) --------------------------------
+
+def cross_apply(p, x, kv_src, *, h, hkv, dh):
+    """x: (B,Sq,D) queries; kv_src: (B,Sk,D) keys/values source (no rope)."""
+    b, sq, _ = x.shape
+    sk = kv_src.shape[1]
+    q = (x @ p["wq"] + p.get("bq", 0)).reshape(b, sq, h, dh)
+    k = (kv_src @ p["wk"] + p.get("bk", 0)).reshape(b, sk, hkv, dh)
+    v = (kv_src @ p["wv"] + p.get("bv", 0)).reshape(b, sk, hkv, dh)
+    o = sdpa(q, k, v, causal=False)
+    return o.reshape(b, sq, h * dh) @ p["wo"]
+
+
+# -- DeepSeek-V3 MLA -----------------------------------------------------------
+
+MLA_DEFAULTS = dict(q_lora=1536, kv_lora=512, d_nope=128, d_rope=64, d_v=128)
+
+
+def mla_init(key, d, h, *, q_lora=1536, kv_lora=512, d_nope=128, d_rope=64,
+             d_v=128, dtype=DTYPE):
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wq_a": (jax.random.normal(ks[0], (d, q_lora)) * s).astype(dtype),
+        "q_norm": jnp.ones((q_lora,), jnp.float32),
+        "wq_b": (jax.random.normal(ks[1], (q_lora, h * (d_nope + d_rope)))
+                 * q_lora ** -0.5).astype(dtype),
+        "wkv_a": (jax.random.normal(ks[2], (d, kv_lora + d_rope)) * s).astype(dtype),
+        "kv_norm": jnp.ones((kv_lora,), jnp.float32),
+        "wkv_b": (jax.random.normal(ks[3], (kv_lora, h * (d_nope + d_v)))
+                  * kv_lora ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(ks[4], (h * d_v, d)) * (h * d_v) ** -0.5).astype(dtype),
+    }
+
+
+def _rms(x, w, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    return (y * w).astype(x.dtype)
+
+
+def mla_apply(p, x, *, h, q_lora=1536, kv_lora=512, d_nope=128, d_rope=64,
+              d_v=128, rope_theta=10000.0, positions=None):
+    """Training-time MLA (latent KV decompressed on the fly)."""
+    b, s, d = x.shape
+    pos = jnp.arange(s)[None, :] if positions is None else positions
+    q = _rms(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, d_nope + d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = apply_rope(q_rope, pos, rope_theta)
+
+    kv_a = x @ p["wkv_a"]                                  # (B,S,kv_lora+d_rope)
+    c_kv = _rms(kv_a[..., :kv_lora], p["kv_norm"])
+    k_rope = apply_rope(kv_a[..., None, kv_lora:], pos, rope_theta)  # (B,S,1,dr)
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, d_nope + d_v)
+    k_nope, v = kv[..., :d_nope], kv[..., d_nope:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, d_rope))], -1)
+    q_full = jnp.concatenate([q_nope, q_rope], -1)
+    scale = (d_nope + d_rope) ** -0.5
+    o = sdpa_chunked(q_full, k, v, causal=True, scale=scale)
+    return o.reshape(b, s, h * d_v) @ p["wo"]
+
+
+def mla_init_cache(batch, smax, kv_lora=512, d_rope=64, dtype=DTYPE):
+    """MLA caches the COMPRESSED latent + rope key — its signature trick."""
+    return {
+        "c_kv": jnp.zeros((batch, smax, kv_lora), dtype),
+        "k_rope": jnp.zeros((batch, smax, d_rope), dtype),
+    }
+
+
+def mla_decode(p, x_t, cache, pos, *, h, q_lora=1536, kv_lora=512,
+               d_nope=128, d_rope=64, d_v=128, rope_theta=10000.0):
+    b = x_t.shape[0]
+    pos_b = jnp.full((b, 1), pos)
+    q = _rms(x_t @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(b, 1, h, d_nope + d_rope)
+    q_nope, q_rope = q[..., :d_nope], q[..., d_nope:]
+    q_rope = apply_rope(q_rope, pos_b, rope_theta)
+
+    kv_a = x_t @ p["wkv_a"]
+    c_t = _rms(kv_a[..., :kv_lora], p["kv_norm"])
+    kr_t = apply_rope(kv_a[..., None, kv_lora:], pos_b, rope_theta)[:, :, 0]
+    c_kv = jax.lax.dynamic_update_slice(cache["c_kv"], c_t.astype(cache["c_kv"].dtype), (0, pos, 0))
+    k_rope = jax.lax.dynamic_update_slice(cache["k_rope"], kr_t.astype(cache["k_rope"].dtype), (0, pos, 0))
+
+    # absorbed-attention decode: score via latent space
+    wkv_b = p["wkv_b"].reshape(kv_lora, h, d_nope + d_v)
+    w_k, w_v = wkv_b[..., :d_nope], wkv_b[..., d_nope:]
+    # q_nope projected into latent: (B,1,H,kv_lora)
+    q_lat = jnp.einsum("bqhd,khd->bqhk", q_nope.astype(jnp.float32),
+                       w_k.astype(jnp.float32))
+    s_lat = jnp.einsum("bqhk,bsk->bhqs", q_lat, c_kv.astype(jnp.float32))
+    s_rope = jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                        k_rope.astype(jnp.float32))
+    scale = (d_nope + d_rope) ** -0.5
+    s = (s_lat + s_rope) * scale
+    smax = c_kv.shape[1]
+    mask = jnp.arange(smax) <= pos
+    s = jnp.where(mask[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhqs,bsk->bqhk", w, c_kv.astype(jnp.float32))  # latent out
+    o = jnp.einsum("bqhk,khd->bqhd", o_lat, w_v.astype(jnp.float32))
+    o = o.reshape(b, 1, h * d_v).astype(x_t.dtype)
+    return o @ p["wo"], {"c_kv": c_kv, "k_rope": k_rope}

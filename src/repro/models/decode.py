@@ -1,0 +1,429 @@
+"""Serving paths: prefill, full-cache decode, NeoMem paged long-context decode.
+
+Cache layouts (stacked by pattern group so decode scans over groups):
+  * attn blocks ......... {"k","v"}: (G, B, Smax, Hkv, dh)
+  * MLA blocks .......... {"c_kv","k_rope"}: (G, B, Smax, kv_lora / d_rope)
+  * mamba blocks ........ {"ssm","conv"} O(1) state
+  * m/sLSTM blocks ...... {"c","n","m"} O(1) state
+  * paged attn blocks ... {"k_pages","v_pages"}: (G, B, n_slots, T, Hkv, dh)
+                          + {"page_len": (G, B, n_slots), "page_id": ...}
+
+The paged cache IS the NeoMem fast tier: n_slots hot page slots per layer
+group; the slow tier (full history) lives host-side and is managed by the
+kv_tier adapter + daemon between steps.  The newest page is appended
+in-step; page promotion/demotion happens at migration intervals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xl
+from repro.models.layers import apply_norm, embed_apply, logits_apply, mlp_apply
+from repro.kernels.paged_attn import ops as pa_ops
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def _attn_cache(cfg, batch, smax, dtype):
+    if cfg.mla is not None:
+        return attn.mla_init_cache(batch, smax, cfg.mla.kv_lora, cfg.mla.d_rope, dtype)
+    return attn.gqa_init_cache(batch, smax, cfg.n_kv_heads, cfg.head_dim, dtype)
+
+
+def _block_cache(cfg: ArchConfig, kind: str, batch: int, smax: int, dtype):
+    if kind == "mamba":
+        s = cfg.ssm
+        p_fake = {"out_proj": jnp.zeros((s.expand * cfg.d_model, cfg.d_model)),
+                  "conv_w": jnp.zeros((s.d_conv, 1))}
+        return m2.mamba2_init_cache(batch, p_fake, headdim=s.headdim,
+                                    n_groups=s.n_groups, d_state=s.d_state)
+    if kind == "mlstm":
+        return xl.mlstm_init_cache(batch, cfg.d_model, cfg.mlstm_heads)
+    if kind == "slstm":
+        return xl.slstm_init_cache(batch, cfg.d_model)
+    return _attn_cache(cfg, batch, smax, dtype)
+
+
+def init_cache(cfg: ArchConfig, batch: int, smax: int, dtype=jnp.bfloat16):
+    """Full (dense) KV cache pytree, group-stacked."""
+    def one_group(_):
+        return [_block_cache(cfg, kind, batch, smax, dtype) for kind in cfg.pattern]
+    g = cfg.n_groups
+    caches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (g,) + x.shape), one_group(0))
+    out = {"blocks": caches, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.moe and cfg.moe.n_dense_prologue:
+        out["prologue"] = [
+            _block_cache(cfg, "attn", batch, smax, dtype)
+            for _ in range(cfg.moe.n_dense_prologue)
+        ]
+    return out
+
+
+def init_paged_cache(cfg: ArchConfig, batch: int, n_slots: int, page_t: int,
+                     dtype=jnp.bfloat16):
+    """NeoMem fast-tier paged cache for attention blocks; O(1) SSM states."""
+    def one(kind):
+        if kind in ("mamba", "mlstm", "slstm"):
+            return _block_cache(cfg, kind, batch, 0, dtype)
+        if cfg.mla is not None:
+            dk = cfg.mla.kv_lora + cfg.mla.d_rope
+            dv = cfg.mla.kv_lora
+            hkv = 1
+        else:
+            dk = dv = cfg.head_dim
+            hkv = cfg.n_kv_heads
+        return {
+            "k_pages": jnp.zeros((batch, n_slots, page_t, hkv, dk), dtype),
+            "v_pages": jnp.zeros((batch, n_slots, page_t, hkv, dv), dtype),
+            "page_len": jnp.zeros((batch, n_slots), jnp.int32),
+            "cur_slot": jnp.zeros((batch,), jnp.int32),
+        }
+    g = cfg.n_groups
+    caches = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (g,) + x.shape),
+        [one(kind) for kind in cfg.pattern])
+    out = {"blocks": caches, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.moe and cfg.moe.n_dense_prologue:
+        out["prologue"] = [one("attn") for _ in range(cfg.moe.n_dense_prologue)]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# prefill (full sequence -> cache)  — reuses the training forward for hidden
+# states, then projects K/V per layer.  For dry-run purposes we lower a
+# dedicated prefill that computes logits for the last token + the full cache.
+# ---------------------------------------------------------------------------
+
+def prefill(cfg: ArchConfig, params, tokens, *, aux_embeds=None, remat=True,
+            ep_axes=None):
+    """Returns (last-token logits, dense cache).
+
+    Implemented as forward + per-block KV projection replay: attention blocks
+    recompute K/V from the pre-attention normed hidden states (cheap relative
+    to the full forward, keeps the code single-sourced).
+    """
+    from repro.models.transformer import forward
+    x, aux = forward(cfg, params, tokens, aux_embeds=aux_embeds, remat=remat,
+                     ep_axes=ep_axes)
+    logits = logits_apply(params["embed"], x[:, -1:], cfg.final_softcap)
+    # NOTE: the dry-run prefill cost is dominated by forward(); cache
+    # materialization is modeled by re-projecting K/V in the serve adapter.
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# single-token decode over the full cache
+# ---------------------------------------------------------------------------
+
+def _decode_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes):
+    h = apply_norm(cfg.norm, p["ln1"], x_t)
+    window = cfg.window if kind == "attn_local" else 0
+    if cfg.mla is not None:
+        mla_kw = dataclasses.asdict(cfg.mla)
+        o, cache = attn.mla_decode(p["attn"], h, cache, pos, h=cfg.n_heads,
+                                   rope_theta=cfg.rope_theta, **mla_kw)
+    else:
+        o, cache = attn.gqa_decode(p["attn"], h, cache, pos, h=cfg.n_heads,
+                                   hkv=cfg.n_kv_heads, dh=cfg.head_dim,
+                                   rope_theta=cfg.rope_theta, window=window,
+                                   softcap=cfg.attn_softcap, scale=cfg.attn_scale)
+    if cfg.post_norm:
+        o = apply_norm(cfg.norm, p["pn1"], o)
+    x_t = x_t + o
+    if kind == "cross" and aux.get("aux_embeds") is not None:
+        hx = apply_norm(cfg.norm, p["lnx"], x_t)
+        xo = attn.cross_apply(p["xattn"], hx, aux["aux_embeds"], h=cfg.n_heads,
+                              hkv=cfg.n_kv_heads, dh=cfg.head_dim)
+        x_t = x_t + (jnp.tanh(p["xgate"]) * xo.astype(jnp.float32)).astype(x_t.dtype)
+    if kind == "dec" and aux.get("enc_out") is not None:
+        hx = apply_norm(cfg.norm, p["lnx"], x_t)
+        xo = attn.cross_apply(p["xattn"], hx, aux["enc_out"], h=cfg.n_heads,
+                              hkv=cfg.n_kv_heads, dh=cfg.head_dim)
+        x_t = x_t + xo
+    h2 = apply_norm(cfg.norm, p["ln2"], x_t)
+    if kind == "moe":
+        y, idx, _ = moe_lib.moe_apply_ep(p["ffn"], h2, cfg.moe.top_k,
+                                         bias=p.get("router_bias"),
+                                         ep_axes=ep_axes)
+        aux.setdefault("router_streams", []).append(idx)
+    else:
+        y = mlp_apply(p["ffn"], h2, cfg.mlp)
+    if cfg.post_norm:
+        y = apply_norm(cfg.norm, p["pn2"], y)
+    return x_t + y, cache
+
+
+def _decode_block(p, shared, cfg, kind, x_t, cache, pos, aux, ep_axes):
+    if kind == "mamba":
+        s = cfg.ssm
+        h = apply_norm(cfg.norm, p["ln"], x_t)
+        o, cache = m2.mamba2_decode(p["mix"], h, cache, headdim=s.headdim,
+                                    n_groups=s.n_groups, d_state=s.d_state)
+        return x_t + o, cache
+    if kind == "mlstm":
+        h = apply_norm(cfg.norm, p["ln"], x_t)
+        o, cache = xl.mlstm_decode(p["mix"], h, cache, n_heads=cfg.mlstm_heads)
+        return x_t + o, cache
+    if kind == "slstm":
+        h = apply_norm(cfg.norm, p["ln"], x_t)
+        o, cache = xl.slstm_decode(p["mix"], h, cache)
+        return x_t + o, cache
+    if kind == "shared_attn":
+        return _decode_attn_block(shared, cfg, "attn", x_t, cache, pos, aux, ep_axes)
+    return _decode_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes)
+
+
+def decode_step(cfg: ArchConfig, params, cache, token, *, aux_embeds=None,
+                ep_axes=None):
+    """token: (B,1) int32 -> (logits (B,1,V), new cache).
+
+    For encoder-decoder configs (whisper) ``aux_embeds`` must be the
+    PRE-ENCODED encoder output (see transformer.encode) — serving computes it
+    once at prefill; re-running the encoder per token would be wasteful."""
+    pos = cache["pos"]
+    x = embed_apply(params["embed"], token)
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * cfg.d_model ** 0.5).astype(x.dtype)
+    aux: dict[str, Any] = {"aux_embeds": aux_embeds}
+    if cfg.encoder_layers and aux_embeds is not None:
+        aux = {"enc_out": aux_embeds, "aux_embeds": None}
+
+    new_pro = []
+    for i, lp in enumerate(params.get("prologue", [])):
+        x, c = _decode_attn_block(lp, cfg, "attn", x,
+                                  cache["prologue"][i], pos, aux, ep_axes)
+        new_pro.append(c)
+
+    shared = params.get("shared_attn")
+
+    def group_body(carry, gp_and_cache):
+        x, = carry
+        gp, gc = gp_and_cache
+        new_gc = []
+        for i, kind in enumerate(cfg.pattern):
+            x, c = _decode_block(gp[i], shared, cfg, kind, x, gc[i], pos, aux,
+                                 ep_axes)
+            new_gc.append(c)
+        return (x,), new_gc
+
+    (x,), new_blocks = jax.lax.scan(group_body, (x,),
+                                    (params["blocks"], cache["blocks"]))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = logits_apply(params["embed"], x, cfg.final_softcap)
+    new_cache = {"blocks": new_blocks, "pos": pos + 1}
+    if new_pro:
+        new_cache["prologue"] = new_pro
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# NeoMem paged decode (long_500k): attention over fast-tier hot pages only
+# ---------------------------------------------------------------------------
+
+def _append_attend_local(kp, vp, plen, cur_slot, k_new, v_new, q_eff, *,
+                         scale, softcap, page_t):
+    """Single-shard page append + flash-decode attention."""
+    b = q_eff.shape[0]
+    bidx = jnp.arange(b)
+    off = plen[bidx, cur_slot]
+    kp = kp.at[bidx, cur_slot, off].set(k_new.astype(kp.dtype))
+    vp = vp.at[bidx, cur_slot, off].set(v_new.astype(vp.dtype))
+    plen = plen.at[bidx, cur_slot].add(1)
+    full = plen[bidx, cur_slot] >= page_t
+    new_slot = jnp.where(full, (cur_slot + 1) % kp.shape[1], cur_slot)
+    advanced = full & (new_slot != cur_slot)
+    plen = jnp.where(
+        advanced[:, None] & (jnp.arange(kp.shape[1])[None] == new_slot[:, None]),
+        0, plen)
+    o = pa_ops.paged_attention(q_eff, kp, vp, plen, scale=scale, softcap=softcap)
+    return o, kp, vp, plen, new_slot
+
+
+def _append_attend_sharded(kp, vp, plen, cur_slot, k_new, v_new, q_eff, *,
+                           scale, softcap, page_t, smesh):
+    """Page slots sharded over ``smesh['axes']``; per-shard kernel + combine.
+
+    Cross-device flash-decoding: each shard attends over its resident hot
+    pages and the (m, l, acc) partials are merged with a pmax/psum pair —
+    the only per-step collective is O(B x H x dv)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh, axes = smesh["mesh"], smesh["axes"]
+
+    def body(kp, vp, plen, cur_slot, k_new, v_new, q_eff):
+        n_local = kp.shape[1]
+        rank = jnp.zeros((), jnp.int32)
+        for ax in axes:   # linear shard rank over the slot axes
+            rank = rank * mesh.shape[ax] + jax.lax.axis_index(ax)
+        lo = rank * n_local
+        b = q_eff.shape[0]
+        bidx = jnp.arange(b)
+        lslot = cur_slot - lo
+        own = (lslot >= 0) & (lslot < n_local)
+        safe = jnp.clip(lslot, 0, n_local - 1)
+        off = plen[bidx, safe]
+        sel = own[:, None, None]          # broadcast over (Hkv, d)
+        kp = kp.at[bidx, safe, off].set(
+            jnp.where(sel, k_new, kp[bidx, safe, off]).astype(kp.dtype))
+        vp = vp.at[bidx, safe, off].set(
+            jnp.where(sel, v_new, vp[bidx, safe, off]).astype(vp.dtype))
+        plen = plen.at[bidx, safe].add(own.astype(jnp.int32))
+        # advance decision comes from the owning shard
+        full_local = jnp.where(own, plen[bidx, safe] >= page_t, False)
+        full = jax.lax.psum(full_local.astype(jnp.int32), axes) > 0
+        n_total = n_local * jax.lax.psum(jnp.ones((), jnp.int32), axes)
+        new_slot = jnp.where(full, (cur_slot + 1) % n_total, cur_slot)
+        # zero the new slot's length wherever it lives
+        nls = new_slot - lo
+        nown = (nls >= 0) & (nls < n_local) & full & (new_slot != cur_slot)
+        plen = plen.at[bidx, jnp.clip(nls, 0, n_local - 1)].set(
+            jnp.where(nown, 0, plen[bidx, jnp.clip(nls, 0, n_local - 1)]))
+        m, l, acc = pa_ops.paged_attention_local_stats(
+            q_eff, kp, vp, plen, scale=scale, softcap=softcap)
+        o = pa_ops.combine_stats(m, l, acc, axes)
+        return o.astype(q_eff.dtype), kp, vp, plen, new_slot
+
+    pagespec = P(None, axes, None, None, None)
+    rep = P(*([None] * 3))
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(pagespec, pagespec, P(None, axes), P(None),
+                  rep, rep, rep),
+        out_specs=(rep, pagespec, pagespec, P(None, axes), P(None)),
+        check_rep=False,
+    )(kp, vp, plen, cur_slot, k_new, v_new, q_eff)
+    return out
+
+
+def _paged_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes, page_t,
+                      smesh=None):
+    h = apply_norm(cfg.norm, p["ln1"], x_t)
+    b = x_t.shape[0]
+    if cfg.mla is not None:
+        m = cfg.mla
+        # build latent query: q_eff = [q_nope @ w_k_absorbed, q_rope]
+        q = attn._rms(h @ p["attn"]["wq_a"], p["attn"]["q_norm"]) @ p["attn"]["wq_b"]
+        q = q.reshape(b, cfg.n_heads, m.d_nope + m.d_rope)
+        q_nope, q_rope = q[..., :m.d_nope], q[..., m.d_nope:]
+        pos_b = jnp.full((b, 1), pos)
+        q_rope = attn.apply_rope(q_rope[:, None], pos_b, cfg.rope_theta)[:, 0]
+        wkv_b = p["attn"]["wkv_b"].reshape(m.kv_lora, cfg.n_heads, m.d_nope + m.d_v)
+        w_k = wkv_b[..., :m.d_nope]
+        q_lat = jnp.einsum("bhd,khd->bhk", q_nope.astype(jnp.float32),
+                           w_k.astype(jnp.float32))
+        q_eff = jnp.concatenate([q_lat, q_rope.astype(jnp.float32)], -1)
+        # new latent kv entry
+        kv_a = h[:, 0] @ p["attn"]["wkv_a"]
+        c_t = attn._rms(kv_a[..., :m.kv_lora], p["attn"]["kv_norm"])
+        kr_t = attn.apply_rope(kv_a[:, None, None, m.kv_lora:], pos_b,
+                               cfg.rope_theta)[:, 0, 0]
+        k_new = jnp.concatenate([c_t, kr_t], -1)[:, None, :]   # (B,1,dk)
+        v_new = c_t[:, None, :]
+        scale = (m.d_nope + m.d_rope) ** -0.5
+    else:
+        q, k, v = attn._proj_qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.head_dim)
+        pos_b = jnp.full((b, 1), pos)
+        if cfg.rope_theta > 0:
+            q = attn.apply_rope(q, pos_b, cfg.rope_theta)
+            k = attn.apply_rope(k, pos_b, cfg.rope_theta)
+        q_eff = q[:, 0]                                        # (B,H,dh)
+        k_new, v_new = k[:, 0], v[:, 0]                        # (B,Hkv,dh)
+        scale = (cfg.head_dim ** -0.5) if cfg.attn_scale is None else cfg.attn_scale
+
+    # append the new K/V into the current page slot, attend over hot pages
+    if cfg.mla is not None:
+        k_new_p = k_new[:, 0][:, None, :]                      # (B,1,dk) hkv=1
+        v_new_p = v_new[:, 0][:, None, :]
+    else:
+        k_new_p, v_new_p = k_new, v_new                        # (B,Hkv,dh)
+    fn = _append_attend_local if smesh is None else functools.partial(
+        _append_attend_sharded, smesh=smesh)
+    o, kp, vp, plen, new_slot = fn(
+        cache["k_pages"], cache["v_pages"], cache["page_len"],
+        cache["cur_slot"], k_new_p, v_new_p, q_eff.astype(jnp.float32),
+        scale=scale, softcap=cfg.attn_softcap, page_t=page_t)  # o: (B,H,dv)
+    if cfg.mla is not None:
+        wkv_b = p["attn"]["wkv_b"].reshape(m.kv_lora, cfg.n_heads, m.d_nope + m.d_v)
+        w_v = wkv_b[..., m.d_nope:]
+        o = jnp.einsum("bhk,khd->bhd", o, w_v.astype(jnp.float32))
+        o = o.reshape(b, 1, cfg.n_heads * m.d_v).astype(x_t.dtype) @ p["attn"]["wo"]
+    else:
+        o = o.reshape(b, 1, cfg.n_heads * cfg.head_dim).astype(x_t.dtype) \
+            @ p["attn"]["wo"]
+    if cfg.post_norm:
+        o = apply_norm(cfg.norm, p["pn1"], o)
+    x_t = x_t + o
+
+    h2 = apply_norm(cfg.norm, p["ln2"], x_t)
+    if kind == "moe":
+        y, idx, _ = moe_lib.moe_apply_ep(p["ffn"], h2, cfg.moe.top_k,
+                                         bias=p.get("router_bias"),
+                                         ep_axes=ep_axes)
+        aux.setdefault("router_streams", []).append(idx)
+    else:
+        y = mlp_apply(p["ffn"], h2, cfg.mlp)
+    if cfg.post_norm:
+        y = apply_norm(cfg.norm, p["pn2"], y)
+    new_cache = dict(cache)
+    new_cache.update(k_pages=kp, v_pages=vp, page_len=plen, cur_slot=new_slot)
+    return x_t + y, new_cache
+
+
+def decode_step_paged(cfg: ArchConfig, params, cache, token, *, page_t: int,
+                      ep_axes=None, smesh=None):
+    """Long-context decode over the NeoMem fast tier (hot pages only).
+
+    ``smesh``: {"mesh": Mesh, "axes": (...)} shards page slots across devices
+    with cross-device flash-decode combining (production path)."""
+    pos = cache["pos"]
+    x = embed_apply(params["embed"], token)
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * cfg.d_model ** 0.5).astype(x.dtype)
+    aux: dict[str, Any] = {}
+
+    new_pro = []
+    for i, lp in enumerate(params.get("prologue", [])):
+        x, c = _paged_attn_block(lp, cfg, "attn", x, cache["prologue"][i], pos,
+                                 aux, ep_axes, page_t, smesh)
+        new_pro.append(c)
+
+    shared = params.get("shared_attn")
+
+    def group_body(carry, gp_and_cache):
+        x, = carry
+        gp, gc = gp_and_cache
+        new_gc = []
+        for i, kind in enumerate(cfg.pattern):
+            if kind in ("mamba", "mlstm", "slstm"):
+                x, c = _decode_block(gp[i], shared, cfg, kind, x, gc[i], pos,
+                                     aux, ep_axes)
+            elif kind == "shared_attn":
+                x, c = _paged_attn_block(shared, cfg, "attn", x, gc[i], pos,
+                                         aux, ep_axes, page_t, smesh)
+            else:
+                x, c = _paged_attn_block(gp[i], cfg, kind, x, gc[i], pos, aux,
+                                         ep_axes, page_t, smesh)
+            new_gc.append(c)
+        return (x,), new_gc
+
+    (x,), new_blocks = jax.lax.scan(group_body, (x,),
+                                    (params["blocks"], cache["blocks"]))
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    logits = logits_apply(params["embed"], x, cfg.final_softcap)
+    new_cache = {"blocks": new_blocks, "pos": pos + 1}
+    if new_pro:
+        new_cache["prologue"] = new_pro
+    return logits, new_cache

@@ -1,0 +1,121 @@
+"""Shared model building blocks: norms, rotary embeddings, MLPs, embeddings.
+
+Functional style: every block is (params pytree, pure apply fn).  Params are
+bf16 by default with fp32 norm scales; softmax/rotary math is fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+DTYPE = jnp.bfloat16
+
+
+def _norm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p, x, eps=1e-6, plus_one: bool = False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"] + 1.0 if plus_one else p["scale"]
+    return (y * scale).astype(x.dtype)
+
+
+def _ln_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def make_norm(kind: str, d: int):
+    if kind == "rms":
+        return _norm_init(d)
+    if kind == "rms+1":  # gemma-style (weight stored as w, applied as 1+w)
+        return {"scale": jnp.zeros((d,), jnp.float32)}
+    return _ln_init(d)
+
+
+def apply_norm(kind: str, p, x):
+    if kind == "rms":
+        return rmsnorm(p, x)
+    if kind == "rms+1":
+        return rmsnorm(p, x, plus_one=True)
+    return layernorm(p, x)
+
+
+# -- rotary -----------------------------------------------------------------
+
+def rope_freqs(dh: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, dh/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs --------------------------------------------------------------------
+
+def mlp_init(key, d: int, f: int, kind: str = "swiglu", dtype=DTYPE):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p = {"w_out": (jax.random.normal(k3, (f, d)) * s_out).astype(dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_in"] = (jax.random.normal(k1, (d, f)) * s_in).astype(dtype)
+        p["w_gate"] = (jax.random.normal(k2, (d, f)) * s_in).astype(dtype)
+    else:  # gelu
+        p["w_in"] = (jax.random.normal(k1, (d, f)) * s_in).astype(dtype)
+        p["b_in"] = jnp.zeros((f,), dtype)
+        p["b_out"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def mlp_apply(p, x, kind: str = "swiglu"):
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_in"])
+        return h @ p["w_out"]
+    if kind == "geglu":
+        h = jax.nn.gelu(x @ p["w_gate"], approximate=True) * (x @ p["w_in"])
+        return h @ p["w_out"]
+    h = jax.nn.gelu(x @ p["w_in"] + p["b_in"], approximate=True)
+    return h @ p["w_out"] + p["b_out"]
+
+
+# -- embedding / logits --------------------------------------------------------
+
+def embed_init(key, v: int, d: int, dtype=DTYPE):
+    return {"table": (jax.random.normal(key, (v, d)) * (d ** -0.5)).astype(dtype)}
+
+
+def embed_apply(p, tokens):
+    return p["table"][tokens]
+
+
+def logits_apply(p, x, softcap: float = 0.0):
+    logits = (x @ p["table"].T).astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask=None) -> jax.Array:
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,170 @@
+"""Mamba2 (SSD) block — chunked state-space duality implementation.
+
+Training path: chunked SSD (Dao & Gu 2024): intra-chunk attention-like term +
+inter-chunk recurrent state carry via lax.scan over chunks.  Decode path:
+single-token recurrent state update (state (B, H, P, N) is the whole cache —
+O(1) in sequence length, which is what makes long_500k native for zamba2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPE
+
+
+def mamba2_init(key, d, *, d_state=64, expand=2, headdim=64, d_conv=4,
+                n_groups=1, dtype=DTYPE):
+    d_inner = expand * d
+    n_heads = d_inner // headdim
+    ks = jax.random.split(key, 4)
+    d_in_proj = 2 * d_inner + 2 * n_groups * d_state + n_heads
+    p = {
+        "in_proj": (jax.random.normal(ks[0], (d, d_in_proj)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner + 2 * n_groups * d_state))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((d_inner + 2 * n_groups * d_state,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "norm": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": (jax.random.normal(ks[2], (d_inner, d)) * d_inner ** -0.5).astype(dtype),
+    }
+    return p
+
+
+def _dims(p, d, headdim, n_groups, d_state):
+    d_inner = p["out_proj"].shape[0]
+    n_heads = d_inner // headdim
+    return d_inner, n_heads
+
+
+def _split_proj(zxbcdt, d_inner, n_groups, d_state, n_heads):
+    z = zxbcdt[..., :d_inner]
+    x = zxbcdt[..., d_inner:2 * d_inner]
+    b = zxbcdt[..., 2 * d_inner:2 * d_inner + n_groups * d_state]
+    c = zxbcdt[..., 2 * d_inner + n_groups * d_state:
+               2 * d_inner + 2 * n_groups * d_state]
+    dt = zxbcdt[..., -n_heads:]
+    return z, x, b, c, dt
+
+
+def _conv1d(x, w, b, cache=None):
+    """Causal depthwise conv.  x: (B,S,C); w: (K,C).  cache: (B,K-1,C)."""
+    k = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = cache
+    xp = jnp.concatenate([pad, x], axis=1)                  # (B, S+K-1, C)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k))
+    new_cache = xp[:, -(k - 1):, :]
+    return jax.nn.silu(out + b), new_cache
+
+
+def mamba2_apply(p, u, *, headdim=64, n_groups=1, d_state=64, chunk=128):
+    """u: (B,S,D) -> (B,S,D).  Chunked SSD scan."""
+    bsz, s, d = u.shape
+    d_inner = p["out_proj"].shape[0]
+    n_heads = d_inner // headdim
+
+    zxbcdt = u @ p["in_proj"]
+    z, x, b, c, dt = _split_proj(zxbcdt, d_inner, n_groups, d_state, n_heads)
+    xbc, _ = _conv1d(jnp.concatenate([x, b, c], -1), p["conv_w"], p["conv_b"])
+    x = xbc[..., :d_inner].reshape(bsz, s, n_heads, headdim)
+    b = xbc[..., d_inner:d_inner + n_groups * d_state].reshape(bsz, s, n_groups, d_state)
+    c = xbc[..., d_inner + n_groups * d_state:].reshape(bsz, s, n_groups, d_state)
+    # broadcast groups over heads
+    hpg = n_heads // n_groups
+    b = jnp.repeat(b, hpg, axis=2)                           # (B,S,H,N)
+    c = jnp.repeat(c, hpg, axis=2)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,H)
+    a = -jnp.exp(p["A_log"])                                 # (H,)
+    da = dt * a                                              # (B,S,H) log-decay
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+    xc = x.reshape(bsz, nc, chunk, n_heads, headdim).astype(jnp.float32)
+    bc_ = b.reshape(bsz, nc, chunk, n_heads, d_state).astype(jnp.float32)
+    cc = c.reshape(bsz, nc, chunk, n_heads, d_state).astype(jnp.float32)
+    dac = da.reshape(bsz, nc, chunk, n_heads)
+    dtc = dt.reshape(bsz, nc, chunk, n_heads)
+
+    cum = jnp.cumsum(dac, axis=2)                            # (B,NC,Q,H)
+    # intra-chunk: L[q,t] = exp(cum[q]-cum[t]) for t<=q.  Mask BEFORE exp:
+    # exp of the (discarded) t>q entries can overflow and poison gradients.
+    decay = cum[:, :, :, None, :] - cum[:, :, None, :, :]    # (B,NC,Q,Q,H)
+    qi = jnp.arange(chunk)
+    causal = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    l_mat = jnp.exp(jnp.where(causal, decay, -1e30))
+    scores = jnp.einsum("bnqhs,bnths->bnqth", cc, bc_)        # (B,NC,Q,Q,H)
+    y_intra = jnp.einsum("bnqth,bnqth,bnthp->bnqhp",
+                         scores, l_mat, xc * dtc[..., None])
+
+    # chunk states: S_n = sum_t exp(cum_end - cum_t) * b_t x_t^T
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)          # (B,NC,Q,H)
+    states = jnp.einsum("bnth,bnths,bnthp->bnhsp",
+                        decay_to_end * dtc, bc_, xc)          # (B,NC,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,NC,H)
+
+    def carry_fn(st, inp):
+        s_n, g_n = inp                                       # (B,H,N,P), (B,H)
+        new = st * g_n[..., None, None] + s_n
+        return new, st                                       # emit state BEFORE chunk
+
+    init = jnp.zeros((bsz, n_heads, d_state, headdim), jnp.float32)
+    _, prev_states = jax.lax.scan(
+        carry_fn, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)        # (B,NC,H,N,P)
+
+    # inter-chunk: y_t += C_t exp(cum_t) S_prev
+    y_inter = jnp.einsum("bnqhs,bnhsp->bnqhp",
+                         cc * jnp.exp(cum)[..., None], prev_states)
+    y = (y_intra + y_inter).reshape(bsz, s, n_heads, headdim)
+    y = y + xc.reshape(bsz, s, n_heads, headdim) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner)
+    # gated RMSNorm (Mamba2's norm-then-gate)
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6) * p["norm"]
+    return (yf.astype(u.dtype)) @ p["out_proj"]
+
+
+def mamba2_init_cache(batch, p, *, headdim=64, n_groups=1, d_state=64):
+    d_inner = p["out_proj"].shape[0]
+    n_heads = d_inner // headdim
+    k = p["conv_w"].shape[0]
+    return {
+        "ssm": jnp.zeros((batch, n_heads, d_state, headdim), jnp.float32),
+        "conv": jnp.zeros((batch, k - 1, d_inner + 2 * n_groups * d_state), DTYPE),
+    }
+
+
+def mamba2_decode(p, u_t, cache, *, headdim=64, n_groups=1, d_state=64):
+    """u_t: (B,1,D) -> (y_t, cache).  O(1) recurrent update."""
+    bsz = u_t.shape[0]
+    d_inner = p["out_proj"].shape[0]
+    n_heads = d_inner // headdim
+    zxbcdt = u_t @ p["in_proj"]
+    z, x, b, c, dt = _split_proj(zxbcdt, d_inner, n_groups, d_state, n_heads)
+    xbc, conv_cache = _conv1d(jnp.concatenate([x, b, c], -1),
+                              p["conv_w"], p["conv_b"], cache["conv"])
+    x = xbc[..., :d_inner].reshape(bsz, n_heads, headdim)
+    b = xbc[..., d_inner:d_inner + n_groups * d_state].reshape(bsz, n_groups, d_state)
+    c = xbc[..., d_inner + n_groups * d_state:].reshape(bsz, n_groups, d_state)
+    hpg = n_heads // n_groups
+    b = jnp.repeat(b, hpg, axis=1).astype(jnp.float32)
+    c = jnp.repeat(c, hpg, axis=1).astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])
+    g = jnp.exp(dt * a)                                       # (B,H)
+    st = cache["ssm"] * g[..., None, None] + jnp.einsum(
+        "bhs,bhp->bhsp", b * dt[..., None], x.astype(jnp.float32))
+    y = jnp.einsum("bhs,bhsp->bhp", c, st)
+    y = y + x.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, d_inner)
+    yf = y * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + 1e-6) * p["norm"]
+    return (yf.astype(u_t.dtype)) @ p["out_proj"], {"ssm": st, "conv": conv_cache}

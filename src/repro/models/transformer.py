@@ -1,0 +1,269 @@
+"""Generic multi-family decoder LM: init / train / prefill / decode paths.
+
+One model covers all ten assigned architectures via ArchConfig.pattern —
+block kinds: attn, attn_local, attn_global, cross, mamba, shared_attn,
+mlstm, slstm, moe, attn_dense (MoE prologue).  Layers are stacked by
+*pattern group* and iterated with ``jax.lax.scan`` (+ optional per-group
+remat) so the HLO stays compact at any depth — essential for the 512-device
+dry-run compile times and for activation memory at train_4k.
+
+The NeoMem hook: every block that produces an index stream (MoE router,
+paged-KV page ids, embedding token ids) reports it in the returned ``aux``
+dict; the adapters feed those streams to NeoProf.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xl
+from repro.models.layers import (
+    DTYPE, apply_norm, cross_entropy, embed_apply, embed_init, logits_apply,
+    make_norm, mlp_apply, mlp_init,
+)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key, cfg: ArchConfig, kind: str):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.d_model
+    p: dict[str, Any] = {"ln1": make_norm(cfg.norm, d), "ln2": make_norm(cfg.norm, d)}
+    if cfg.post_norm:
+        p["pn1"] = make_norm(cfg.norm, d)
+        p["pn2"] = make_norm(cfg.norm, d)
+    if cfg.mla is not None and kind != "cross":
+        p["attn"] = attn.mla_init(k1, d, cfg.n_heads, **dataclasses.asdict(cfg.mla))
+    else:
+        p["attn"] = attn.gqa_init(k1, d, cfg.n_heads, cfg.n_kv_heads,
+                                  cfg.head_dim, bias=cfg.qkv_bias)
+    if kind == "moe":
+        mc = cfg.moe
+        p["ffn"] = moe_lib.moe_init(k2, d, mc.n_experts, mc.expert_ff,
+                                    shared_f=mc.shared_ff)
+        if mc.bias_free_balance:
+            p["router_bias"] = jnp.zeros((mc.n_experts,), jnp.float32)
+    elif kind == "attn_dense":
+        p["ffn"] = mlp_init(k2, d, cfg.moe.dense_ff, cfg.mlp)
+    else:
+        p["ffn"] = mlp_init(k2, d, cfg.d_ff, cfg.mlp)
+    if kind == "cross":
+        p["lnx"] = make_norm(cfg.norm, d)
+        p["xattn"] = attn.gqa_init(k3, d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, bias=cfg.qkv_bias)
+        p["xgate"] = jnp.zeros((1,), jnp.float32)  # llama-vision gated x-attn
+    if kind == "dec":  # whisper decoder: self + cross + mlp
+        p["lnx"] = make_norm(cfg.norm, d)
+        p["xattn"] = attn.gqa_init(k3, d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, bias=cfg.qkv_bias)
+    return p
+
+
+def _block_init(key, cfg: ArchConfig, kind: str):
+    d = cfg.d_model
+    if kind == "mamba":
+        s = cfg.ssm
+        return {"ln": make_norm(cfg.norm, d),
+                "mix": m2.mamba2_init(key, d, d_state=s.d_state, expand=s.expand,
+                                      headdim=s.headdim, d_conv=s.d_conv,
+                                      n_groups=s.n_groups)}
+    if kind == "mlstm":
+        return {"ln": make_norm(cfg.norm, d),
+                "mix": xl.mlstm_init(key, d, n_heads=cfg.mlstm_heads)}
+    if kind == "slstm":
+        return {"ln": make_norm(cfg.norm, d),
+                "mix": xl.slstm_init(key, d, n_heads=cfg.mlstm_heads)}
+    if kind == "shared_attn":
+        return {}  # weights live once in params["shared_attn"]
+    return _attn_block_init(key, cfg, kind)
+
+
+def init_params(cfg: ArchConfig, key: jax.Array):
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = {"embed": embed_init(keys[0], cfg.vocab, cfg.d_model)}
+
+    # group-stacked body params: leaf shapes (G, ...)
+    def one_group(k):
+        ks = jax.random.split(k, len(cfg.pattern))
+        return [
+            _block_init(ks[i], cfg, kind) for i, kind in enumerate(cfg.pattern)
+        ]
+
+    gkeys = jax.random.split(keys[1], cfg.n_groups)
+    params["blocks"] = jax.vmap(one_group)(gkeys)
+
+    if "shared_attn" in cfg.pattern:
+        params["shared_attn"] = _attn_block_init(keys[2], cfg, "attn")
+    if cfg.moe and cfg.moe.n_dense_prologue:
+        pk = jax.random.split(keys[3], cfg.moe.n_dense_prologue)
+        params["prologue"] = [
+            _block_init(pk[i], cfg, "attn_dense")
+            for i in range(cfg.moe.n_dense_prologue)
+        ]
+    if cfg.encoder_layers:
+        ek = jax.random.split(keys[4], cfg.encoder_layers)
+        params["encoder"] = [_block_init(ek[i], cfg, "enc") for i in range(cfg.encoder_layers)]
+        params["enc_norm"] = make_norm(cfg.norm, cfg.d_model)
+    if cfg.mtp:
+        params["mtp"] = {
+            "block": _block_init(keys[5], cfg, "attn_dense" if cfg.moe else "attn"),
+            "proj": (jax.random.normal(keys[6], (2 * cfg.d_model, cfg.d_model))
+                     * (2 * cfg.d_model) ** -0.5).astype(DTYPE),
+            "norm": make_norm(cfg.norm, cfg.d_model),
+        }
+    params["final_norm"] = make_norm(cfg.norm, cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward blocks (training / prefill, full-sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_attn_block(p, cfg: ArchConfig, kind: str, x, aux, ep_axes):
+    d = cfg.d_model
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    window = cfg.window if kind == "attn_local" else 0
+    causal = kind != "enc_self"   # whisper encoder is bidirectional
+    if cfg.mla is not None and kind != "cross":
+        o = attn.mla_apply(p["attn"], h, h=cfg.n_heads,
+                           rope_theta=cfg.rope_theta,
+                           **dataclasses.asdict(cfg.mla))
+    else:
+        o = attn.gqa_apply(p["attn"], h, h=cfg.n_heads, hkv=cfg.n_kv_heads,
+                           dh=cfg.head_dim, rope_theta=cfg.rope_theta,
+                           causal=causal, window=window,
+                           softcap=cfg.attn_softcap, scale=cfg.attn_scale)
+    if cfg.post_norm:
+        o = apply_norm(cfg.norm, p["pn1"], o)
+    x = x + o
+
+    if kind == "cross" and aux.get("aux_embeds") is not None:
+        hx = apply_norm(cfg.norm, p["lnx"], x)
+        xo = attn.cross_apply(p["xattn"], hx, aux["aux_embeds"],
+                              h=cfg.n_heads, hkv=cfg.n_kv_heads, dh=cfg.head_dim)
+        x = x + (jnp.tanh(p["xgate"]) * xo.astype(jnp.float32)).astype(x.dtype)
+    if kind == "dec" and aux.get("enc_out") is not None:
+        hx = apply_norm(cfg.norm, p["lnx"], x)
+        xo = attn.cross_apply(p["xattn"], hx, aux["enc_out"],
+                              h=cfg.n_heads, hkv=cfg.n_kv_heads, dh=cfg.head_dim)
+        x = x + xo
+
+    h2 = apply_norm(cfg.norm, p["ln2"], x)
+    if kind == "moe":
+        bias = p.get("router_bias")
+        y, idx, probs = moe_lib.moe_apply_ep(
+            p["ffn"], h2, cfg.moe.top_k, bias=bias, ep_axes=ep_axes)
+        aux.setdefault("router_streams", []).append(idx)
+    else:
+        y = mlp_apply(p["ffn"], h2, cfg.mlp)
+    if cfg.post_norm:
+        y = apply_norm(cfg.norm, p["pn2"], y)
+    return x + y, aux
+
+
+def _apply_block(p, shared, cfg: ArchConfig, kind: str, x, aux, ep_axes):
+    if kind == "mamba":
+        s = cfg.ssm
+        h = apply_norm(cfg.norm, p["ln"], x)
+        return x + m2.mamba2_apply(p["mix"], h, headdim=s.headdim,
+                                   n_groups=s.n_groups, d_state=s.d_state,
+                                   chunk=s.chunk), aux
+    if kind == "mlstm":
+        h = apply_norm(cfg.norm, p["ln"], x)
+        return x + xl.mlstm_apply(p["mix"], h, n_heads=cfg.mlstm_heads), aux
+    if kind == "slstm":
+        h = apply_norm(cfg.norm, p["ln"], x)
+        return x + xl.slstm_apply(p["mix"], h), aux
+    if kind == "shared_attn":
+        return _apply_attn_block(shared, cfg, "attn", x, aux, ep_axes)
+    return _apply_attn_block(p, cfg, kind, x, aux, ep_axes)
+
+
+def forward(cfg: ArchConfig, params, tokens, *, aux_embeds=None,
+            remat: bool = True, ep_axes=None):
+    """tokens: (B, S) -> final hidden states (B, S, D), aux dict."""
+    x = embed_apply(params["embed"], tokens)
+    if cfg.embed_scale:
+        x = (x.astype(jnp.float32) * cfg.d_model ** 0.5).astype(x.dtype)
+    aux: dict[str, Any] = {"token_stream": tokens}
+
+    enc_out = None
+    if cfg.encoder_layers and aux_embeds is not None:
+        enc = aux_embeds
+        for lp in params["encoder"]:
+            enc, _ = _apply_attn_block(lp, cfg, "enc_self", enc,
+                                       {"enc_out": None}, ep_axes)
+        enc_out = apply_norm(cfg.norm, params["enc_norm"], enc)
+        aux["enc_out"] = enc_out
+    elif aux_embeds is not None:
+        aux["aux_embeds"] = aux_embeds
+
+    for lp in params.get("prologue", []):
+        x, aux = _apply_attn_block(lp, cfg, "attn_dense", x, aux, ep_axes)
+
+    shared = params.get("shared_attn")
+
+    def group_body(x, gp):
+        a_local = {"aux_embeds": aux.get("aux_embeds"),
+                   "enc_out": aux.get("enc_out"),
+                   "router_streams": []}
+        for i, kind in enumerate(cfg.pattern):
+            x, a_local = _apply_block(gp[i], shared, cfg, kind, x, a_local, ep_axes)
+        streams = a_local["router_streams"]
+        out = jnp.stack(streams) if streams else jnp.zeros((0,), jnp.int32)
+        return x, out
+
+    body = jax.checkpoint(group_body) if remat else group_body
+    x, router_streams = jax.lax.scan(body, x, params["blocks"])
+    if router_streams.size:
+        aux["router_streams"] = router_streams   # (G, n_moe_in_group, B, S, k)
+
+    x = apply_norm(cfg.norm, params["final_norm"], x)
+    return x, aux
+
+
+def encode(cfg: ArchConfig, params, aux_embeds, *, ep_axes=None):
+    """Run the encoder stack (whisper): frame embeddings -> enc_out.
+
+    Serving computes this ONCE at prefill and caches the result; decode steps
+    take the precomputed enc_out as their aux_embeds."""
+    enc = aux_embeds
+    for lp in params["encoder"]:
+        enc, _ = _apply_attn_block(lp, cfg, "enc_self", enc,
+                                   {"enc_out": None}, ep_axes)
+    return apply_norm(cfg.norm, params["enc_norm"], enc)
+
+
+def train_loss(cfg: ArchConfig, params, batch, *, remat=True, ep_axes=None):
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    x, aux = forward(cfg, params, tokens, aux_embeds=batch.get("aux_embeds"),
+                     remat=remat, ep_axes=ep_axes)
+    logits = logits_apply(params["embed"], x, cfg.final_softcap)
+    loss = cross_entropy(logits, labels, batch.get("loss_mask"))
+    metrics = {"loss": loss}
+    if cfg.mtp:   # predict t+2 from (h_t, emb_{t+1})
+        mp = params["mtp"]
+        emb_next = embed_apply(params["embed"], jnp.roll(tokens, -1, axis=1))
+        h2 = jnp.concatenate([x, emb_next.astype(x.dtype)], axis=-1) @ mp["proj"]
+        h2, _ = _apply_attn_block(
+            mp["block"], cfg, "attn_dense" if cfg.moe else "attn", h2,
+            {"aux_embeds": None, "enc_out": None, "router_streams": []}, ep_axes)
+        h2 = apply_norm(cfg.norm, mp["norm"], h2)
+        mtp_logits = logits_apply(params["embed"], h2, cfg.final_softcap)
+        mtp_labels = jnp.roll(labels, -1, axis=1)
+        mtp_loss = cross_entropy(mtp_logits, mtp_labels, batch.get("loss_mask"))
+        loss = loss + 0.3 * mtp_loss
+        metrics["mtp_loss"] = mtp_loss
+        metrics["loss"] = loss
+    return loss, (metrics, aux)

@@ -1,0 +1,221 @@
+"""xLSTM blocks: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+mLSTM is a gated-linear-attention-style recurrence
+    C_t = f_t C_{t-1} + i_t v_t k_t^T,   n_t = f_t n_{t-1} + i_t k_t,
+    h_t = (C_t q_t) / max(|n_t . q_t|, 1)
+with exponential input gates stabilized by a running max m_t; implemented
+chunkwise (intra-chunk attention + inter-chunk state carry), mirroring the
+Mamba2 SSD structure.  sLSTM keeps per-head scalar memories with the same
+max-stabilized exponential gating, implemented with an associative scan on
+the linear (c, n) recurrences.
+
+Decode paths carry (C, n, m) / (c, n, m) — O(1) state, so xlstm-1.3b runs
+long_500k natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import DTYPE
+
+
+# -- mLSTM ---------------------------------------------------------------------
+
+def mlstm_init(key, d, *, n_heads=4, dtype=DTYPE):
+    dh = d // n_heads
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(ks[0], (d, d)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, d)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, d)) * s).astype(dtype),
+        "wi": (jax.random.normal(ks[3], (d, n_heads)) * s).astype(jnp.float32),
+        "wf": (jax.random.normal(ks[4], (d, n_heads)) * s).astype(jnp.float32),
+        "f_bias": jnp.full((n_heads,), 3.0, jnp.float32),
+        "ogate": (jax.random.normal(ks[5], (d, d)) * s).astype(dtype),
+        "norm": jnp.ones((d,), jnp.float32),
+        "wo": (jax.random.normal(jax.random.fold_in(key, 7), (d, d)) * s).astype(dtype),
+    }
+
+
+def mlstm_apply(p, u, *, n_heads=4, chunk=128):
+    """Chunkwise-parallel mLSTM.  u: (B,S,D)."""
+    bsz, s, d = u.shape
+    dh = d // n_heads
+    q = (u @ p["wq"]).reshape(bsz, s, n_heads, dh).astype(jnp.float32) * dh ** -0.5
+    k = (u @ p["wk"]).reshape(bsz, s, n_heads, dh).astype(jnp.float32) * dh ** -0.5
+    v = (u @ p["wv"]).reshape(bsz, s, n_heads, dh).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(u.astype(jnp.float32) @ p["wf"] + p["f_bias"])  # (B,S,H)
+    logi = u.astype(jnp.float32) @ p["wi"]                                     # (B,S,H)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, f"seq {s} not divisible by chunk {chunk}"
+    nc = s // chunk
+    shp = (bsz, nc, chunk, n_heads)
+    qf = q.reshape(*shp, dh)
+    kf = k.reshape(*shp, dh)
+    vf = v.reshape(*shp, dh)
+    lf = logf.reshape(shp)
+    li = logi.reshape(shp)
+
+    cum_f = jnp.cumsum(lf, axis=2)                            # (B,NC,Q,H)
+    # stabilizer: within-chunk running max of (cum_f[t] ... simplified global
+    # per-chunk max of (li - cum_f) keeps exp() bounded)
+    a_log = li - cum_f                                        # contribution key
+    m_c = jnp.max(a_log, axis=2, keepdims=True)               # (B,NC,1,H)
+
+    # intra-chunk: w[q,t] = exp(cum_f[q]-cum_f[t]+li[t] - m) causal.
+    # Mask BEFORE exp (overflowing discarded entries poison gradients).
+    dec = cum_f[:, :, :, None, :] - cum_f[:, :, None, :, :] + li[:, :, None, :, :]
+    qi = jnp.arange(chunk)
+    causal = (qi[:, None] >= qi[None, :])[None, None, :, :, None]
+    w_int = jnp.exp(jnp.where(causal, dec - m_c[:, :, :, None, :], -1e30))
+    scores = jnp.einsum("bnqhd,bnthd->bnqth", qf, kf)
+    num_intra = jnp.einsum("bnqth,bnqth,bnthd->bnqhd", scores, w_int, vf)
+    den_intra = jnp.einsum("bnqth,bnqth,bnthd->bnqhd", scores * 0 + 1.0, w_int,
+                           kf)  # sum of weighted k for normalizer
+
+    # chunk summaries
+    to_end = jnp.exp(cum_f[:, :, -1:, :] - cum_f + li - m_c)  # (B,NC,Q,H)
+    c_state = jnp.einsum("bnth,bnthd,bnthe->bnhde", to_end, kf, vf)  # (B,NC,H,dh,dh)
+    n_state = jnp.einsum("bnth,bnthd->bnhd", to_end, kf)
+    g_chunk = cum_f[:, :, -1, :]                              # (B,NC,H) log decay
+    m_chunk = m_c[:, :, 0, :]                                 # (B,NC,H)
+
+    def carry(st, inp):
+        c_prev, n_prev, m_prev = st
+        c_n, n_n, g_n, m_n = inp
+        m_new = jnp.maximum(m_prev + g_n, m_n)
+        sc_prev = jnp.exp(m_prev + g_n - m_new)
+        sc_new = jnp.exp(m_n - m_new)
+        c_new = c_prev * sc_prev[..., None, None] + c_n * sc_new[..., None, None]
+        n_new = n_prev * sc_prev[..., None] + n_n * sc_new[..., None]
+        return (c_new, n_new, m_new), (c_prev, n_prev, m_prev)
+
+    z = jnp.zeros((bsz, n_heads), jnp.float32)
+    init = (jnp.zeros((bsz, n_heads, dh, dh), jnp.float32),
+            jnp.zeros((bsz, n_heads, dh), jnp.float32), z - 1e30)
+    _, (c_prevs, n_prevs, m_prevs) = jax.lax.scan(
+        carry, init,
+        (c_state.transpose(1, 0, 2, 3, 4), n_state.transpose(1, 0, 2, 3),
+         g_chunk.transpose(1, 0, 2), m_chunk.transpose(1, 0, 2)))
+    c_prevs = c_prevs.transpose(1, 0, 2, 3, 4)                # (B,NC,H,dh,dh)
+    n_prevs = n_prevs.transpose(1, 0, 2, 3)
+    m_prevs = m_prevs.transpose(1, 0, 2)
+
+    # inter-chunk contribution with per-position rescaling;
+    # normalize both branches to a common stabilizer per position:
+    m_tot = jnp.maximum(m_prevs[:, :, None, :] + cum_f, m_c)  # (B,NC,Q,H)
+    sc_int = jnp.exp(m_c - m_tot)
+    sc_car = jnp.exp(m_prevs[:, :, None, :] + cum_f - m_tot)
+    num_inter = jnp.einsum("bnqhd,bnhde->bnqhe", qf, c_prevs)
+    den_inter = jnp.einsum("bnqhd,bnhd->bnqh", qf, n_prevs)
+
+    num = num_intra * sc_int[..., None] + num_inter * sc_car[..., None]
+    den_i = jnp.einsum("bnqhd,bnqhd->bnqh", qf, den_intra)
+    den = den_i * sc_int + den_inter * sc_car
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_tot))[..., None]
+
+    h = h.reshape(bsz, s, d)
+    o = jax.nn.sigmoid(u @ p["ogate"]).astype(jnp.float32)
+    h = h * o
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6) * p["norm"]
+    return h.astype(u.dtype) @ p["wo"]
+
+
+def mlstm_init_cache(batch, d, n_heads=4):
+    dh = d // n_heads
+    return {
+        "c": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+        "m": jnp.full((batch, n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_decode(p, u_t, cache, *, n_heads=4):
+    bsz, _, d = u_t.shape
+    dh = d // n_heads
+    q = (u_t @ p["wq"]).reshape(bsz, n_heads, dh).astype(jnp.float32) * dh ** -0.5
+    k = (u_t @ p["wk"]).reshape(bsz, n_heads, dh).astype(jnp.float32) * dh ** -0.5
+    v = (u_t @ p["wv"]).reshape(bsz, n_heads, dh).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(u_t[:, 0].astype(jnp.float32) @ p["wf"] + p["f_bias"])
+    logi = u_t[:, 0].astype(jnp.float32) @ p["wi"]
+    m_new = jnp.maximum(cache["m"] + logf, logi)
+    sc_old = jnp.exp(cache["m"] + logf - m_new)
+    sc_in = jnp.exp(logi - m_new)
+    c = cache["c"] * sc_old[..., None, None] + sc_in[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k, v)
+    n = cache["n"] * sc_old[..., None] + sc_in[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, c)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    h = h.reshape(bsz, 1, d)
+    o = jax.nn.sigmoid(u_t @ p["ogate"]).astype(jnp.float32)
+    h = h * o
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6) * p["norm"]
+    return h.astype(u_t.dtype) @ p["wo"], {"c": c, "n": n, "m": m_new}
+
+
+# -- sLSTM ---------------------------------------------------------------------
+
+def slstm_init(key, d, *, n_heads=4, dtype=DTYPE):
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    return {
+        "wz": (jax.random.normal(ks[0], (d, d)) * s).astype(dtype),
+        "wi": (jax.random.normal(ks[1], (d, d)) * s).astype(jnp.float32),
+        "wf": (jax.random.normal(ks[2], (d, d)) * s).astype(jnp.float32),
+        "wo_gate": (jax.random.normal(ks[3], (d, d)) * s).astype(dtype),
+        "f_bias": jnp.full((d,), 3.0, jnp.float32),
+        "norm": jnp.ones((d,), jnp.float32),
+        "wo": (jax.random.normal(ks[4], (d, d)) * s).astype(dtype),
+    }
+
+
+def slstm_apply(p, u):
+    """u: (B,S,D).  Associative scan over the stabilized linear recurrence."""
+    z = jnp.tanh((u @ p["wz"]).astype(jnp.float32))
+    logi = u.astype(jnp.float32) @ p["wi"]
+    logf = jax.nn.log_sigmoid(u.astype(jnp.float32) @ p["wf"] + p["f_bias"])
+    o = jax.nn.sigmoid(u @ p["wo_gate"]).astype(jnp.float32)
+
+    # stabilized: m_t = max(logf_t + m_{t-1}, logi_t)  (max-plus scan)
+    def mp_op(a, b):
+        return (a[0] + b[0], jnp.maximum(b[1], b[0] + a[1]))
+    _, m = jax.lax.associative_scan(mp_op, (logf, logi), axis=1)
+
+    # c_t = f' c_{t-1} + i' z ; n_t = f' n_{t-1} + i'  with
+    # f' = exp(logf + m_{t-1} - m_t), i' = exp(logi - m_t).
+    m_prev = jnp.concatenate([jnp.full_like(m[:, :1], -1e30), m[:, :-1]], axis=1)
+    fp = jnp.exp(logf + m_prev - m)
+    ip = jnp.exp(logi - m)
+
+    def lin_op(a, b):
+        # pairs (A, Bc, Bn): x_t = A x_{t-1} + B
+        return (a[0] * b[0], b[0] * a[1] + b[1], b[0] * a[2] + b[2])
+    _, c, n = jax.lax.associative_scan(lin_op, (fp, ip * z, ip), axis=1)
+    h = o * (c / jnp.maximum(n, 1.0))
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6) * p["norm"]
+    return h.astype(u.dtype) @ p["wo"]
+
+
+def slstm_init_cache(batch, d):
+    return {
+        "c": jnp.zeros((batch, d), jnp.float32),
+        "n": jnp.zeros((batch, d), jnp.float32),
+        "m": jnp.full((batch, d), -1e30, jnp.float32),
+    }
+
+
+def slstm_decode(p, u_t, cache):
+    z = jnp.tanh((u_t[:, 0] @ p["wz"]).astype(jnp.float32))
+    logi = u_t[:, 0].astype(jnp.float32) @ p["wi"]
+    logf = jax.nn.log_sigmoid(u_t[:, 0].astype(jnp.float32) @ p["wf"] + p["f_bias"])
+    o = jax.nn.sigmoid(u_t[:, 0] @ p["wo_gate"]).astype(jnp.float32)
+    m_new = jnp.maximum(logf + cache["m"], logi)
+    c = jnp.exp(logf + cache["m"] - m_new) * cache["c"] + jnp.exp(logi - m_new) * z
+    n = jnp.exp(logf + cache["m"] - m_new) * cache["n"] + jnp.exp(logi - m_new)
+    h = o * (c / jnp.maximum(n, 1.0))
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, -1, keepdims=True) + 1e-6) * p["norm"]
+    return (h[:, None, :].astype(u_t.dtype)) @ p["wo"], {"c": c, "n": n, "m": m_new}

@@ -1,0 +1,95 @@
+"""ZeRO-1: flat-sharded optimizer state over the full device mesh.
+
+Adam's m/v are elementwise, so they need no tensor structure: flatten every
+param into one padded 1-D vector sharded evenly across ALL mesh axes.  The
+update runs in flat space (embarrassingly parallel); the delta is gathered
+back to each param's own sharding by XLA when applied (one all-gather worth
+of bytes per step — the classic ZeRO-1 trade of memory for collective).
+
+For a 27B dense model on 256 chips this turns 216 GB of fp32 m+v into
+0.84 GB/chip.  Used by the hillclimb as an alternative to Adafactor.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.optim.optimizers import OptConfig, clip_by_global_norm, schedule
+
+
+@dataclasses.dataclass
+class FlatSpec:
+    sizes: list
+    shapes: list
+    treedef: Any
+    padded: int
+
+
+def flat_spec(params, n_shards: int) -> FlatSpec:
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    sizes = [int(np.prod(l.shape)) for l in leaves]
+    total = sum(sizes)
+    padded = int(np.ceil(total / n_shards) * n_shards)
+    return FlatSpec(sizes, [l.shape for l in leaves], treedef, padded)
+
+
+def flatten(tree, spec: FlatSpec) -> jax.Array:
+    leaves = spec.treedef.flatten_up_to(tree)
+    flat = jnp.concatenate(
+        [l.astype(jnp.float32).reshape(-1) for l in leaves])
+    return jnp.pad(flat, (0, spec.padded - flat.shape[0]))
+
+
+def unflatten(flat: jax.Array, spec: FlatSpec, dtypes=None):
+    out, off = [], 0
+    for i, (sz, shp) in enumerate(zip(spec.sizes, spec.shapes)):
+        leaf = flat[off:off + sz].reshape(shp)
+        if dtypes is not None:
+            leaf = leaf.astype(dtypes[i])
+        out.append(leaf)
+        off += sz
+    return jax.tree_util.tree_unflatten(spec.treedef, out)
+
+
+def flat_sharding(mesh):
+    return NamedSharding(mesh, P(tuple(mesh.axis_names)))
+
+
+def zero1_init(params, mesh):
+    n = int(np.prod(mesh.devices.shape))
+    spec = flat_spec(params, n)
+    sh = flat_sharding(mesh)
+    z = jax.lax.with_sharding_constraint(jnp.zeros((spec.padded,), jnp.float32), sh) \
+        if mesh is not None else jnp.zeros((spec.padded,), jnp.float32)
+    return {"m": z, "v": z, "step": jnp.zeros((), jnp.int32)}, spec
+
+
+def zero1_update(cfg: OptConfig, params, grads, state, spec: FlatSpec, mesh):
+    """Flat-space AdamW; delta unflattened back to param shardings."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    g = flatten(grads, spec)
+    if mesh is not None:
+        g = jax.lax.with_sharding_constraint(g, flat_sharding(mesh))
+    p_flat = flatten(params, spec)
+    if mesh is not None:
+        p_flat = jax.lax.with_sharding_constraint(p_flat, flat_sharding(mesh))
+    b1, b2 = cfg.b1, cfg.b2
+    m = b1 * state["m"] + (1 - b1) * g
+    v = b2 * state["v"] + (1 - b2) * g * g
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    u = (m / bc1) / (jnp.sqrt(v / bc2) + cfg.eps) + cfg.weight_decay * p_flat
+    delta = lr * u
+    dtypes = [l.dtype for l in spec.treedef.flatten_up_to(params)]
+    delta_tree = unflatten(delta, spec, dtypes=None)
+    new_params = jax.tree.map(
+        lambda p, d: (p.astype(jnp.float32) - d).astype(p.dtype),
+        params, delta_tree)
+    return new_params, {"m": m, "v": v, "step": step}, {"gnorm": gnorm, "lr": lr}

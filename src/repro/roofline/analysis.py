@@ -1,0 +1,177 @@
+"""Roofline analysis: dryrun JSON -> three-term table (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell:
+    compute    = HLO_FLOPs_per_chip / peak_FLOPs          [s]
+    memory     = HLO_bytes_per_chip / HBM_bw              [s]
+    collective = collective_bytes_per_chip / link_bw      [s]
+
+HLO_FLOPs comes from the trip-count-aware census (repro.roofline.census) —
+XLA's cost_analysis undercounts scan bodies (counted once), which we record
+for reference but do not use.  HLO bytes come from cost_analysis
+("bytes accessed", whole-program; divided by chips).  MODEL_FLOPS is the
+analytic useful-work count; its ratio to HLO_FLOPs exposes remat /
+redundancy waste.
+
+Hardware model (TPU v5e-class, from the brief):
+    197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def chips(mesh_name: str) -> int:
+    return 512 if mesh_name == "multi" else 256
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """Analytic useful FLOPs per step (whole program, all chips)."""
+    cfg = get_config(arch)
+    shp = SHAPES[shape_name]
+    b, s = shp["global_batch"], shp["seq_len"]
+    n_act = cfg.active_params()
+    if shp["kind"] == "train":
+        tokens = b * s
+        flops = 6.0 * n_act * tokens
+        # attention quadratic term: 12 * L_attn * d_head_total * S^2 * B / 2
+        flops += _attn_flops(cfg, b, s, train=True)
+        return flops
+    if shp["kind"] == "prefill":
+        tokens = b * s
+        return 2.0 * n_act * tokens + _attn_flops(cfg, b, s, train=False)
+    if shp["kind"] == "decode":
+        # one token per sequence, attention over the full cache
+        return 2.0 * n_act * b + _attn_decode_flops(cfg, b, s)
+    # decode_paged: attention over resident hot pages only
+    from repro.launch.specs import HOT_SLOTS, PAGE_T
+    resident = min(HOT_SLOTS * PAGE_T, s)
+    return 2.0 * n_act * b + _attn_decode_flops(cfg, b, resident)
+
+
+def _n_attn_layers(cfg) -> int:
+    kinds = cfg.pattern * cfg.n_groups
+    n = sum(1 for k in kinds if "attn" in k or k in ("moe", "cross", "dec"))
+    if cfg.moe:
+        n += cfg.moe.n_dense_prologue
+    return n
+
+
+def _attn_flops(cfg, b, s, train: bool) -> float:
+    mult = 3.0 if train else 1.0   # fwd + 2x bwd
+    dh_tot = cfg.n_heads * cfg.head_dim
+    if cfg.mla:
+        dh_tot = cfg.n_heads * (cfg.mla.d_nope + cfg.mla.d_rope)
+    per_layer = 2.0 * 2.0 * b * s * s / 2 * dh_tot   # QK^T + PV, causal half
+    return mult * _n_attn_layers(cfg) * per_layer
+
+
+def _attn_decode_flops(cfg, b, cache_len) -> float:
+    dh_tot = cfg.n_heads * cfg.head_dim
+    if cfg.mla:
+        dh_tot = cfg.n_heads * (cfg.mla.d_nope + cfg.mla.d_rope)
+    return 2.0 * 2.0 * b * cache_len * dh_tot * _n_attn_layers(cfg)
+
+
+@dataclasses.dataclass
+class RooflineRow:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_total: float
+    useful_ratio: float
+    hbm_gb_per_chip: float
+    note: str = ""
+
+    @property
+    def step_time_lower_bound(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """useful-compute-time / bound — how close the USEFUL work runs to
+        the hardware bound if perfectly overlapped."""
+        n = chips(self.mesh)
+        useful_t = self.model_flops / n / PEAK_FLOPS
+        return useful_t / max(self.step_time_lower_bound, 1e-12)
+
+
+def analyze(results: dict) -> list[RooflineRow]:
+    rows = []
+    for key, rec in sorted(results.items()):
+        if rec.get("status") != "ok":
+            continue
+        arch, shape, mesh = rec["arch"], rec["shape"], rec["mesh"]
+        n = chips(mesh)
+        census = rec.get("census", {})
+        hlo_flops_dev = census.get("flops_per_device", 0.0)
+        coll_dev = census.get("collective_bytes_per_device", 0.0)
+        bytes_total = rec.get("cost", {}).get("bytes_accessed", 0.0)
+
+        compute = hlo_flops_dev / PEAK_FLOPS
+        memory = (bytes_total / n) / HBM_BW
+        collective = coll_dev / LINK_BW
+
+        mf = model_flops(arch, shape)
+        hlo_total = hlo_flops_dev * n
+        mem = rec.get("memory", {})
+        hbm = (mem.get("argument_bytes", 0) + mem.get("temp_bytes", 0)
+               - mem.get("alias_bytes", 0)) / 1e9
+
+        terms = {"compute": compute, "memory": memory, "collective": collective}
+        dom = max(terms, key=terms.get)
+        rows.append(RooflineRow(
+            arch=arch, shape=shape, mesh=mesh,
+            compute_s=compute, memory_s=memory, collective_s=collective,
+            dominant=dom, model_flops=mf, hlo_flops_total=hlo_total,
+            useful_ratio=mf / max(hlo_total, 1.0),
+            hbm_gb_per_chip=hbm,
+        ))
+    return rows
+
+
+def to_markdown(rows: list[RooflineRow]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | HBM GB/chip | useful/HLO | roofline frac |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    body = ""
+    for r in rows:
+        body += (f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | "
+                 f"{r.memory_s:.3e} | {r.collective_s:.3e} | **{r.dominant}** | "
+                 f"{r.hbm_gb_per_chip:.1f} | {r.useful_ratio:.2f} | "
+                 f"{r.roofline_fraction:.2f} |\n")
+    return hdr + body
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default="dryrun_results.json")
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+    with open(args.results) as f:
+        results = json.load(f)
+    rows = analyze(results)
+    md = to_markdown(rows)
+    print(md)
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(md)
+
+
+if __name__ == "__main__":
+    main()

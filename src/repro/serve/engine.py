@@ -1,0 +1,119 @@
+"""Serving engine: batched prefill + decode with NeoMem-tiered KV/experts.
+
+ServeEngine drives a small continuous-batching loop on top of the
+models.decode steps:
+
+  * prefill(tokens)           — full-sequence forward, returns first token +
+                                dense cache (short contexts), or seeds the
+                                paged fast tier (long contexts);
+  * step()                    — one decode step for the active batch;
+  * NeoMem integration        — per migration_interval the KVTier / Expert-
+                                Cache daemons promote sketch-hot pages into
+                                the fast tier between steps (never inside
+                                the jitted hot path).
+
+This is the substrate behind examples/serve_longctx.py and the serving
+benchmarks; the dry-run lowers the same step functions at production shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.adapters.kv_tier import KVTier, KVTierConfig
+from repro.models import decode as dec
+from repro.models import transformer as tr
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 4096
+    page_t: int = 64
+    hot_slots: int = 16
+    paged: bool = False
+    migration_interval: int = 8     # decode steps between daemon ticks
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
+                 ep_axes=None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.ep = ep_axes
+        self.kv_tier: KVTier | None = None
+        if scfg.paged:
+            self.kv_tier = KVTier(KVTierConfig(
+                n_pages_total=scfg.max_seq // scfg.page_t,
+                hot_slots=scfg.hot_slots))
+        self._decode = jax.jit(self._decode_fn)
+        self._decode_paged = jax.jit(self._decode_paged_fn)
+        self.cache = None
+        self.step_count = 0
+
+    # -- jitted step bodies -------------------------------------------------
+    def _decode_fn(self, params, cache, token, aux):
+        return dec.decode_step(self.cfg, params, cache, token,
+                               aux_embeds=aux, ep_axes=self.ep)
+
+    def _decode_paged_fn(self, params, cache, token):
+        return dec.decode_step_paged(self.cfg, params, cache, token,
+                                     page_t=self.scfg.page_t, ep_axes=self.ep)
+
+    # -- public API -----------------------------------------------------------
+    def prefill(self, tokens: np.ndarray, aux_embeds=None):
+        b, s = tokens.shape
+        self.aux = aux_embeds
+        if self.cfg.encoder_layers and aux_embeds is not None:
+            self.aux = tr.encode(self.cfg, self.params, aux_embeds)
+        if self.scfg.paged:
+            self.cache = dec.init_paged_cache(
+                self.cfg, b, self.scfg.hot_slots, self.scfg.page_t)
+            # seed by streaming the prompt through paged decode (keeps one
+            # code path; production would bulk-write pages from prefill)
+            last = None
+            for t in range(s):
+                last, self.cache = self._decode_paged(
+                    self.params, self.cache, jnp.asarray(tokens[:, t:t + 1]))
+                self._maybe_tick()
+            return np.asarray(jnp.argmax(last[:, -1], -1))
+        self.cache = dec.init_cache(self.cfg, b, self.scfg.max_seq)
+        logits, _ = dec.prefill(self.cfg, self.params, jnp.asarray(tokens),
+                                aux_embeds=aux_embeds, ep_axes=self.ep)
+        # replay tokens into the cache (single-sourced decode path)
+        for t in range(s):
+            _, self.cache = self._decode(self.params, self.cache,
+                                         jnp.asarray(tokens[:, t:t + 1]),
+                                         self.aux)
+        return np.asarray(jnp.argmax(logits[:, -1], -1))
+
+    def step(self, token: np.ndarray) -> np.ndarray:
+        tok = jnp.asarray(token)[:, None]
+        if self.scfg.paged:
+            logits, self.cache = self._decode_paged(self.params, self.cache, tok)
+        else:
+            logits, self.cache = self._decode(self.params, self.cache, tok,
+                                              self.aux)
+        self._maybe_tick()
+        return np.asarray(jnp.argmax(logits[:, -1], -1))
+
+    def generate(self, prompt: np.ndarray, n_tokens: int,
+                 aux_embeds=None) -> np.ndarray:
+        nxt = self.prefill(prompt, aux_embeds)
+        out = [nxt]
+        for _ in range(n_tokens - 1):
+            nxt = self.step(nxt)
+            out.append(nxt)
+        return np.stack(out, axis=1)
+
+    # -- NeoMem daemon cadence --------------------------------------------------
+    def _maybe_tick(self):
+        self.step_count += 1
+        if self.kv_tier is not None \
+                and self.step_count % self.scfg.migration_interval == 0:
+            self.kv_tier.tick()

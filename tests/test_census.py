@@ -1,0 +1,65 @@
+"""Roofline HLO census: trip-count-aware FLOPs/collective accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.census import census, parse_hlo
+
+
+def _compile(f, *shapes):
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_trip_multiplication():
+    """XLA cost_analysis counts scan bodies once; the census must not."""
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    txt = _compile(f, (256, 256), (256, 256))
+    c = census(txt)
+    expected = 10 * 2 * 256 ** 3
+    assert abs(c["flops_per_device"] - expected) / expected < 0.05
+
+
+def test_nested_scan():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    txt = _compile(f, (128, 128), (128, 128))
+    c = census(txt)
+    expected = 12 * 2 * 128 ** 3
+    assert abs(c["flops_per_device"] - expected) / expected < 0.05
+
+
+def test_single_dot_exact():
+    txt = _compile(lambda a, b: a @ b, (64, 32), (32, 16))
+    c = census(txt)
+    assert c["flops_per_device"] == 2 * 64 * 32 * 16
+
+
+def test_no_collectives_single_device():
+    txt = _compile(lambda a, b: a @ b, (64, 64), (64, 64))
+    c = census(txt)
+    assert c["collective_bytes_per_device"] == 0
+
+
+def test_parse_handles_tuple_types():
+    """Tuple-typed collective results must still parse (regression: the
+    all-to-all byte count read 0 before the tuple-type fix)."""
+    fake = """ENTRY %main (p0: f32[8,4]) -> f32[8,4] {
+  %p0 = f32[8,4]{1,0} parameter(0)
+  ROOT %aa = (f32[8,4]{1,0}, f32[8,4]{1,0}) all-to-all(%p0, %p0)
+}
+"""
+    c = census(fake)
+    assert c["collectives"]["all-to-all"]["bytes"] == 2 * 8 * 4 * 4

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sketch as sk
+from repro.core.sketch import SketchParams, sketch_init
+from repro.kernels.cms_hist import ops as hops
+from repro.kernels.neoprof_update import neoprof_update as ku
+from repro.kernels.neoprof_update import ops as kops
+from repro.kernels.neoprof_update import ref as kref
+from repro.kernels.paged_attn import ops as pa_ops
+from repro.kernels.paged_attn.ref import paged_attention_ref
+
+
+@pytest.mark.parametrize("width,depth,s", [
+    (1 << 10, 2, 128), (1 << 12, 2, 256), (1 << 12, 3, 512), (1 << 14, 2, 1024),
+])
+def test_neoprof_update_matches_ref(width, depth, s):
+    sp = SketchParams(width=width, depth=depth)
+    st = sketch_init(sp, jax.random.PRNGKey(depth))
+    rng = np.random.default_rng(width + s)
+    ids = rng.integers(-1, 1 << 18, s).astype(np.int32)   # includes padding
+    args = (st.counts, st.epochs.astype(jnp.int32), st.hot.astype(jnp.int32),
+            jnp.asarray(ids), st.seeds, st.cur_epoch.astype(jnp.int32),
+            sp.counter_max)
+    outk = ku.sketch_update_pallas(*args, depth=depth, width=width,
+                                   interpret=True)
+    outr = kref.update_ref(*args)
+    for a, b, name in zip(outk, outr, ["counts", "epochs", "est", "hot_before"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_mark_hot_matches_ref():
+    sp = SketchParams(width=1 << 12, depth=2)
+    st = sketch_init(sp)
+    rng = np.random.default_rng(9)
+    ids = rng.integers(0, 1 << 18, 256).astype(np.int32)
+    is_hot = (rng.random(256) < 0.3).astype(np.int32)
+    outk = ku.sketch_mark_hot_pallas(st.hot.astype(jnp.int32),
+                                     jnp.asarray(ids), jnp.asarray(is_hot),
+                                     st.seeds, depth=2, width=sp.width,
+                                     interpret=True)
+    outr = kref.mark_hot_ref(st.hot.astype(jnp.int32), jnp.asarray(ids),
+                             jnp.asarray(is_hot), st.seeds)
+    np.testing.assert_array_equal(np.asarray(outk), np.asarray(outr))
+
+
+def test_kernel_ops_path_equals_core():
+    """Full kernel wrapper == pure-jax sketch_update (state + newly_hot)."""
+    sp = SketchParams(width=1 << 12, depth=2)
+    st = sketch_init(sp)
+    rng = np.random.default_rng(3)
+    ids = jnp.asarray(np.concatenate([
+        np.full(40, 77), rng.integers(0, 4000, 216)]).astype(np.int32))
+    st_k, hot_k = kops.sketch_update(st, ids, jnp.int32(20), sp, interpret=True)
+    st_c, hot_c = sk.sketch_update(st, ids, jnp.int32(20), sp)
+    np.testing.assert_array_equal(np.asarray(hot_k), np.asarray(hot_c))
+    np.testing.assert_array_equal(np.asarray(st_k.counts), np.asarray(st_c.counts))
+
+
+def test_hist_kernel_matches_core():
+    sp = SketchParams(width=1 << 12, depth=2)
+    st = sketch_init(sp)
+    rng = np.random.default_rng(5)
+    st, _ = sk.sketch_update(st, jnp.asarray(rng.integers(0, 1 << 16, 4096),
+                                             jnp.int32), jnp.int32(1 << 30), sp)
+    hk = hops.sketch_histogram(st, sp, interpret=True)
+    hc = sk.sketch_histogram(st, sp)
+    np.testing.assert_array_equal(np.asarray(hk), np.asarray(hc))
+
+
+@pytest.mark.parametrize("b,h,hkv,dk,dv,p,t,softcap", [
+    (2, 8, 2, 64, 64, 4, 16, 0.0),
+    (1, 4, 4, 32, 32, 8, 32, 30.0),
+    (3, 8, 1, 576 // 8, 64, 2, 8, 0.0),     # MLA-style dk != dv
+    (2, 16, 8, 128, 128, 4, 64, 0.0),
+])
+def test_paged_attention_matches_ref(b, h, hkv, dk, dv, p, t, softcap):
+    keys = jax.random.split(jax.random.PRNGKey(b * h + p), 4)
+    q = jax.random.normal(keys[0], (b, h, dk), jnp.float32)
+    kp = jax.random.normal(keys[1], (b, p, t, hkv, dk), jnp.float32)
+    vp = jax.random.normal(keys[2], (b, p, t, hkv, dv), jnp.float32)
+    lens = jax.random.randint(keys[3], (b, p), 0, t + 1)
+    # ensure at least one valid token per batch row
+    lens = lens.at[:, 0].set(jnp.maximum(lens[:, 0], 1))
+    o_k = pa_ops.paged_attention(q, kp, vp, lens, softcap=softcap,
+                                 interpret=True)
+    o_r = paged_attention_ref(q, kp, vp, lens, softcap=softcap)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_paged_attention_bf16():
+    b, h, hkv, d, p, t = 2, 8, 2, 64, 4, 16
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(keys[0], (b, h, d), jnp.bfloat16)
+    kp = jax.random.normal(keys[1], (b, p, t, hkv, d), jnp.bfloat16)
+    vp = jax.random.normal(keys[2], (b, p, t, hkv, d), jnp.bfloat16)
+    lens = jnp.full((b, p), t, jnp.int32)
+    o_k = pa_ops.paged_attention(q, kp, vp, lens, interpret=True)
+    o_r = paged_attention_ref(q, kp, vp, lens)
+    np.testing.assert_allclose(np.asarray(o_k, np.float32),
+                               np.asarray(o_r, np.float32), rtol=3e-2, atol=3e-2)

@@ -1,0 +1,87 @@
+"""Algorithm 1 (dynamic hotness threshold) behavioral tests."""
+import numpy as np
+
+from repro.core.policy import (PolicyParams, PolicyState, update_threshold,
+                               quantile_from_hist_np)
+from repro.core.sketch import SketchParams, hist_edges
+
+
+def _hist_with_counts(values):
+    """Histogram with given counter values (rest zeros to width)."""
+    edges = hist_edges()
+    h = np.zeros(64, np.int64)
+    for v in values:
+        b = np.searchsorted(edges, v, side="right") - 1
+        h[min(b, 63)] += 1
+    h[0] += 4096 - len(values)
+    return h
+
+
+def _step(policy, params, hist, bw=0.0, pp=0.0, migrated=0, err=0):
+    return update_threshold(policy, params, hist, bw, pp, migrated, err)
+
+
+def test_bandwidth_raises_p():
+    params = PolicyParams()
+    hist = _hist_with_counts([100] * 60 + [10] * 400)
+    p0 = PolicyState.init(params)
+    p_low = _step(p0, params, hist, bw=0.0)
+    p_high = _step(p0, params, hist, bw=1.0)
+    assert p_high.p >= p_low.p    # line 10: theta inversely prop. to B
+
+
+def test_ping_pong_lowers_p():
+    params = PolicyParams()
+    hist = _hist_with_counts([100] * 60)
+    p0 = PolicyState.init(params)
+    p_quiet = _step(p0, params, hist, pp=0.0)
+    p_noisy = _step(p0, params, hist, pp=2.0)
+    assert p_noisy.p <= p_quiet.p  # line 10: theta prop. to P
+
+
+def test_quota_halves_p():
+    params = PolicyParams(m_quota_pages=100)
+    hist = _hist_with_counts([100] * 60)
+    p0 = PolicyState.init(params)
+    p1 = _step(p0, params, hist, migrated=1000)
+    assert p1.p == max(params.p_min, p0.p / 2)   # line 13
+
+
+def test_error_bound_halves_p():
+    params = PolicyParams()
+    hist = _hist_with_counts([2] * 4000)   # all counters tiny
+    p0 = PolicyState.init(params)
+    p1 = _step(p0, params, hist, err=10_000)   # E >> Q_F(1-p)
+    assert p1.p <= p0.p / 2 or p1.p == params.p_min   # lines 14-15
+
+
+def test_p_bounded():
+    params = PolicyParams()
+    hist = _hist_with_counts([100] * 60)
+    p = PolicyState.init(params)
+    for _ in range(50):
+        p = _step(p, params, hist, bw=1.0)     # push p up hard
+    assert p.p <= params.p_max + 1e-12
+    for _ in range(50):
+        p = _step(p, params, hist, pp=10.0)    # push p down hard
+    assert p.p >= params.p_min - 1e-12
+
+
+def test_theta_follows_distribution():
+    """theta = Q_F(1-p): hotter histogram => higher threshold."""
+    params = PolicyParams()
+    cold = _hist_with_counts([5] * 100)
+    hot = _hist_with_counts([500] * 100)
+    p0 = PolicyState.init(params)
+    t_cold = _step(p0, params, cold).theta
+    t_hot = _step(p0, params, hot).theta
+    assert t_hot >= t_cold
+
+
+def test_quantile_from_hist():
+    hist = np.zeros(64, np.int64)
+    hist[0] = 90   # 90 counters in bin [0,1)
+    hist[10] = 10  # 10 counters at value ~10
+    q50 = quantile_from_hist_np(hist, 0.5)
+    q99 = quantile_from_hist_np(hist, 0.99)
+    assert q50 <= q99

@@ -1,0 +1,141 @@
+"""Unit + property tests for the CM-sketch hot-page detector (paper §IV-B)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sketch as sk
+from repro.core.sketch import SketchParams
+
+SP = SketchParams(width=1 << 12, depth=2)
+
+
+def _stream(ids):
+    return jnp.asarray(np.asarray(ids, np.int32))
+
+
+class TestH3:
+    def test_range(self):
+        st_ = sk.sketch_init(SP)
+        ids = jnp.arange(1000, dtype=jnp.int32)
+        h = sk.h3_hash(ids, st_.seeds)
+        assert h.shape == (SP.depth, 1000)
+        assert int(h.min()) >= 0 and int(h.max()) < SP.width
+
+    def test_deterministic(self):
+        st_ = sk.sketch_init(SP)
+        ids = jnp.asarray([3, 7, 3], jnp.int32)
+        h = sk.h3_hash(ids, st_.seeds)
+        assert int(h[0, 0]) == int(h[0, 2])
+
+    def test_linear_property(self):
+        """H3 is XOR-linear: h(a^b) == h(a)^h(b) (paper Eq. 5)."""
+        st_ = sk.sketch_init(SP)
+        a, b = jnp.int32(0b1010101), jnp.int32(0b0110011)
+        ha = sk.h3_hash(a[None], st_.seeds)
+        hb = sk.h3_hash(b[None], st_.seeds)
+        hab = sk.h3_hash((a ^ b)[None], st_.seeds)
+        np.testing.assert_array_equal(np.asarray(ha ^ hb), np.asarray(hab))
+
+
+class TestSketchUpdate:
+    def test_overestimate_property(self):
+        """CM-sketch NEVER underestimates (Eq. 3 lower bound)."""
+        st_ = sk.sketch_init(SP)
+        rng = np.random.default_rng(0)
+        ids = rng.integers(0, 1 << 16, 2048).astype(np.int32)
+        st_, _ = sk.sketch_update(st_, _stream(ids), jnp.int32(1 << 30), SP)
+        uniq, counts = np.unique(ids, return_counts=True)
+        est = sk.sketch_query(st_, _stream(uniq), SP)
+        assert np.all(np.asarray(est) >= counts)
+
+    def test_hot_detection_and_filter(self):
+        st_ = sk.sketch_init(SP)
+        ids = np.concatenate([np.full(64, 42), np.arange(100, 228)]).astype(np.int32)
+        st_, hot = sk.sketch_update(st_, _stream(ids), jnp.int32(32), SP)
+        hot_ids = set(np.asarray(ids)[np.asarray(hot)].tolist())
+        assert hot_ids == {42}
+        # second block: filtered by hot bits
+        st_, hot2 = sk.sketch_update(st_, _stream(np.full(16, 42, np.int32)),
+                                     jnp.int32(32), SP)
+        assert int(hot2.sum()) == 0
+
+    def test_padding_ignored(self):
+        st_ = sk.sketch_init(SP)
+        ids = np.full(128, -1, np.int32)
+        st2, hot = sk.sketch_update(st_, _stream(ids), jnp.int32(0), SP)
+        assert int(hot.sum()) == 0
+        assert int(st2.n_seen) == 0
+
+    def test_clear_is_epoch_bump(self):
+        st_ = sk.sketch_init(SP)
+        st_, _ = sk.sketch_update(st_, _stream(np.full(10, 5, np.int32)),
+                                  jnp.int32(100), SP)
+        assert int(sk.sketch_query(st_, _stream([5]), SP)[0]) >= 10
+        st_ = sk.sketch_clear(st_)
+        assert int(sk.sketch_query(st_, _stream([5]), SP)[0]) == 0
+        # and counters come back after re-touch
+        st_, _ = sk.sketch_update(st_, _stream(np.full(3, 5, np.int32)),
+                                  jnp.int32(100), SP)
+        assert int(sk.sketch_query(st_, _stream([5]), SP)[0]) >= 3
+
+    def test_counter_saturation(self):
+        sp = SketchParams(width=256, depth=2, counter_bits=8)
+        st_ = sk.sketch_init(sp)
+        for _ in range(3):
+            st_, _ = sk.sketch_update(
+                st_, _stream(np.full(200, 9, np.int32)), jnp.int32(1 << 20), sp)
+        assert int(sk.sketch_query(st_, _stream([9]), sp)[0]) == 255
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=256))
+    def test_hypothesis_overestimate(self, ids):
+        st_ = sk.sketch_init(SP)
+        arr = np.asarray(ids, np.int32)
+        st_, _ = sk.sketch_update(st_, _stream(arr), jnp.int32(1 << 30), SP)
+        uniq, counts = np.unique(arr, return_counts=True)
+        est = np.asarray(sk.sketch_query(st_, _stream(uniq), SP))
+        assert np.all(est >= counts)
+
+
+class TestHistogram:
+    def test_hist_sums_to_width(self):
+        st_ = sk.sketch_init(SP)
+        rng = np.random.default_rng(1)
+        st_, _ = sk.sketch_update(
+            st_, _stream(rng.integers(0, 4096, 2048)), jnp.int32(1 << 30), SP)
+        h = sk.sketch_histogram(st_, SP)
+        assert int(h.sum()) == SP.width
+
+    def test_error_bound_grows_with_load(self):
+        sp = SketchParams(width=256, depth=2)
+        st_ = sk.sketch_init(sp)
+        rng = np.random.default_rng(2)
+        e0 = int(sk.error_bound_from_hist(sk.sketch_histogram(st_, sp), sp))
+        for _ in range(8):
+            st_, _ = sk.sketch_update(
+                st_, _stream(rng.integers(0, 1 << 20, 2048)),
+                jnp.int32(1 << 30), sp)
+        e1 = int(sk.error_bound_from_hist(sk.sketch_histogram(st_, sp), sp))
+        assert e1 > e0
+
+    def test_wide_sketch_zero_error(self):
+        """Paper Fig.15-(c): W=512K drives the error bound to ~0; here the
+        scaled-down version — width >> stream cardinality => bound ~ 0."""
+        sp = SketchParams(width=1 << 14, depth=2)
+        st_ = sk.sketch_init(sp)
+        rng = np.random.default_rng(3)
+        st_, _ = sk.sketch_update(
+            st_, _stream(rng.integers(0, 64, 1024)), jnp.int32(1 << 30), sp)
+        e = int(sk.error_bound_from_hist(sk.sketch_histogram(st_, sp), sp))
+        assert e <= 1
+
+    def test_quantile_monotone(self):
+        st_ = sk.sketch_init(SP)
+        rng = np.random.default_rng(4)
+        st_, _ = sk.sketch_update(
+            st_, _stream(rng.integers(0, 2048, 4096)), jnp.int32(1 << 30), SP)
+        h = sk.sketch_histogram(st_, SP)
+        qs = [int(sk.quantile_from_hist(h, q)) for q in (0.5, 0.9, 0.99, 0.999)]
+        assert qs == sorted(qs)

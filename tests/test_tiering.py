@@ -1,0 +1,89 @@
+"""TieredStore: promotion / 2Q demotion / ping-pong + pytree invariants."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiering
+from repro.core.tiering import TierParams, tier_init
+
+
+def _promote(ts, pages, k=8):
+    arr = np.full((k,), -1, np.int32)
+    arr[:len(pages)] = pages
+    return tiering.promote(ts, jnp.asarray(arr), k)
+
+
+def _check_invariants(ts):
+    page_slot = np.asarray(ts.page_slot)
+    slot_page = np.asarray(ts.slot_page)
+    # bijection: page -> slot -> page
+    for p in np.nonzero(page_slot >= 0)[0]:
+        assert slot_page[page_slot[p]] == p, (p, page_slot[p])
+    for s in np.nonzero(slot_page >= 0)[0]:
+        assert page_slot[slot_page[s]] == s, (s, slot_page[s])
+
+
+def test_promote_fill_and_evict():
+    ts = tier_init(TierParams(num_pages=100, num_slots=4, quota_pages=8))
+    ts, pr, vs = _promote(ts, [1, 2, 3])
+    assert set(np.asarray(pr)[:3].tolist()) == {1, 2, 3}
+    _check_invariants(ts)
+    ts = tiering.touch(ts, jnp.asarray([1, 2], jnp.int32))
+    ts, pr, vs = _promote(ts, [4, 5])       # fills slot 4, evicts 1
+    _check_invariants(ts)
+    page_slot = np.asarray(ts.page_slot)
+    assert (page_slot[[1, 2, 3, 4, 5]] >= 0).sum() == 4  # one got evicted
+    assert int(ts.demoted_cnt) == 1
+
+
+def test_2q_prefers_unreferenced_inactive():
+    ts = tier_init(TierParams(num_pages=100, num_slots=2, quota_pages=4))
+    ts, _, _ = _promote(ts, [10, 11], k=4)
+    # touch 10 twice: graduates to active list
+    ts = tiering.touch(ts, jnp.asarray([10], jnp.int32))
+    ts = tiering.touch(ts, jnp.asarray([10], jnp.int32))
+    ts, pr, vs = _promote(ts, [12], k=4)
+    # victim must be 11 (inactive), not 10 (active & referenced)
+    assert np.asarray(ts.page_slot)[10] >= 0
+    assert np.asarray(ts.page_slot)[11] == -1
+    _check_invariants(ts)
+
+
+def test_ping_pong_flag():
+    ts = tier_init(TierParams(num_pages=50, num_slots=1, quota_pages=4))
+    ts, _, _ = _promote(ts, [5], k=4)
+    ts, _, _ = _promote(ts, [6], k=4)      # evicts 5 -> PG_demoted[5]
+    ts, _, _ = _promote(ts, [5], k=4)      # 5 comes back -> ping-pong
+    ts, stats = tiering.drain_period_stats(ts)
+    assert int(stats["ping_pong"]) == 1
+
+
+def test_touch_counts_hits_misses():
+    ts = tier_init(TierParams(num_pages=50, num_slots=4, quota_pages=8))
+    ts, _, _ = _promote(ts, [1, 2])
+    ts = tiering.touch(ts, jnp.asarray([1, 2, 30, 31, -1], jnp.int32))
+    ts, stats = tiering.drain_period_stats(ts)
+    assert int(stats["fast_reads"]) == 2
+    assert int(stats["slow_reads"]) == 2   # -1 is padding
+
+
+def test_duplicate_hot_pages_deduped():
+    ts = tier_init(TierParams(num_pages=50, num_slots=8, quota_pages=8))
+    ts, pr, _ = _promote(ts, [7, 7, 7, 8])
+    assert int((np.asarray(pr) == 7).sum()) == 1
+    _check_invariants(ts)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 49), min_size=0, max_size=6),
+                min_size=1, max_size=8))
+def test_hypothesis_invariants_random_schedule(batches):
+    ts = tier_init(TierParams(num_pages=50, num_slots=5, quota_pages=8))
+    for pages in batches:
+        ts, _, _ = _promote(ts, pages)
+        ts = tiering.touch(ts, jnp.asarray(
+            np.asarray(pages + [0], np.int32)))
+    _check_invariants(ts)
+    # resident count never exceeds slots
+    assert int((np.asarray(ts.page_slot) >= 0).sum()) <= 5
