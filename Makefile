@@ -1,0 +1,19 @@
+PYTEST ?= python -m pytest
+
+.PHONY: test test-fast test-dist dryrun
+
+# full tier-1 suite (includes slow 8-host-device subprocess parity tests)
+test:
+	$(PYTEST) -q
+
+# fast tier: skips @slow (multi-device subprocess / long-running) tests
+test-fast:
+	$(PYTEST) -q -m "not slow"
+
+# just the distribution layer (seed parity tests + unit tests)
+test-dist:
+	$(PYTEST) -q tests/test_distribution.py tests/test_dist_layer.py
+
+# 512-host-device compile census over every (arch x shape) cell
+dryrun:
+	PYTHONPATH=src python -m repro.launch.dryrun

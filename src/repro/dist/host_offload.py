@@ -1,0 +1,62 @@
+"""Fast/slow memory-tier placement by JAX ``memory_kind`` — NeoMem's tiers.
+
+Device HBM is the fast tier (DRAM in the paper), pinned host memory the
+slow tier (CXL-attached memory).  ``to_slow_tier`` / ``to_fast_tier`` move
+an array between them with an explicit ``device_put``, the software
+equivalent of a page migration.  Backends without memory-kind support
+(CPU) degrade to *logical* separation: the array keeps its sharding and
+the tier distinction is bookkeeping only, so tiering policy code runs
+unchanged everywhere.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding
+
+SLOW_KIND = "pinned_host"
+
+# success-only memo: a probe that fails (backend not up yet) is retried on
+# the next call rather than pinning "no offload" for the whole process
+_probe_cache: dict = {}
+
+
+def _memory_kinds() -> tuple:
+    if "kinds" not in _probe_cache:
+        try:
+            dev = jax.devices()[0]
+            _probe_cache["kinds"] = tuple(
+                sorted({m.kind for m in dev.addressable_memories()}))
+        except Exception:
+            return ()
+    return _probe_cache["kinds"]
+
+
+def _fast_kind() -> str | None:
+    if "fast" not in _probe_cache:
+        try:
+            _probe_cache["fast"] = jax.devices()[0].default_memory().kind
+        except Exception:
+            return None
+    return _probe_cache["fast"]
+
+
+def supports_memory_kinds() -> bool:
+    """True when the backend exposes a distinct host tier to offload into."""
+    kinds = _memory_kinds()
+    return SLOW_KIND in kinds and len(kinds) > 1
+
+
+def _put(x, mesh, spec, kind):
+    if kind is not None and supports_memory_kinds():
+        return jax.device_put(x, NamedSharding(mesh, spec, memory_kind=kind))
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+def to_slow_tier(x, mesh, spec):
+    """Demote: place x in the slow tier (pinned host) under ``spec``."""
+    return _put(x, mesh, spec, SLOW_KIND)
+
+
+def to_fast_tier(x, mesh, spec):
+    """Promote: place x back in the fast tier (device memory)."""
+    return _put(x, mesh, spec, _fast_kind())

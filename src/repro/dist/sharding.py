@@ -1,0 +1,165 @@
+"""Name/shape-based PartitionSpec inference for params, caches, and batches.
+
+The placement policy of the distribution layer: every tensor is assigned a
+tier (mesh axes) from its *name* (what role it plays) and its *shape* (what
+actually divides).  Rules follow the Megatron conventions the model code is
+written against:
+
+  * MoE expert stacks (E, D, F)      -> expert dim over 'model' (EP)
+  * column weights (D, F) / qkv proj -> output dim over 'model'
+  * row weights (F, D) / out proj    -> contract dim over 'model'
+  * embedding table (V, D)           -> vocab over 'model'
+  * norms, biases, routers, scalars  -> replicated
+
+Every rule checks divisibility against the mesh axis size and falls back to
+replication when the dim does not divide — a spec produced here is always
+valid to ``device_put`` against, on any mesh shape.  Leaves may be concrete
+arrays or ``ShapeDtypeStruct``s (dry-run); only ``.shape`` is consulted, so
+``jax.sharding.AbstractMesh`` works as the mesh in tests.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import PartitionSpec as P
+
+_DP_AXES = ("pod", "data")
+
+# trailing param names -> sharding role
+_ROW = ("wo", "w_out", "sh_out", "out_proj")              # (F, D): shard F
+_REPLICATED = ("router", "router_bias", "residency", "fetch_ids", "xgate")
+
+
+def path_str(kp) -> str:
+    """'blocks/0/ffn/w_in'-style string for a tree_util key path."""
+    parts = []
+    for k in kp:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _dp(mesh) -> tuple:
+    return tuple(a for a in _DP_AXES if a in mesh.axis_names)
+
+
+def _mesh_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _fits(size: int, mesh, axes) -> bool:
+    n = _mesh_size(mesh, axes)
+    return n >= 1 and size >= n and size % n == 0
+
+
+def param_pspecs(params, mesh, *, fsdp: bool = False):
+    """PartitionSpec tree for a param pytree (same structure, P leaves).
+
+    fsdp=True additionally shards one remaining dim of each >=2-D weight
+    over the data axes (ZeRO-3 storage; compute all-gathers per layer).
+    """
+    model = "model" if "model" in mesh.axis_names else None
+    dp = _dp(mesh)
+
+    def infer(kp, leaf):
+        shape = tuple(leaf.shape)
+        nd = len(shape)
+        if nd == 0:
+            return P()
+        p = path_str(kp)
+        name = p.rsplit("/", 1)[-1]
+        # params["blocks"] leaves are vmap-stacked over layer groups: the
+        # leading G dim is scanned over, never sharded.
+        lead = 1 if p.startswith("blocks") else 0
+        dims = [None] * nd
+        if name in _REPLICATED or nd - lead < 2:
+            return P(*dims)          # norms, biases, routers, small maps
+
+        if nd - lead == 3 and name.startswith(("w_", "fetch_")):
+            tp = lead                # MoE expert stack (E, D, F): EP over E
+        elif name in _ROW:
+            tp = lead                # (F, D): row-parallel
+        elif name == "table":
+            tp = lead                # (V, D): shard the vocab
+        else:
+            tp = nd - 1              # column-parallel default
+        if model is not None and _fits(shape[tp], mesh, model):
+            dims[tp] = model
+
+        if fsdp and dp:
+            for axes in ((dp,) if len(dp) == 1 else (dp, dp[-1:])):
+                hit = next((i for i in range(lead, nd)
+                            if dims[i] is None and _fits(shape[i], mesh, axes)),
+                           None)
+                if hit is not None:
+                    dims[hit] = axes if len(axes) > 1 else axes[0]
+                    break
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(
+        infer, params, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def batch_pspec(mesh) -> P:
+    """(B, S) token batches: rows over the data-parallel axes."""
+    dp = _dp(mesh)
+    return P(dp if dp else None, None)
+
+
+def cache_pspecs(cache_shapes, mesh, *, slot_axes: tuple | None = None):
+    """PartitionSpec tree for KV caches (full-sequence or paged).
+
+    Default (full caches): batch dim over the data axes, k/v sequence dim
+    over 'model' (the baseline decode layout — XLA all-gathers per layer).
+    With ``slot_axes`` (paged caches, B=1 long-context): page slots sharded
+    over the given axes, everything else replicated.
+    """
+    if slot_axes is not None:
+        n_shards = _mesh_size(mesh, tuple(slot_axes))
+
+        def leaf_paged(kp, l):
+            p = path_str(kp)
+            nd = len(l.shape)
+            if nd == 0:
+                return P()
+            lead = 1 if "blocks" in p else 0
+            dims = [None] * nd
+            if any(s in p for s in ("k_pages", "v_pages", "page_len")) \
+                    and nd > lead + 1 and l.shape[lead + 1] % n_shards == 0:
+                dims[lead + 1] = tuple(slot_axes)
+            return P(*dims)
+
+        return jax.tree_util.tree_map_with_path(leaf_paged, cache_shapes)
+
+    dp = _dp(mesh)
+    dp_size = _mesh_size(mesh, dp)
+    m = "model" if "model" in mesh.axis_names else None
+
+    def leaf_full(kp, l):
+        p = path_str(kp)
+        nd = len(l.shape)
+        if nd == 0:
+            return P()
+        lead = 1 if "blocks" in p else 0
+        dims = [None] * nd
+        if dp and nd > lead and l.shape[lead] % max(dp_size, 1) == 0 \
+                and l.shape[lead] >= dp_size:
+            dims[lead] = dp
+        # seq dim of k/v caches: (lead, B, S, ...) -> index lead+1
+        if any(p.endswith(suf) for suf in ("/k", "/v", "c_kv", "k_rope")) \
+                and nd > lead + 1 and m \
+                and l.shape[lead + 1] % mesh.shape["model"] == 0:
+            dims[lead + 1] = m
+        return P(*dims)
+
+    return jax.tree_util.tree_map_with_path(leaf_full, cache_shapes)

@@ -161,7 +161,10 @@ def cell_specs(arch: str, shape_name: str, mesh, *, tcfg=None,
     if shp["kind"] == "decode":
         cache_shapes = jax.eval_shape(
             lambda: dec.init_cache(cfg, b, s, dtype=jnp.bfloat16))
-        cspecs = _decode_cache_specs(cache_shapes, mesh, dp)
+        # decode_32k baseline: batch over DP, k/v sequence over 'model'
+        # (XLA all-gathers per layer — the hillclimb replaces this with
+        # sharded flash-decode); rule set lives in repro.dist.sharding
+        cspecs = cache_pspecs(cache_shapes, mesh)
         cache = jax.tree.map(
             lambda sd, sp: jax.ShapeDtypeStruct(
                 sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)),
@@ -186,7 +189,8 @@ def cell_specs(arch: str, shape_name: str, mesh, *, tcfg=None,
         lambda: dec.init_paged_cache(cfg, b, n_slots, PAGE_T,
                                      dtype=jnp.bfloat16))
     slot_axes = tuple(mesh.axis_names)
-    cspecs = _paged_cache_specs(cache_shapes, mesh, slot_axes)
+    # long_500k: page slots sharded over ALL mesh axes (B=1)
+    cspecs = cache_pspecs(cache_shapes, mesh, slot_axes=slot_axes)
     cache = jax.tree.map(
         lambda sd, sp: jax.ShapeDtypeStruct(
             sd.shape, sd.dtype, sharding=NamedSharding(mesh, sp)),
@@ -201,49 +205,3 @@ def cell_specs(arch: str, shape_name: str, mesh, *, tcfg=None,
             "donate": (1,), "cfg": cfg}
 
 
-def _decode_cache_specs(cache_shapes, mesh, dp):
-    """decode_32k: batch over DP; SEQUENCE over 'model' (baseline — XLA
-    all-gathers per layer; the hillclimb replaces this with sharded
-    flash-decode)."""
-    m = "model" if "model" in mesh.axis_names else None
-    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
-
-    def leaf(kp, l):
-        from repro.dist.sharding import path_str
-        p = path_str(kp)
-        nd = len(l.shape)
-        if nd == 0:
-            return P()
-        lead = 1 if "blocks" in p else 0
-        dims = [None] * nd
-        if nd > lead and l.shape[lead] % max(dp_size, 1) == 0 \
-                and l.shape[lead] >= dp_size:
-            dims[lead] = dp
-        # seq dim of k/v caches: (lead, B, S, ...) -> index lead+1
-        if any(p.endswith(suf) for suf in ("/k", "/v", "c_kv", "k_rope")) \
-                and nd > lead + 1 and m \
-                and l.shape[lead + 1] % mesh.shape["model"] == 0:
-            dims[lead + 1] = m
-        return P(*dims)
-
-    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)
-
-
-def _paged_cache_specs(cache_shapes, mesh, slot_axes):
-    """long_500k: page slots sharded over ALL mesh axes (B=1)."""
-    n_shards = int(np.prod([mesh.shape[a] for a in slot_axes]))
-
-    def leaf(kp, l):
-        from repro.dist.sharding import path_str
-        p = path_str(kp)
-        nd = len(l.shape)
-        if nd == 0:
-            return P()
-        lead = 1 if "blocks" in p else 0
-        dims = [None] * nd
-        if ("k_pages" in p or "v_pages" in p or "page_len" in p) \
-                and nd > lead + 1 and l.shape[lead + 1] % n_shards == 0:
-            dims[lead + 1] = slot_axes
-        return P(*dims)
-
-    return jax.tree_util.tree_map_with_path(leaf, cache_shapes)

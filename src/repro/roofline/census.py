@@ -113,9 +113,18 @@ def parse_hlo(text: str) -> dict[str, Computation]:
             contract = 1
             if cm:
                 dims = [int(d) for d in cm.group(1).split(",") if d != ""]
-                ops = re.search(r"dot\(\s*%?([\w\.\-]+)", line)
-                if ops and ops.group(1) in cur.shapes:
-                    lhs_shape = cur.shapes[ops.group(1)][1]
+                # operands may carry an inline type ("dot(f32[64,32]{1,0} %a,")
+                # or be bare names ("dot(%a,") depending on the XLA version
+                ops = re.search(
+                    r"dot\(\s*(?:[a-z][a-z0-9]*\[([0-9,]*)\](?:\{[^}]*\})?\s+)?"
+                    r"%?([\w\.\-]+)", line)
+                lhs_shape = None
+                if ops and ops.group(1) is not None:
+                    lhs_shape = [int(d) for d in ops.group(1).split(",")] \
+                        if ops.group(1) else []
+                elif ops and ops.group(2) in cur.shapes:
+                    lhs_shape = cur.shapes[ops.group(2)][1]
+                if lhs_shape is not None:
                     for d in dims:
                         if d < len(lhs_shape):
                             contract *= lhs_shape[d]
