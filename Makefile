@@ -1,6 +1,6 @@
 PYTEST ?= python -m pytest
 
-.PHONY: test test-fast test-dist dryrun
+.PHONY: test test-fast test-dist dryrun bench-serve
 
 # full tier-1 suite (includes slow 8-host-device subprocess parity tests)
 test:
@@ -17,3 +17,8 @@ test-dist:
 # 512-host-device compile census over every (arch x shape) cell
 dryrun:
 	PYTHONPATH=src python -m repro.launch.dryrun
+
+# short serving benchmark (tokens/s + per-resource tier hit rates); writes
+# BENCH_serve.json so the perf trajectory is recorded per commit
+bench-serve:
+	PYTHONPATH=src:. python benchmarks/run.py --quick --only serve_bench

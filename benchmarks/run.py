@@ -20,6 +20,7 @@ MODULES = [
     "fig15_sensitivity",
     "fig16_convergence",
     "kernel_bench",
+    "serve_bench",
 ]
 
 

@@ -1,0 +1,74 @@
+"""Serving benchmark: tokens/s + per-resource fast-tier hit rates.
+
+Drives the ServeEngine's multi-resource tiering path (paged KV + embedding
+rows, plus experts on the MoE arch) on smoke-scale models and records the
+perf trajectory into ``BENCH_serve.json`` — one row per served arch with
+throughput and the unified TierStats snapshot of every registered resource.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.registry import get_smoke_config
+from repro.models import transformer as tr
+from repro.serve.engine import ServeConfig, ServeEngine
+
+from benchmarks.common import emit
+
+OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+CASES = [
+    ("llama3.2-3b", dict(max_seq=256, paged=True, page_t=8, hot_slots=6,
+                         migration_interval=4, resources=("embeddings",),
+                         embed_hot_slots=4), 2, 16),
+    ("kimi-k2-1t-a32b", dict(max_seq=256, paged=True, page_t=8, hot_slots=6,
+                             migration_interval=4,
+                             resources=("experts", "embeddings"),
+                             expert_hot_slots=2, embed_hot_slots=2), 2, 16),
+]
+
+
+def _bench(arch: str, scfg_kw: dict, batch: int, prompt_len: int,
+           n_tokens: int) -> dict:
+    cfg = get_smoke_config(arch)
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(**scfg_kw))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, n_tokens=n_tokens)
+    dt = time.perf_counter() - t0
+    assert out.shape == (batch, n_tokens)
+    return {
+        "arch": arch,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "n_tokens": n_tokens,
+        "tokens_per_s": batch * n_tokens / dt,
+        "wall_s": dt,
+        "resources": eng.tier_stats(),
+    }
+
+
+def run(quick: bool = False):
+    n_tokens = 8 if quick else 32
+    rows = [_bench(arch, kw, batch, plen, n_tokens)
+            for arch, kw, batch, plen in CASES]
+    for r in rows:
+        hits = " ".join(f"{name}_hit={res['hit_rate']:.3f}"
+                        for name, res in sorted(r["resources"].items()))
+        emit(f"serve_{r['arch']}", r["wall_s"] * 1e6 / (r['batch'] * n_tokens),
+             f"tok_s={r['tokens_per_s']:.1f} {hits}")
+    with open(OUT_PATH, "w") as f:
+        json.dump({"quick": quick, "cases": rows}, f, indent=2)
+    emit("serve_bench_json", 0.0, os.path.normpath(OUT_PATH))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

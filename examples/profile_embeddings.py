@@ -1,5 +1,5 @@
-"""Embedding-row tiering demo: gemma2-scale 256K-row vocab, zipf token
-stream; NeoMem keeps the hot rows HBM-resident.
+"""Embedding-row tiering demo on the unified TieredResource API: gemma2-scale
+256K-row vocab, zipf token stream; NeoMem keeps the hot rows HBM-resident.
 
     PYTHONPATH=src python examples/profile_embeddings.py
 """
@@ -11,16 +11,20 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.adapters.embed_cache import EmbedCache, EmbedTierConfig
+from repro import tiering as tm
 
 VOCAB = 256_000
-cache = EmbedCache(EmbedTierConfig(vocab=VOCAB, hot_slots=256,
-                                   quota_pages=64))
+ROWS = tm.EMBED_ROWS_PER_PAGE
+daemon = tm.NeoMemDaemon()
+rows = daemon.register(tm.make_resource("embeddings", tm.ResourceSpec(
+    "embeddings", n_pages=(VOCAB + ROWS - 1) // ROWS, hot_slots=256,
+    quota_pages=64)))
 rng = np.random.default_rng(0)
 for step in range(96):
     toks = (rng.zipf(1.3, 4096) - 1) % VOCAB
-    cache.observe_tokens(jnp.asarray(toks.astype(np.int32)))
-    cache.tick()
+    rows.observe(jnp.asarray(toks.astype(np.int32)))
+    daemon.tick()
     if step % 16 == 15:
-        print(f"step {step:3d} hot-row page hit rate: {cache.hit_rate():.3f} "
-              f"theta={cache.daemon.policy.theta}")
+        theta = rows.stats.theta_trace[-1] if rows.stats.theta_trace else 1
+        print(f"step {step:3d} hot-row page hit rate: {rows.hit_rate():.3f} "
+              f"theta={theta}")

@@ -14,9 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import tiering as tm
 from repro.ckpt.manager import CheckpointManager
 from repro.configs.base import ArchConfig, MoECfg
-from repro.core.adapters.expert_cache import ExpertCache, ExpertTierConfig
 from repro.data.pipeline import DataConfig, make_dataset
 from repro.models import transformer as tr
 from repro.optim.optimizers import OptConfig, make_optimizer
@@ -47,8 +47,12 @@ def main():
     params = tr.init_params(CFG, jax.random.PRNGKey(0))
     opt_state = opt_init(params)
     mgr = CheckpointManager(args.ckpt, keep=2)
-    cache = ExpertCache(ExpertTierConfig(
-        n_groups=CFG.n_groups, n_experts=16, hot_slots=4))
+    # NeoMem: register the router stream as an "experts" TieredResource on a
+    # multiplexed daemon (a trainer would register more resources here).
+    daemon = tm.NeoMemDaemon()
+    experts = daemon.register(tm.make_resource("experts", tm.ResourceSpec(
+        "experts", n_pages=CFG.n_groups * 16,
+        hot_slots=CFG.n_groups * 4, quota_pages=32), n_experts=16))
 
     start = mgr.latest_step() or 0
     if start:
@@ -67,18 +71,18 @@ def main():
         batch = jax.tree.map(jnp.asarray, data.batch(s, 0, 1))
         params, opt_state, loss, streams = step(params, opt_state, batch)
         if streams is not None:
-            cache.observe_step(streams)   # NeoMem: profile the router stream
-            cache.tick()
+            experts.observe(streams)      # NeoMem: profile the router stream
+            daemon.tick()
         if s % 20 == 0 or s == args.steps - 1:
             tput = (s - start + 1) * args.batch * args.seq / (time.time() - t0)
             print(f"step {s:4d} loss={float(loss):.3f} "
-                  f"tok/s={tput:,.0f} expert_hit={cache.hit_rate():.2f}")
+                  f"tok/s={tput:,.0f} expert_hit={experts.hit_rate():.2f}")
         if s and s % 100 == 0:
             mgr.save(s, params, blocking=False)
     mgr.wait()
     mgr.save(args.steps, params)
     print("final expert residency (hot experts per group):")
-    res = cache.residency().reshape(CFG.n_groups, 16)
+    res = np.asarray(experts.state.tier.page_slot).reshape(CFG.n_groups, 16)
     print((res >= 0).sum(axis=1))
 
 

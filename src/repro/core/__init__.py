@@ -5,8 +5,12 @@ Public API:
   NeoProfParams/NeoProfState/Commands .... the device-side profiler unit
   PolicyParams/PolicyState/update_threshold ... Algorithm 1
   TierParams/TierState + promote/touch ... two-tier page placement
-  NeoMemDaemon ........................... orchestration cadences
+  NeoMemDaemon ........................... orchestration cadences (legacy shim)
   run_sim/WORKLOADS ...................... paper-evaluation simulator
+
+The unified tiering surface (TieredResource / TieredMemory / the multiplexed
+daemon / TierStats) lives in :mod:`repro.tiering`; the most-used names are
+re-exported here for convenience.
 """
 from repro.core.sketch import (  # noqa: F401
     SketchParams, SketchState, sketch_init, sketch_update, sketch_query,
@@ -27,3 +31,16 @@ from repro.core.daemon import DaemonParams, NeoMemDaemon  # noqa: F401
 from repro.core.simulator import (  # noqa: F401
     MemModel, SimResult, WORKLOADS, run_sim, geomean_speedup,
 )
+_TIERING_EXPORTS = (
+    "ResourceSpec", "TierStats", "TieredMemory", "TieredMemoryState",
+    "TieredResource", "make_resource", "register_resource", "resource_kinds",
+)
+
+
+def __getattr__(name: str):
+    # Lazy so that ``import repro.tiering`` (whose modules import repro.core
+    # submodules) doesn't recurse into a partially-initialized package.
+    if name in _TIERING_EXPORTS:
+        import repro.tiering as _tm
+        return getattr(_tm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

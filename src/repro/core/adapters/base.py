@@ -1,0 +1,80 @@
+"""Shared base for the legacy adapter shims (KVTier / ExpertCache / EmbedCache).
+
+Each legacy adapter is now a thin view over ONE resource registered on a
+:class:`repro.tiering.NeoMemDaemon`: the stream encoding lives in
+:mod:`repro.tiering.resources`, the state is the :class:`TieredMemoryState`
+pytree, and all hit-rate / policy arithmetic goes through the unified
+:class:`repro.tiering.TierStats` path.  The ``.prof`` / ``.tier`` /
+``.daemon`` attributes the seed tests poke at are preserved as properties.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro import tiering as tm
+from repro.tiering.stats import LegacyDaemonStateView
+
+
+class _DaemonView:
+    """Legacy per-adapter ``daemon`` attribute (cmd / policy / state / tp)."""
+
+    def __init__(self, handle: tm.ResourceHandle):
+        self._h = handle
+        self.cmd = handle.mem.cmd
+
+    tp = property(lambda self: self._h.mem.tp)
+    pp = property(lambda self: self._h.mem.pp)
+    dp = property(lambda self: self._h.mem.dp)
+    pol_params = property(lambda self: self._h.mem.pol_params)
+
+    @property
+    def policy(self):
+        return self._h.mem.policy_state(self._h.state, self._h.stats)
+
+    @property
+    def state(self) -> LegacyDaemonStateView:
+        return LegacyDaemonStateView(self._h.stats)
+
+
+class LegacyTierAdapter:
+    """prof/tier threading + daemon facade shared by the three shims."""
+
+    def __init__(self, resource, daemon_params: tm.DaemonParams | None = None):
+        self._daemon = tm.NeoMemDaemon(daemon_params or tm.DaemonParams())
+        self._h = self._daemon.register(resource)
+        self.daemon = _DaemonView(self._h)
+
+    @property
+    def spec(self) -> tm.ResourceSpec:
+        return self._h.resource.spec
+
+    @property
+    def handle(self) -> tm.ResourceHandle:
+        return self._h
+
+    # legacy mutable-attribute surface -------------------------------------
+    @property
+    def prof(self):
+        return self._h.state.prof
+
+    @prof.setter
+    def prof(self, value):
+        self._h.state = self._h.state._replace(prof=value)
+
+    @property
+    def tier(self):
+        return self._h.state.tier
+
+    @tier.setter
+    def tier(self, value):
+        self._h.state = self._h.state._replace(tier=value)
+
+    def tick(self) -> None:
+        self._daemon.tick()
+
+    def hit_rate(self) -> float:
+        return self._h.hit_rate()
+
+    def residency(self) -> np.ndarray:
+        """page -> fast-slot (-1 if slow-tier / host-resident)."""
+        return np.asarray(self.tier.page_slot)

@@ -1,10 +1,10 @@
-"""Embedding-row tiering — NeoMem applied to vocab tables (§3.3).
+"""Embedding-row tiering shim — NeoMem applied to vocab tables (§3.3).
 
-The access stream is simply the token-id stream (the model's own input!);
-pages are row-blocks of ROWS_PER_PAGE vocabulary rows.  For 256K-row tables
-(gemma2) the hot tail fits comfortably in a small HBM-resident cache while
-the cold mass lives host-side.  This is also the NeoMem surface for
-attention-free archs (xlstm) — see DESIGN.md §5.
+Deprecation shim over :class:`repro.tiering.EmbedRowsResource`: the access
+stream is simply the token-id stream (the model's own input!); pages are
+row-blocks of ``rows_per_page`` vocabulary rows.  This is also the NeoMem
+surface for attention-free archs (xlstm) — see DESIGN.md §5.  New code
+should register an ``"embeddings"`` resource on a shared daemon instead.
 """
 from __future__ import annotations
 
@@ -12,15 +12,11 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.daemon import DaemonParams, NeoMemDaemon
-from repro.core.neoprof import NeoProfParams, neoprof_init, neoprof_observe
-from repro.core.sketch import SketchParams
-from repro.core.tiering import TierParams, tier_init
-from repro.core import tiering
+from repro import tiering as tm
+from repro.core.adapters.base import LegacyTierAdapter
 
-ROWS_PER_PAGE = 64
+ROWS_PER_PAGE = tm.EMBED_ROWS_PER_PAGE
 
 
 @dataclasses.dataclass
@@ -32,30 +28,15 @@ class EmbedTierConfig:
     sketch_width: int = 1 << 14
 
 
-class EmbedCache:
+class EmbedCache(LegacyTierAdapter):
     def __init__(self, cfg: EmbedTierConfig, migrate_fn=None):
         self.cfg = cfg
         n_pages = (cfg.vocab + cfg.rows_per_page - 1) // cfg.rows_per_page
-        self.prof_params = NeoProfParams(sketch=SketchParams(width=cfg.sketch_width))
-        self.prof = neoprof_init(self.prof_params)
-        tp = TierParams(n_pages, cfg.hot_slots, cfg.quota_pages)
-        self.tier = tier_init(tp)
-        self.daemon = NeoMemDaemon(self.prof_params, tp,
-                                   DaemonParams(quota_pages=cfg.quota_pages),
-                                   migrate_fn=migrate_fn)
+        spec = tm.ResourceSpec(
+            name="embeddings", n_pages=n_pages, hot_slots=cfg.hot_slots,
+            quota_pages=cfg.quota_pages, sketch_width=cfg.sketch_width)
+        super().__init__(tm.EmbedRowsResource(
+            spec, rows_per_page=cfg.rows_per_page, migrate_fn=migrate_fn))
 
     def observe_tokens(self, tokens: jax.Array) -> None:
-        pages = (tokens.reshape(-1) // self.cfg.rows_per_page).astype(jnp.int32)
-        if pages.shape[0] > 1 << 14:
-            stride = pages.shape[0] // (1 << 14)
-            pages = pages[::stride][: 1 << 14]
-        self.prof = neoprof_observe(self.prof, pages, self.prof_params)
-        self.tier = tiering.touch(self.tier, pages[: 4096])
-
-    def tick(self):
-        self.prof, self.tier = self.daemon.tick(self.prof, self.tier)
-
-    def hit_rate(self) -> float:
-        f = float(self.tier.fast_reads) + self.daemon.state.total_fast
-        s = float(self.tier.slow_reads) + self.daemon.state.total_slow
-        return f / max(f + s, 1.0)
+        self._h.observe(jnp.asarray(tokens))

@@ -1,18 +1,12 @@
-"""MoE expert tiering — NeoMem applied to expert weights (DESIGN.md §3.1).
+"""MoE expert tiering shim — NeoMem applied to expert weights (DESIGN.md §3.1).
 
-The access stream is the router's token->expert assignments (already
-surfaced by models.moe as ``idx``).  A *page* is one expert's weight block
-for one layer group: page_id = group * n_experts + expert.
-
-Serving integration: the fast tier holds H hot experts' weights HBM-resident
-per device; cold experts live in host memory (``pinned_host`` sharding on
-real TPU — see host_offload.py).  On each migration interval the daemon
-promotes the sketch-detected hot experts under quota; the serve step gathers
-resident experts from the fast buffer and takes the slow path (host DMA,
-modeled on CPU) for cold hits.
-
-This adapter owns the mapping and the data movement callback; the policy
-loop is the unmodified paper Algorithm 1.
+Deprecation shim over :class:`repro.tiering.ExpertStreamResource`: the access
+stream is the router's token->expert assignments; a *page* is one expert's
+weight block for one layer group (page_id = group * n_experts + expert).
+One :class:`~repro.tiering.ResourceSpec` sources BOTH the tier geometry and
+the daemon quota (the old class constructed two separate ``TierParams``,
+which could silently diverge).  New code should register an ``"experts"``
+resource on a shared multiplexed daemon instead.
 """
 from __future__ import annotations
 
@@ -20,13 +14,9 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.daemon import DaemonParams, NeoMemDaemon
-from repro.core.neoprof import NeoProfParams, neoprof_init, neoprof_observe
-from repro.core.sketch import SketchParams
-from repro.core.tiering import TierParams, tier_init
-from repro.core import tiering
+from repro import tiering as tm
+from repro.core.adapters.base import LegacyTierAdapter
 
 
 @dataclasses.dataclass
@@ -38,23 +28,17 @@ class ExpertTierConfig:
     sketch_width: int = 1 << 14
 
 
-class ExpertCache:
+class ExpertCache(LegacyTierAdapter):
     """Host-side manager wiring NeoProf <-> TieredStore for expert weights."""
 
     def __init__(self, cfg: ExpertTierConfig, migrate_fn=None):
         self.cfg = cfg
-        n_pages = cfg.n_groups * cfg.n_experts
-        self.prof_params = NeoProfParams(
-            sketch=SketchParams(width=cfg.sketch_width))
-        self.prof = neoprof_init(self.prof_params)
-        self.tier = tier_init(TierParams(
-            num_pages=n_pages, num_slots=cfg.n_groups * cfg.hot_slots,
-            quota_pages=cfg.quota_pages))
-        self.daemon = NeoMemDaemon(
-            self.prof_params,
-            TierParams(n_pages, cfg.n_groups * cfg.hot_slots, cfg.quota_pages),
-            DaemonParams(quota_pages=cfg.quota_pages),
-            migrate_fn=migrate_fn)
+        spec = tm.ResourceSpec(
+            name="experts", n_pages=cfg.n_groups * cfg.n_experts,
+            hot_slots=cfg.n_groups * cfg.hot_slots,
+            quota_pages=cfg.quota_pages, sketch_width=cfg.sketch_width)
+        super().__init__(tm.ExpertStreamResource(
+            spec, n_experts=cfg.n_experts, migrate_fn=migrate_fn))
 
     def page_ids(self, router_idx: jax.Array, group_ids: jax.Array) -> jax.Array:
         """(..., k) expert indices + per-row group ids -> flat page stream."""
@@ -62,27 +46,4 @@ class ExpertCache:
 
     def observe_step(self, router_streams: jax.Array) -> None:
         """router_streams: (G, n_moe, B, S, k) from the forward pass."""
-        g = router_streams.shape[0]
-        group_ids = jnp.arange(g, dtype=jnp.int32).reshape(
-            (g,) + (1,) * (router_streams.ndim - 1))
-        pages = (group_ids * self.cfg.n_experts
-                 + router_streams.astype(jnp.int32)).reshape(-1)
-        # cap the per-step stream (NeoProf snoops at line rate; we subsample
-        # deterministically when the stream exceeds the block size)
-        if pages.shape[0] > 1 << 14:
-            stride = pages.shape[0] // (1 << 14)
-            pages = pages[::stride][: 1 << 14]
-        self.prof = neoprof_observe(self.prof, pages, self.prof_params)
-        self.tier = tiering.touch(self.tier, pages[: 4096])
-
-    def tick(self) -> None:
-        self.prof, self.tier = self.daemon.tick(self.prof, self.tier)
-
-    def residency(self) -> np.ndarray:
-        """page -> fast-slot (-1 if host-resident)."""
-        return np.asarray(self.tier.page_slot)
-
-    def hit_rate(self) -> float:
-        f = float(self.tier.fast_reads) + self.daemon.state.total_fast
-        s = float(self.tier.slow_reads) + self.daemon.state.total_slow
-        return f / max(f + s, 1.0)
+        self._h.observe(jnp.asarray(router_streams))

@@ -1,16 +1,11 @@
-"""Paged-KV tiering — NeoMem applied to long-context KV caches (§3.2).
+"""Paged-KV tiering shim — NeoMem applied to long-context KV caches (§3.2).
 
-The access stream is the set of page ids whose content contributed non-
-trivial attention mass at each decode step (the analogue of LLC misses to
-CXL memory: pages the model actually pulled from).  Between steps the daemon
-promotes sketch-hot pages from the host-resident full history into the
-fast-tier page slots that decode attends over (models.decode paged cache).
-
-Scoring stream construction: we feed NeoProf the pages ranked by their
-attention mass quantile — computed device-side from the paged kernel's
-per-page softmax denominators — so a page's "access count" is the number of
-steps it mattered.  This keeps the exact NeoMem machinery (sketch, hot
-buffer, threshold policy) unchanged.
+Deprecation shim: the stream encoding now lives in
+:class:`repro.tiering.KVPagesResource` (pages ranked by their attention
+softmax-mass quantile — see DESIGN.md §3.2) and the orchestration in the
+multiplexed :class:`repro.tiering.NeoMemDaemon`.  This class keeps the
+original ``KVTier`` surface for pre-existing callers; new code should
+register a ``"kv"`` resource on a shared daemon instead.
 """
 from __future__ import annotations
 
@@ -20,11 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.daemon import DaemonParams, NeoMemDaemon
-from repro.core.neoprof import NeoProfParams, neoprof_init, neoprof_observe
-from repro.core.sketch import SketchParams
-from repro.core.tiering import TierParams, tier_init
-from repro.core import tiering
+from repro import tiering as tm
+from repro.core.adapters.base import LegacyTierAdapter
 
 
 @dataclasses.dataclass
@@ -36,16 +28,16 @@ class KVTierConfig:
     mass_threshold: float = 0.02  # page matters if it carries >=2% softmax mass
 
 
-class KVTier:
+class KVTier(LegacyTierAdapter):
     def __init__(self, cfg: KVTierConfig, migrate_fn=None):
         self.cfg = cfg
-        self.prof_params = NeoProfParams(sketch=SketchParams(width=cfg.sketch_width))
-        self.prof = neoprof_init(self.prof_params)
-        tp = TierParams(cfg.n_pages_total, cfg.hot_slots, cfg.quota_pages)
-        self.tier = tier_init(tp)
-        self.daemon = NeoMemDaemon(self.prof_params, tp,
-                                   DaemonParams(quota_pages=cfg.quota_pages),
-                                   migrate_fn=migrate_fn)
+        spec = tm.ResourceSpec(
+            name="kv", n_pages=cfg.n_pages_total, hot_slots=cfg.hot_slots,
+            quota_pages=cfg.quota_pages, sketch_width=cfg.sketch_width,
+            touch_cap=1 << 14)
+        super().__init__(tm.KVPagesResource(
+            spec, mass_threshold=cfg.mass_threshold, migrate_fn=migrate_fn))
+        self.prof_params = spec.prof_params()
 
     @staticmethod
     def important_pages(page_mass: jax.Array, page_ids: jax.Array,
@@ -58,20 +50,9 @@ class KVTier:
 
     def observe_step(self, page_mass: np.ndarray | jax.Array,
                      page_ids: np.ndarray | jax.Array) -> None:
-        stream = self.important_pages(jnp.asarray(page_mass),
-                                      jnp.asarray(page_ids, jnp.int32),
-                                      self.cfg.mass_threshold)
-        self.prof = neoprof_observe(self.prof, stream, self.prof_params)
-        self.tier = tiering.touch(self.tier, stream)
-
-    def tick(self):
-        self.prof, self.tier = self.daemon.tick(self.prof, self.tier)
+        self._h.observe(jnp.asarray(page_mass),
+                        jnp.asarray(page_ids, jnp.int32))
 
     def resident_pages(self) -> np.ndarray:
         sp = np.asarray(self.tier.slot_page)
         return sp[sp >= 0]
-
-    def hit_rate(self) -> float:
-        f = float(self.tier.fast_reads) + self.daemon.state.total_fast
-        s = float(self.tier.slow_reads) + self.daemon.state.total_slow
-        return f / max(f + s, 1.0)

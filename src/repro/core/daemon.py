@@ -1,15 +1,14 @@
-"""NeoMem daemon — the kernel-side orchestration loop (paper §III/§V).
+"""Legacy single-resource NeoMem daemon — a deprecation shim.
 
-Responsibilities (paper Fig. 5 (5)):
-  * every ``migration_interval`` steps: drain NeoProf's hot-page buffer and
-    promote (quota-bounded) via the TieredStore;
-  * every ``threshold_update_period`` steps: run Algorithm 1 against the
-    NeoProf histogram / bandwidth / ping-pong / error-bound readings;
-  * every ``clear_interval`` steps: reset NeoProf counters (sketch epoch bump).
+The orchestration loop now lives in :mod:`repro.tiering` (a multiplexed
+daemon driving N resources on one cadence with a shared quota budget).
+This module keeps the original ``NeoMemDaemon(prof_params, tier_params)``
+surface — explicit ``tick(prof, tier)`` threading, ``.cmd`` / ``.policy`` /
+``.state`` attributes — as a thin wrapper over
+:class:`repro.tiering.TieredMemory` so pre-existing callers keep working.
 
-The paper expresses these cadences in wall time (10 ms / 5 s); here a "tick"
-is one model step, preserving the rate *hierarchy*
-(migration << threshold-update <= clear).
+New code should register a :class:`repro.tiering.TieredResource` with the
+multiplexed :class:`repro.tiering.NeoMemDaemon` instead.
 """
 from __future__ import annotations
 
@@ -19,43 +18,26 @@ from typing import Callable
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import tiering
-from repro.core.neoprof import NeoProfCommands, NeoProfParams, NeoProfState
-from repro.core.policy import PolicyParams, PolicyState, update_threshold
+from repro.core.neoprof import NeoProfParams, NeoProfState
+from repro.core.policy import PolicyParams, PolicyState
 from repro.core.tiering import TierParams, TierState
 
 
 @dataclasses.dataclass
 class DaemonParams:
+    """Legacy cadence params (quota defaults to 256, as before)."""
+
     migration_interval: int = 1        # ticks between promotion batches
     threshold_update_period: int = 8   # ticks between Algorithm-1 runs
     clear_interval: int = 64           # ticks between sketch resets
     quota_pages: int = 256             # per migration interval (m_quota)
 
 
-@dataclasses.dataclass
-class DaemonState:
-    tick: int = 0
-    migrated_this_period: int = 0
-    # Cumulative telemetry (the per-period tier counters are drained by the
-    # policy; lifetime totals live here)
-    total_fast: int = 0
-    total_slow: int = 0
-    total_promoted: int = 0
-    total_ping_pong: int = 0
-    # Telemetry traces (Fig. 14-style)
-    theta_trace: list = dataclasses.field(default_factory=list)
-    bw_trace: list = dataclasses.field(default_factory=list)
-    pp_trace: list = dataclasses.field(default_factory=list)
-
-
 class NeoMemDaemon:
     """Host-side daemon driving device-resident NeoProf + TieredStore.
 
     ``migrate_fn(promoted_pages, victim_slots)`` is the adapter callback that
-    applies the actual data movement (expert weights / KV pages / embedding
-    rows).  The daemon itself is data-agnostic, mirroring the kernel daemon
-    calling ``migrate_pages()``.
+    applies the actual data movement.  The daemon itself is data-agnostic.
     """
 
     def __init__(
@@ -66,83 +48,52 @@ class NeoMemDaemon:
         policy_params: PolicyParams | None = None,
         migrate_fn: Callable[[jnp.ndarray, jnp.ndarray], None] | None = None,
     ):
+        # Imported lazily: repro.core's package init imports this module,
+        # while repro.tiering.memory imports repro.core submodules.
+        from repro.tiering.memory import DaemonParams as _DaemonParams
+        from repro.tiering.memory import TieredMemory
+        from repro.tiering.stats import TierStats
+
         self.pp = prof_params
         self.tp = tier_params
         self.dp = daemon_params or DaemonParams()
-        # policy quota bound: 4x migration capacity per update period
-        # (equal-to-capacity degenerates into p starve/flood oscillation)
-        self.pol_params = policy_params or PolicyParams(
-            m_quota_pages=4 * self.dp.quota_pages * max(
-                1, self.dp.threshold_update_period // self.dp.migration_interval)
-        )
-        self.cmd = NeoProfCommands(prof_params)
-        self.policy = PolicyState.init(self.pol_params)
-        self.state = DaemonState()
+        self.mem = TieredMemory(
+            prof_params, tier_params,
+            daemon_params=_DaemonParams(
+                migration_interval=self.dp.migration_interval,
+                threshold_update_period=self.dp.threshold_update_period,
+                clear_interval=self.dp.clear_interval,
+                quota_pages=self.dp.quota_pages),
+            policy_params=policy_params)
+        self.pol_params = self.mem.pol_params
+        self.cmd = self.mem.cmd
+        self.stats = TierStats(name="legacy")
         self.migrate_fn = migrate_fn
-        self._pending = np.empty((0,), np.int64)  # hot pages awaiting quota
+        # p + tick carried across ticks (prof/tier are threaded by the caller)
+        self._mstate = self.mem.init()
+
+    @property
+    def policy(self) -> PolicyState:
+        return self.mem.policy_state(self._mstate, self.stats)
+
+    @property
+    def state(self):
+        from repro.tiering.stats import LegacyDaemonStateView
+        return LegacyDaemonStateView(
+            self.stats, tick_fn=lambda: int(self._mstate.tick))
+
+    @property
+    def _pending(self) -> np.ndarray:
+        return self.mem._pending
 
     # ------------------------------------------------------------------
     def tick(
         self, prof: NeoProfState, tier: TierState
     ) -> tuple[NeoProfState, TierState]:
         """One daemon tick: run whatever cadences are due."""
-        st, dp = self.state, self.dp
-        st.tick += 1
-
-        if st.tick % dp.migration_interval == 0:
-            prof, tier = self._migrate(prof, tier)
-
-        if st.tick % dp.threshold_update_period == 0:
-            prof, tier = self._update_threshold(prof, tier)
-
-        if st.tick % dp.clear_interval == 0:
-            prof = self.cmd.reset(prof)
-
-        return prof, tier
-
-    # ------------------------------------------------------------------
-    def _migrate(self, prof: NeoProfState, tier: TierState):
-        prof, hot = self.cmd.drain_hotpages(prof)
-        hot = np.concatenate([self._pending, np.asarray(hot, np.int64)])
-        if len(hot) == 0:
-            return prof, tier
-        k = self.dp.quota_pages
-        batch = np.full((k,), -1, np.int32)
-        take = min(k, len(hot))
-        batch[:take] = hot[:take]
-        self._pending = hot[take:][: 1 << 14]
-        tier, promoted, victims = tiering.promote(tier, jnp.asarray(batch), k)
-        if self.migrate_fn is not None:
-            self.migrate_fn(promoted, victims)
-        self.state.migrated_this_period += int(np.sum(np.asarray(promoted) >= 0))
-        return prof, tier
-
-    def _update_threshold(self, prof: NeoProfState, tier: TierState):
-        hist = self.cmd.get_hist(prof)
-        bw = self.cmd.bandwidth_util(prof)
-        err = self.cmd.get_error_bound(prof, hist)
-        tier, stats = tiering.drain_period_stats(tier)
-        promoted = int(stats["promoted"])
-        # Laplace-damped: a single bounce at low volume must not crash p
-        pp_ratio = float(stats["ping_pong"]) / max(
-            promoted, self.dp.quota_pages // 2, 1)
-        self.state.total_fast += int(stats["fast_reads"])
-        self.state.total_slow += int(stats["slow_reads"])
-        self.state.total_promoted += promoted
-        self.state.total_ping_pong += int(stats["ping_pong"])
-
-        # M = migration DEMAND (migrated + still-queued): Alg.1's quota
-        # constraint throttles when demand exceeds capacity, not merely
-        # when the migrator runs at capacity.
-        self.policy = update_threshold(
-            self.policy, self.pol_params, hist,
-            bandwidth_util=bw, ping_pong_ratio=pp_ratio,
-            migrated_pages=self.state.migrated_this_period + len(self._pending),
-            error_bound=err,
-        )
-        prof = self.cmd.set_threshold(prof, self.policy.theta)
-        self.state.migrated_this_period = 0
-        self.state.theta_trace.append(self.policy.theta)
-        self.state.bw_trace.append(bw)
-        self.state.pp_trace.append(pp_ratio)
-        return prof, tier
+        st = self._mstate._replace(prof=prof, tier=tier)
+        st, event = self.mem.tick(st, self.stats)
+        if event is not None and self.migrate_fn is not None:
+            self.migrate_fn(event.promoted, event.victims)
+        self._mstate = st
+        return st.prof, st.tier

@@ -21,8 +21,8 @@ import numpy as np
 
 from repro.core import tiering
 from repro.core.baselines import BaselineCosts
-from repro.core.neoprof import NeoProfCommands, NeoProfParams, neoprof_init, neoprof_observe
-from repro.core.policy import PolicyParams, PolicyState, update_threshold
+from repro.core.neoprof import NeoProfParams
+from repro.core.policy import PolicyParams
 from repro.core.sketch import SketchParams
 from repro.core.tiering import TierParams
 
@@ -213,29 +213,42 @@ def run_sim(
 
     methods: neomem | neomem-fixed | pte-scan | pebs | autonuma | tpp |
              first-touch
+
+    Every method drives the shared :class:`repro.tiering.TieredMemory` verbs
+    (enqueue / migrate / drain), so quota, pending-queue, and stats
+    arithmetic is the same code the serving daemon runs; the neomem methods
+    additionally use the profile / collect / update-threshold verbs.
     """
+    # Imported lazily: repro.core's package init imports this module, while
+    # repro.tiering imports repro.core submodules.
+    from repro.tiering.memory import DaemonParams, TieredMemory
+    from repro.tiering.stats import TierStats, drain_tier_stats
+
     mem = mem or MemModel()
     costs = costs or BaselineCosts()
     num_slots = max(1, int(n_pages * fast_ratio))
-    tier = tiering.tier_init(TierParams(n_pages, num_slots, quota_pages))
-    first_seen = np.zeros(n_pages, bool)
-    free_slots = num_slots
+    is_neomem = method.startswith("neomem")
 
-    prof = policy = cmd = baseline = None
-    pparams = None
-    if method.startswith("neomem"):
-        pparams = NeoProfParams(sketch=SketchParams(width=sketch_width, depth=sketch_depth))
-        prof = neoprof_init(pparams)
-        cmd = NeoProfCommands(pparams)
+    tmem = TieredMemory(
+        NeoProfParams(sketch=SketchParams(width=sketch_width, depth=sketch_depth)),
+        TierParams(n_pages, num_slots, quota_pages),
+        daemon_params=DaemonParams(
+            migration_interval=migration_interval,
+            threshold_update_period=threshold_update_period,
+            clear_interval=clear_interval, quota_pages=quota_pages),
         # policy quota bound: 4x the migration CAPACITY (paper's 256MB/s is
         # ~100x its typical demand; equal-to-capacity degenerates into a
         # starve/flood oscillation of p)
-        pol_params = PolicyParams(
-            m_quota_pages=4 * quota_pages * threshold_update_period)
-        policy = PolicyState.init(pol_params)
-        theta0 = fixed_theta if fixed_theta is not None else policy.theta
-        prof = cmd.set_threshold(prof, theta0)
-    else:
+        policy_params=PolicyParams(
+            m_quota_pages=4 * quota_pages * threshold_update_period),
+        fixed_theta=fixed_theta)
+    state = tmem.init()
+    stats = TierStats(name=method)
+    first_seen = np.zeros(n_pages, bool)
+    free_slots = num_slots
+
+    baseline = None
+    if not is_neomem:
         from repro.core import baselines as B
         mk = {
             "first-touch": B.FirstTouch,
@@ -247,9 +260,6 @@ def run_sim(
         baseline = mk(n_pages, num_slots, costs=costs)
 
     res = SimResult(method, 0.0, 0.0, 0.0, 0.0, 0, 0, 0, 0)
-    migrated_this_period = 0
-    pending = np.empty((0,), np.int64)   # hot pages awaiting quota
-    MAX_PENDING = 1 << 14
 
     if init_sweep:
         # Application init: sequentially touch every page once (e.g. array
@@ -257,109 +267,85 @@ def run_sim(
         # the LOW pages — for every method alike, as on a real kernel.
         for lo in range(0, n_pages, 1 << 14):
             blk = np.arange(lo, min(lo + (1 << 14), n_pages), dtype=np.int64)
-            tier, free_slots, _ = _first_touch_alloc(first_seen, free_slots, blk, tier)
-            tier = tiering.touch(tier, jnp.asarray(blk, jnp.int32))
-        tier, init_stats = tiering.drain_period_stats(tier)
+            tier, free_slots, _ = _first_touch_alloc(
+                first_seen, free_slots, blk, state.tier)
+            state = tmem.touch(state._replace(tier=tier),
+                               jnp.asarray(blk, jnp.int32))
         # init accesses count toward runtime (via the final access_time
         # recomputation) but not toward promotion/ping-pong stats
-        res.fast_hits += int(init_stats["fast_reads"])
-        res.slow_hits += int(init_stats["slow_reads"])
+        init_stats = TierStats()
+        state = state._replace(tier=drain_tier_stats(state.tier, init_stats))
+        stats.fast_reads += init_stats.fast_reads
+        stats.slow_reads += init_stats.slow_reads
 
     for b, pages in enumerate(stream):
         # --- allocation (uniform across methods) ---------------------------
-        tier, free_slots, _ = _first_touch_alloc(first_seen, free_slots, pages, tier)
+        tier, free_slots, _ = _first_touch_alloc(
+            first_seen, free_slots, pages, state.tier)
+        state = state._replace(tier=tier)
 
         # --- profiling ------------------------------------------------------
-        hot: np.ndarray = np.empty((0,), np.int64)
-        if prof is not None:
+        if is_neomem:
             # NeoProf sits in the SLOW tier's controller: it only ever sees
             # accesses that miss the fast tier (paper Fig. 2).  Promoted
             # pages vanish from its stream, so the counter quantile
             # continuously re-targets the hottest still-slow pages.
-            page_slot = np.asarray(tier.page_slot)
+            page_slot = np.asarray(state.tier.page_slot)
             slow_pages = pages[page_slot[pages] < 0]
             blk = np.full(len(pages), -1, np.int64)
             blk[: len(slow_pages)] = slow_pages
-            prof = neoprof_observe(
-                prof, jnp.asarray(blk, jnp.int32), pparams,
+            state = tmem.profile(
+                state, jnp.asarray(blk, jnp.int32),
                 rd_bytes=float(len(slow_pages) * mem.line_bytes),
                 budget_bytes=float(len(pages) * mem.line_bytes) * 2.0,
             )
             if (b + 1) % migration_interval == 0:
-                prof, hot = cmd.drain_hotpages(prof)
+                state, _ = tmem.collect(state, stats)
                 res.overhead_time += costs.neoprof_readout
         else:
             hot = baseline.observe(pages)
             if (b + 1) % epoch_blocks == 0:
                 hot = np.union1d(hot, baseline.epoch_end())
+            if method != "first-touch":
+                tmem.enqueue(hot)
 
-        # --- migration (quota-bounded; overflow stays queued) -----------------
-        n_migrated = 0
+        # --- migration (quota-bounded; overflow stays queued) ---------------
         if method != "first-touch":
-            hot = np.concatenate([pending, np.asarray(hot, np.int64)])
-        if len(hot) > 0 and method != "first-touch":
-            take = min(quota_pages, len(hot))
-            batch = np.full((quota_pages,), -1, np.int32)
-            batch[:take] = hot[:take]
-            pending = hot[take:][:MAX_PENDING]
-            tier, promoted, _ = tiering.promote(tier, jnp.asarray(batch), quota_pages)
-            n_migrated = int(np.sum(np.asarray(promoted) >= 0))
-            res.migration_time += mem.migration_time(n_migrated)
-            migrated_this_period += n_migrated
+            state, event = tmem.migrate(state, stats)
+            if event is not None:
+                res.migration_time += mem.migration_time(event.n_promoted)
 
-        # --- access accounting ------------------------------------------------
-        tier = tiering.touch(tier, jnp.asarray(pages, jnp.int32))
+        # --- access accounting ----------------------------------------------
+        state = tmem.touch(state, jnp.asarray(pages, jnp.int32))
 
-        # --- NeoMem policy cadence --------------------------------------------
-        if prof is not None and (b + 1) % threshold_update_period == 0:
-            hist = cmd.get_hist(prof)
-            bw = cmd.bandwidth_util(prof)
-            err = cmd.get_error_bound(prof, hist)
-            tier, stats = tiering.drain_period_stats(tier)
-            res.fast_hits += int(stats["fast_reads"])
-            res.slow_hits += int(stats["slow_reads"])
-            res.promoted += int(stats["promoted"])
-            res.ping_pong += int(stats["ping_pong"])
-            if fixed_theta is None:
-                # Laplace-damped ping-pong ratio: at low promotion
-                # volume a single bounce would read as pp=1.0 and crash p
-                # (beta=2 quarters it) into a starvation equilibrium.
-                pp_ratio = float(stats["ping_pong"]) / max(
-                    int(stats["promoted"]), quota_pages // 2, 1)
-                # M = migration DEMAND (migrated + still queued): the quota
-                # constraint (Alg.1 line 13) throttles when demand exceeds
-                # capacity, not merely when running at capacity.
-                demand = migrated_this_period + len(pending)
-                policy = update_threshold(policy, pol_params,
-                                          hist, bw, pp_ratio, demand, err)
-                prof = cmd.set_threshold(prof, policy.theta)
-            migrated_this_period = 0
-            if collect_trace:
-                res.trace.append({
-                    "block": b, "theta": int(policy.theta), "bw": bw, "err": err,
-                    "hit_rate": res.hit_rate,
-                })
-        elif prof is None and (b + 1) % threshold_update_period == 0:
-            tier, stats = tiering.drain_period_stats(tier)
-            res.fast_hits += int(stats["fast_reads"])
-            res.slow_hits += int(stats["slow_reads"])
-            res.promoted += int(stats["promoted"])
-            res.ping_pong += int(stats["ping_pong"])
-            if collect_trace:
-                res.trace.append({"block": b, "hit_rate": res.hit_rate})
+        # --- NeoMem policy cadence -------------------------------------------
+        if (b + 1) % threshold_update_period == 0:
+            if is_neomem:
+                state = tmem.update_threshold(state, stats)
+                if collect_trace:
+                    res.trace.append({
+                        "block": b, "theta": stats.theta_trace[-1],
+                        "bw": stats.bw_trace[-1], "err": stats.err_trace[-1],
+                        "hit_rate": stats.drained_hit_rate,
+                    })
+            else:
+                state = tmem.drain(state, stats)
+                if collect_trace:
+                    res.trace.append({"block": b,
+                                      "hit_rate": stats.drained_hit_rate})
 
-        if prof is not None and (b + 1) % clear_interval == 0:
-            prof = cmd.reset(prof)
+        if is_neomem and (b + 1) % clear_interval == 0:
+            state = tmem.clear(state)
 
     # flush remaining period stats
-    tier, stats = tiering.drain_period_stats(tier)
-    res.fast_hits += int(stats["fast_reads"])
-    res.slow_hits += int(stats["slow_reads"])
-    res.promoted += int(stats["promoted"])
-    res.ping_pong += int(stats["ping_pong"])
+    state = tmem.drain(state, stats)
     if baseline is not None:
         res.overhead_time += baseline.overhead
 
+    res.fast_hits = stats.fast_reads
+    res.slow_hits = stats.slow_reads
+    res.promoted = stats.promoted
+    res.ping_pong = stats.ping_pong
     res.access_time = mem.access_time(res.fast_hits, res.slow_hits)
     res.runtime = res.access_time + res.migration_time + res.overhead_time
     return res

@@ -88,15 +88,16 @@ def touch(state: TierState, page_ids: jax.Array) -> TierState:
 
 
 def _victim_rank(state: TierState) -> jax.Array:
-    """2Q eviction preference as a sortable key (lower = evict first)."""
+    """2Q eviction preference as a sortable key (lower = evict first).
+
+    Class order: free(0) < A1-unref(1) < A1-ref(2) < Am-unref(3) < Am-ref(4),
+    i.e. occupied slots rank 1 + 2*active + referenced.
+    """
     free = state.slot_page < 0
-    klass = (
-        jnp.where(free, 0, 0)
-        + jnp.where(~free & ~state.active & ~state.referenced, 1, 0)
-        + jnp.where(~free & ~state.active & state.referenced, 2, 0)
-        + jnp.where(~free & state.active & ~state.referenced, 3, 0)
-        + jnp.where(~free & state.active & state.referenced, 4, 0)
-    )
+    klass = jnp.where(
+        free, 0,
+        1 + 2 * state.active.astype(jnp.int32)
+        + state.referenced.astype(jnp.int32))
     # within a class, older last_touch evicts first (int32-safe packing:
     # class in the top bits, wrapped step counter below)
     return klass.astype(jnp.int32) * (1 << 24) + (state.last_touch & ((1 << 24) - 1))

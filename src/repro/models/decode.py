@@ -186,12 +186,16 @@ def _decode_block(p, shared, cfg, kind, x_t, cache, pos, aux, ep_axes):
 
 
 def decode_step(cfg: ArchConfig, params, cache, token, *, aux_embeds=None,
-                ep_axes=None):
+                ep_axes=None, return_streams: bool = False):
     """token: (B,1) int32 -> (logits (B,1,V), new cache).
 
     For encoder-decoder configs (whisper) ``aux_embeds`` must be the
     PRE-ENCODED encoder output (see transformer.encode) — serving computes it
-    once at prefill; re-running the encoder per token would be wasteful."""
+    once at prefill; re-running the encoder per token would be wasteful.
+
+    With ``return_streams`` the result is (logits, cache, streams) where
+    ``streams["router"]`` is the (G, n_moe, B, 1, k) token->expert stream —
+    the NeoMem profiling stream for the serve engine's expert resource."""
     pos = cache["pos"]
     x = embed_apply(params["embed"], token)
     if cfg.embed_scale:
@@ -211,20 +215,26 @@ def decode_step(cfg: ArchConfig, params, cache, token, *, aux_embeds=None,
     def group_body(carry, gp_and_cache):
         x, = carry
         gp, gc = gp_and_cache
+        a_local = {"aux_embeds": aux.get("aux_embeds"),
+                   "enc_out": aux.get("enc_out"), "router_streams": []}
         new_gc = []
         for i, kind in enumerate(cfg.pattern):
-            x, c = _decode_block(gp[i], shared, cfg, kind, x, gc[i], pos, aux,
-                                 ep_axes)
+            x, c = _decode_block(gp[i], shared, cfg, kind, x, gc[i], pos,
+                                 a_local, ep_axes)
             new_gc.append(c)
-        return (x,), new_gc
+        streams = a_local["router_streams"]
+        out = jnp.stack(streams) if streams else jnp.zeros((0,), jnp.int32)
+        return (x,), (new_gc, out)
 
-    (x,), new_blocks = jax.lax.scan(group_body, (x,),
-                                    (params["blocks"], cache["blocks"]))
+    (x,), (new_blocks, router) = jax.lax.scan(group_body, (x,),
+                                              (params["blocks"], cache["blocks"]))
     x = apply_norm(cfg.norm, params["final_norm"], x)
     logits = logits_apply(params["embed"], x, cfg.final_softcap)
     new_cache = {"blocks": new_blocks, "pos": pos + 1}
     if new_pro:
         new_cache["prologue"] = new_pro
+    if return_streams:
+        return logits, new_cache, {"router": router if router.size else None}
     return logits, new_cache
 
 
@@ -383,11 +393,12 @@ def _paged_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes, page_t,
 
 
 def decode_step_paged(cfg: ArchConfig, params, cache, token, *, page_t: int,
-                      ep_axes=None, smesh=None):
+                      ep_axes=None, smesh=None, return_streams: bool = False):
     """Long-context decode over the NeoMem fast tier (hot pages only).
 
     ``smesh``: {"mesh": Mesh, "axes": (...)} shards page slots across devices
-    with cross-device flash-decode combining (production path)."""
+    with cross-device flash-decode combining (production path).
+    ``return_streams`` as in :func:`decode_step`."""
     pos = cache["pos"]
     x = embed_apply(params["embed"], token)
     if cfg.embed_scale:
@@ -405,25 +416,30 @@ def decode_step_paged(cfg: ArchConfig, params, cache, token, *, page_t: int,
     def group_body(carry, gp_and_cache):
         x, = carry
         gp, gc = gp_and_cache
+        a_local: dict[str, Any] = {"router_streams": []}
         new_gc = []
         for i, kind in enumerate(cfg.pattern):
             if kind in ("mamba", "mlstm", "slstm"):
                 x, c = _decode_block(gp[i], shared, cfg, kind, x, gc[i], pos,
-                                     aux, ep_axes)
+                                     a_local, ep_axes)
             elif kind == "shared_attn":
                 x, c = _paged_attn_block(shared, cfg, "attn", x, gc[i], pos,
-                                         aux, ep_axes, page_t, smesh)
+                                         a_local, ep_axes, page_t, smesh)
             else:
-                x, c = _paged_attn_block(gp[i], cfg, kind, x, gc[i], pos, aux,
-                                         ep_axes, page_t, smesh)
+                x, c = _paged_attn_block(gp[i], cfg, kind, x, gc[i], pos,
+                                         a_local, ep_axes, page_t, smesh)
             new_gc.append(c)
-        return (x,), new_gc
+        streams = a_local["router_streams"]
+        out = jnp.stack(streams) if streams else jnp.zeros((0,), jnp.int32)
+        return (x,), (new_gc, out)
 
-    (x,), new_blocks = jax.lax.scan(group_body, (x,),
-                                    (params["blocks"], cache["blocks"]))
+    (x,), (new_blocks, router) = jax.lax.scan(group_body, (x,),
+                                              (params["blocks"], cache["blocks"]))
     x = apply_norm(cfg.norm, params["final_norm"], x)
     logits = logits_apply(params["embed"], x, cfg.final_softcap)
     new_cache = {"blocks": new_blocks, "pos": pos + 1}
     if new_pro:
         new_cache["prologue"] = new_pro
+    if return_streams:
+        return logits, new_cache, {"router": router if router.size else None}
     return logits, new_cache

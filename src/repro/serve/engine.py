@@ -1,4 +1,4 @@
-"""Serving engine: batched prefill + decode with NeoMem-tiered KV/experts.
+"""Serving engine: batched prefill + decode with NeoMem-tiered resources.
 
 ServeEngine drives a small continuous-batching loop on top of the
 models.decode steps:
@@ -7,10 +7,18 @@ models.decode steps:
                                 dense cache (short contexts), or seeds the
                                 paged fast tier (long contexts);
   * step()                    — one decode step for the active batch;
-  * NeoMem integration        — per migration_interval the KVTier / Expert-
-                                Cache daemons promote sketch-hot pages into
-                                the fast tier between steps (never inside
-                                the jitted hot path).
+  * NeoMem integration        — ANY set of registered tiered resources
+                                ("kv", "experts", "embeddings", or custom
+                                registry kinds) multiplexed on ONE daemon:
+                                per migration_interval the daemon promotes
+                                sketch-hot pages for every resource under a
+                                shared quota budget, between steps (never
+                                inside the jitted hot path).
+
+Access streams fed per decode step (DESIGN.md §3): the token column
+(embedding rows), the router's token->expert ids surfaced by
+``decode_step(..., return_streams=True)`` (experts), and the resident
+paged-KV window weighted by per-page fill (KV pages).
 
 This is the substrate behind examples/serve_longctx.py and the serving
 benchmarks; the dry-run lowers the same step functions at production shapes.
@@ -18,14 +26,13 @@ benchmarks; the dry-run lowers the same step functions at production shapes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import tiering as tm
 from repro.configs.base import ArchConfig
-from repro.core.adapters.kv_tier import KVTier, KVTierConfig
 from repro.models import decode as dec
 from repro.models import transformer as tr
 
@@ -37,6 +44,14 @@ class ServeConfig:
     hot_slots: int = 16
     paged: bool = False
     migration_interval: int = 8     # decode steps between daemon ticks
+    # Tiered resources to register ("kv" is implied by paged=True).
+    resources: tuple[str, ...] = ()
+    kv_quota: int = 64
+    kv_mass_threshold: float = 0.02
+    expert_hot_slots: int = 4       # HBM-resident experts per layer group
+    expert_quota: int = 32
+    embed_hot_slots: int = 64       # hot vocab row-blocks kept HBM-resident
+    embed_quota: int = 64
 
 
 class ServeEngine:
@@ -46,24 +61,60 @@ class ServeEngine:
         self.params = params
         self.scfg = scfg
         self.ep = ep_axes
-        self.kv_tier: KVTier | None = None
-        if scfg.paged:
-            self.kv_tier = KVTier(KVTierConfig(
-                n_pages_total=scfg.max_seq // scfg.page_t,
-                hot_slots=scfg.hot_slots))
+        self.daemon = tm.NeoMemDaemon()
+        self._register_resources()
+        self._want_streams = "experts" in self.daemon
         self._decode = jax.jit(self._decode_fn)
         self._decode_paged = jax.jit(self._decode_paged_fn)
         self.cache = None
         self.step_count = 0
 
+    def _register_resources(self) -> None:
+        cfg, scfg = self.cfg, self.scfg
+        kinds = set(scfg.resources)
+        if scfg.paged:
+            kinds.add("kv")
+        for kind in sorted(kinds):
+            if kind == "kv":
+                if not scfg.paged:
+                    raise ValueError("the 'kv' resource requires paged=True")
+                spec = tm.ResourceSpec(
+                    "kv", n_pages=scfg.max_seq // scfg.page_t,
+                    hot_slots=scfg.hot_slots, quota_pages=scfg.kv_quota)
+                res = tm.make_resource(
+                    "kv", spec, mass_threshold=scfg.kv_mass_threshold)
+            elif kind == "experts":
+                if cfg.moe is None:
+                    raise ValueError(
+                        f"arch {cfg.name!r} has no MoE layers to tier")
+                spec = tm.ResourceSpec(
+                    "experts", n_pages=cfg.n_groups * cfg.moe.n_experts,
+                    hot_slots=cfg.n_groups * scfg.expert_hot_slots,
+                    quota_pages=scfg.expert_quota)
+                res = tm.make_resource("experts", spec,
+                                       n_experts=cfg.moe.n_experts)
+            elif kind == "embeddings":
+                rows = tm.EMBED_ROWS_PER_PAGE
+                spec = tm.ResourceSpec(
+                    "embeddings", n_pages=(cfg.vocab + rows - 1) // rows,
+                    hot_slots=scfg.embed_hot_slots,
+                    quota_pages=scfg.embed_quota)
+                res = tm.make_resource("embeddings", spec)
+            else:
+                raise KeyError(f"unknown serve resource kind {kind!r}; "
+                               f"known: {tm.resource_kinds()}")
+            self.daemon.register(res)
+
     # -- jitted step bodies -------------------------------------------------
     def _decode_fn(self, params, cache, token, aux):
         return dec.decode_step(self.cfg, params, cache, token,
-                               aux_embeds=aux, ep_axes=self.ep)
+                               aux_embeds=aux, ep_axes=self.ep,
+                               return_streams=self._want_streams)
 
     def _decode_paged_fn(self, params, cache, token):
         return dec.decode_step_paged(self.cfg, params, cache, token,
-                                     page_t=self.scfg.page_t, ep_axes=self.ep)
+                                     page_t=self.scfg.page_t, ep_axes=self.ep,
+                                     return_streams=self._want_streams)
 
     # -- public API -----------------------------------------------------------
     def prefill(self, tokens: np.ndarray, aux_embeds=None):
@@ -76,30 +127,20 @@ class ServeEngine:
                 self.cfg, b, self.scfg.hot_slots, self.scfg.page_t)
             # seed by streaming the prompt through paged decode (keeps one
             # code path; production would bulk-write pages from prefill)
-            last = None
+            logits = None
             for t in range(s):
-                last, self.cache = self._decode_paged(
-                    self.params, self.cache, jnp.asarray(tokens[:, t:t + 1]))
-                self._maybe_tick()
-            return np.asarray(jnp.argmax(last[:, -1], -1))
+                logits = self._advance(jnp.asarray(tokens[:, t:t + 1]))
+            return np.asarray(jnp.argmax(logits[:, -1], -1))
         self.cache = dec.init_cache(self.cfg, b, self.scfg.max_seq)
         logits, _ = dec.prefill(self.cfg, self.params, jnp.asarray(tokens),
                                 aux_embeds=aux_embeds, ep_axes=self.ep)
         # replay tokens into the cache (single-sourced decode path)
         for t in range(s):
-            _, self.cache = self._decode(self.params, self.cache,
-                                         jnp.asarray(tokens[:, t:t + 1]),
-                                         self.aux)
+            self._advance(jnp.asarray(tokens[:, t:t + 1]))
         return np.asarray(jnp.argmax(logits[:, -1], -1))
 
     def step(self, token: np.ndarray) -> np.ndarray:
-        tok = jnp.asarray(token)[:, None]
-        if self.scfg.paged:
-            logits, self.cache = self._decode_paged(self.params, self.cache, tok)
-        else:
-            logits, self.cache = self._decode(self.params, self.cache, tok,
-                                              self.aux)
-        self._maybe_tick()
+        logits = self._advance(jnp.asarray(token)[:, None])
         return np.asarray(jnp.argmax(logits[:, -1], -1))
 
     def generate(self, prompt: np.ndarray, n_tokens: int,
@@ -111,9 +152,66 @@ class ServeEngine:
             out.append(nxt)
         return np.stack(out, axis=1)
 
-    # -- NeoMem daemon cadence --------------------------------------------------
-    def _maybe_tick(self):
+    # -- decode + NeoMem observation/cadence ----------------------------------
+    def _advance(self, tok: jax.Array):
+        """One decode step: run the jitted body, feed the tiering streams,
+        tick the multiplexed daemon on its cadence."""
+        if self.scfg.paged:
+            out = self._decode_paged(self.params, self.cache, tok)
+        else:
+            out = self._decode(self.params, self.cache, tok, self.aux)
+        if self._want_streams:
+            logits, self.cache, streams = out
+        else:
+            (logits, self.cache), streams = out, {}
+        self._observe(tok, streams)
+        self._maybe_tick()
+        return logits
+
+    def _observe(self, tok: jax.Array, streams: dict) -> None:
+        if "embeddings" in self.daemon:
+            self.daemon.observe("embeddings", tok)
+        if "experts" in self.daemon and streams.get("router") is not None:
+            self.daemon.observe("experts", streams["router"])
+        if "kv" in self.daemon:
+            mass, ids = self._kv_page_stream()
+            if ids.size:
+                self.daemon.observe("kv", mass, ids)
+
+    def _kv_page_stream(self) -> tuple[jax.Array, jax.Array]:
+        """Resident paged-KV window as (per-page mass, logical page ids).
+
+        The paged cache is a ring of hot slots; per-page fill (page_len)
+        stands in for attention mass — full pages carry proportionally more
+        softmax mass on average.  Group 0 / batch row 0 is representative:
+        all rows advance in lockstep (one appended token per step)."""
+        entry = next((c for c in self.cache["blocks"]
+                      if isinstance(c, dict) and "page_len" in c), None)
+        if entry is None:
+            return jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.int32)
+        plen = np.asarray(entry["page_len"])[0, 0]           # (n_slots,)
+        cur = int(np.asarray(entry["cur_slot"])[0, 0])
+        n_slots = plen.shape[0]
+        # cur_slot advances eagerly when a page fills, so the page being
+        # filled at cur is always floor(pos / page_t) — also on boundaries.
+        cur_page = int(self.cache["pos"]) // self.scfg.page_t
+        slots = np.arange(n_slots)
+        ids = cur_page - (cur - slots) % n_slots
+        ids = np.where((plen > 0) & (ids >= 0), ids, -1)
+        return jnp.asarray(plen, jnp.float32), jnp.asarray(ids, jnp.int32)
+
+    def _maybe_tick(self) -> None:
         self.step_count += 1
-        if self.kv_tier is not None \
+        if self.daemon.resources \
                 and self.step_count % self.scfg.migration_interval == 0:
-            self.kv_tier.tick()
+            self.daemon.tick()
+
+    # -- telemetry ------------------------------------------------------------
+    def tier_stats(self) -> dict[str, dict]:
+        """Per-resource telemetry rows (the BENCH_serve.json schema)."""
+        return self.daemon.snapshot()
+
+    @property
+    def kv_tier(self) -> tm.ResourceHandle | None:
+        """Deprecated: the KV resource handle (None when not paged)."""
+        return self.daemon["kv"] if "kv" in self.daemon else None

@@ -1,0 +1,28 @@
+"""repro.tiering — the unified NeoMem tiering surface (DESIGN.md §1).
+
+One API for every consumer of slow memory:
+
+  ResourceSpec / TieredResource / registry ... declare a consumer
+  TieredMemory / TieredMemoryState ........... pure profiling + placement
+  NeoMemDaemon (multiplexed) ................. one loop, N resources
+  TierStats .................................. one telemetry schema
+
+The legacy ``repro.core.adapters`` classes and ``repro.core.daemon`` are
+thin deprecation shims over this package.
+"""
+from repro.tiering.daemon import (  # noqa: F401
+    NeoMemDaemon, ResourceHandle, split_quota,
+)
+from repro.tiering.memory import (  # noqa: F401
+    DaemonParams, MigrationEvent, TieredMemory, TieredMemoryState, lookup,
+    observe,
+)
+from repro.tiering.resource import (  # noqa: F401
+    ResourceSpec, StreamResource, TieredResource, make_resource,
+    register_resource, resource_kinds,
+)
+from repro.tiering.resources import (  # noqa: F401
+    EMBED_ROWS_PER_PAGE, EmbedRowsResource, ExpertStreamResource,
+    KVPagesResource,
+)
+from repro.tiering.stats import TierStats, drain_tier_stats, hit_rate  # noqa: F401

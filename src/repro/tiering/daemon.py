@@ -1,0 +1,164 @@
+"""Multiplexed NeoMem daemon: one cadence, N tiered resources, one budget.
+
+The software analogue of one NeoProf device serving every consumer of slow
+memory (paper §III): the serve engine / trainer registers each resource
+(KV pages, MoE experts, embedding rows, ...) once, and a single host-side
+loop drives all of them on the shared cadence hierarchy
+
+    migration  <<  threshold-update  <=  sketch-clear
+
+with ONE migration-quota budget per interval, split across resources in
+proportion to their *servable* queued demand (each share capped by that
+resource's own promotion-batch quota) — the multiplexed form of
+Algorithm 1's quota constraint: a bursty resource is throttled toward its
+fair share instead of starving the others, and demand it could not promote
+anyway never draws budget away from resources that can.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.tiering.memory import (DaemonParams, MigrationEvent, TieredMemory,
+                                  TieredMemoryState, lookup)
+from repro.tiering.resource import TieredResource
+from repro.tiering.stats import TierStats
+
+
+def split_quota(budget: int, demands: dict[str, int],
+                caps: dict[str, int] | None = None) -> dict[str, int]:
+    """Largest-remainder proportional split of the shared migration budget.
+
+    ``caps`` bounds each share by what that resource can actually promote in
+    one batch (its static quota width) — un-servable backlog must not draw
+    budget away from resources that could use it.
+    """
+    eff = {n: min(d, caps[n]) if caps else d for n, d in demands.items()}
+    total = sum(eff.values())
+    if total <= budget:
+        return eff
+    exact = {n: budget * d / total for n, d in eff.items()}
+    shares = {n: int(e) for n, e in exact.items()}
+    leftover = budget - sum(shares.values())
+    for n in sorted(eff, key=lambda n: exact[n] - shares[n], reverse=True):
+        if leftover <= 0:
+            break
+        shares[n] += 1    # stays <= eff[n]: exact < eff and eff is integral
+        leftover -= 1
+    return shares
+
+
+class ResourceHandle:
+    """A registered resource's live view: state pytree + stats + encoder."""
+
+    def __init__(self, name: str, resource: TieredResource, mem: TieredMemory):
+        self.name = name
+        self.resource = resource
+        self.mem = mem
+        self.state: TieredMemoryState = mem.init()
+        self.stats = TierStats(name=name)
+
+    def observe(self, *observation, **kw) -> None:
+        """Encode a model-side observation and feed profiler + tier."""
+        stream = self.resource.encode_stream(*observation)
+        cap = self.resource.spec.touch_cap
+        self.state = self.mem.observe(self.state, stream,
+                                      touch_pages=stream[:cap], **kw)
+
+    def observe_pages(self, pages, *, touch_pages=None, **kw) -> None:
+        """Feed an already-encoded page-id stream (bypasses the encoder)."""
+        self.state = self.mem.observe(self.state, pages,
+                                      touch_pages=touch_pages, **kw)
+
+    def lookup(self, page_ids) -> tuple[jax.Array, jax.Array]:
+        return lookup(self.state, page_ids)
+
+    def hit_rate(self) -> float:
+        return self.mem.hit_rate(self.state, self.stats)
+
+    def snapshot(self) -> dict:
+        row = self.stats.as_row()
+        row["hit_rate"] = self.hit_rate()
+        return row
+
+
+class NeoMemDaemon:
+    """One daemon loop multiplexed across every registered tiered resource."""
+
+    def __init__(self, params: DaemonParams | None = None):
+        self.dp = params or DaemonParams()
+        self.resources: dict[str, ResourceHandle] = {}
+        self._tick = 0
+
+    # -- registration --------------------------------------------------------
+    def register(self, resource: TieredResource, *,
+                 policy_params=None, fixed_theta=None) -> ResourceHandle:
+        """Register a resource; its ResourceSpec is the single sizing source."""
+        spec = resource.spec
+        if spec.name in self.resources:
+            raise ValueError(f"resource {spec.name!r} already registered")
+        mem = TieredMemory.from_spec(
+            spec, daemon_params=DaemonParams(
+                migration_interval=self.dp.migration_interval,
+                threshold_update_period=self.dp.threshold_update_period,
+                clear_interval=self.dp.clear_interval,
+                quota_pages=spec.quota_pages),
+            policy_params=policy_params, fixed_theta=fixed_theta)
+        handle = ResourceHandle(spec.name, resource, mem)
+        self.resources[spec.name] = handle
+        return handle
+
+    def __getitem__(self, name: str) -> ResourceHandle:
+        return self.resources[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.resources
+
+    def observe(self, name: str, *observation, **kw) -> None:
+        self.resources[name].observe(*observation, **kw)
+
+    # -- the multiplexed loop ------------------------------------------------
+    @property
+    def budget(self) -> int:
+        """Shared promotion budget per migration interval."""
+        if self.dp.quota_pages is not None:
+            return self.dp.quota_pages
+        return sum(h.mem.quota for h in self.resources.values())
+
+    def tick(self) -> dict[str, MigrationEvent]:
+        """One daemon tick: run whatever cadences are due, for ALL resources."""
+        self._tick += 1
+        t, dp = self._tick, self.dp
+        events: dict[str, MigrationEvent] = {}
+
+        if t % dp.migration_interval == 0:
+            demands: dict[str, int] = {}
+            for name, h in self.resources.items():
+                h.state, demands[name] = h.mem.collect(h.state, h.stats)
+            caps = {n: h.mem.quota for n, h in self.resources.items()}
+            shares = split_quota(self.budget, demands, caps)
+            for name, h in self.resources.items():
+                h.state, event = h.mem.migrate(h.state, h.stats,
+                                               quota=shares.get(name, 0))
+                if event is not None:
+                    h.resource.apply_migration(event.promoted, event.victims)
+                    events[name] = event
+
+        if t % dp.threshold_update_period == 0:
+            for h in self.resources.values():
+                h.state = h.mem.update_threshold(h.state, h.stats)
+
+        if t % dp.clear_interval == 0:
+            for h in self.resources.values():
+                h.state = h.mem.clear(h.state)
+        return events
+
+    # -- telemetry -----------------------------------------------------------
+    def stats(self) -> dict[str, TierStats]:
+        return {n: h.stats for n, h in self.resources.items()}
+
+    def hit_rates(self) -> dict[str, float]:
+        return {n: h.hit_rate() for n, h in self.resources.items()}
+
+    def snapshot(self) -> dict[str, dict]:
+        """Per-resource flat telemetry rows (benchmark / logging schema)."""
+        return {n: h.snapshot() for n, h in self.resources.items()}

@@ -1,0 +1,268 @@
+"""TieredMemory — profiling + placement for ONE resource, as a pytree facade.
+
+Replaces the mutable ``self.prof`` / ``self.tier`` pattern of the old
+adapters: all device-resident state (NeoProf sketch/buffers, TieredStore
+placement, Algorithm-1 scalars) lives in a single :class:`TieredMemoryState`
+pytree threaded through pure functions, so profiling composes with
+jit/pjit/shard_map.  The split mirrors the paper's hardware/software line:
+
+  * :func:`observe` / :func:`lookup` — pure, jittable, run inside the model
+    step (the device side: NeoProf snoop + tier hit accounting);
+  * :meth:`TieredMemory.tick` — host side, runs the daemon cadences
+    (migration << threshold-update <= clear, paper §V) against the state and
+    returns promotion batches for the owner to apply.
+
+The host side keeps exactly two non-pytree artifacts: the overflow queue of
+hot pages awaiting quota (a numpy FIFO, as in the kernel daemon) and the
+:class:`~repro.tiering.stats.TierStats` telemetry accumulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import tiering
+from repro.core.neoprof import (NeoProfCommands, NeoProfParams, NeoProfState,
+                                neoprof_init, neoprof_observe)
+from repro.core.policy import PolicyParams, PolicyState
+from repro.core.policy import update_threshold as _algorithm1
+from repro.core.tiering import TierParams, TierState
+from repro.tiering.stats import TierStats, drain_tier_stats
+from repro.tiering.stats import hit_rate as _hit_rate
+
+MAX_PENDING = 1 << 14        # overflow queue bound (pages awaiting quota)
+
+
+@dataclasses.dataclass
+class DaemonParams:
+    """Cadence hierarchy (DESIGN.md §1.3): migration ticks are the base rate.
+
+    ``quota_pages=None`` resolves context-dependently: a single-resource
+    TieredMemory uses its TierParams quota; the multiplexed daemon uses the
+    sum of its resources' quotas as the shared budget.
+    """
+
+    migration_interval: int = 1        # ticks between promotion batches
+    threshold_update_period: int = 8   # ticks between Algorithm-1 runs
+    clear_interval: int = 64           # ticks between sketch resets
+    quota_pages: int | None = None     # promotion budget per interval
+
+
+class TieredMemoryState(NamedTuple):
+    """Everything the tiering layer knows about one resource, as one pytree."""
+
+    prof: NeoProfState   # NeoProf: sketch + hot buffer + state monitor (+ θ)
+    tier: TierState      # TieredStore: placement maps + 2Q bits + counters
+    p: jax.Array         # () f32 — Algorithm-1 hot-fraction scalar
+    tick: jax.Array      # () i32 — daemon tick counter
+
+
+@dataclasses.dataclass
+class MigrationEvent:
+    """One promotion batch: copy slow[promoted[i]] into fast victims[i]."""
+
+    promoted: jax.Array   # (k,) int32 page ids, -1 = no-op lane
+    victims: jax.Array    # (k,) int32 slot ids, -1 = no-op lane
+    n_promoted: int
+
+
+@functools.partial(jax.jit, static_argnames=("prof_params",))
+def observe(
+    state: TieredMemoryState,
+    pages: jax.Array,
+    prof_params: NeoProfParams,
+    touch_pages: jax.Array | None = None,
+    rd_bytes=0.0, wr_bytes=0.0, budget_bytes=0.0,
+) -> TieredMemoryState:
+    """Pure device-side step: NeoProf snoop + tier hit/2Q accounting.
+
+    ``touch_pages`` lets callers profile one stream but account hits on a
+    (typically capped) other — defaults to ``pages``.
+    """
+    prof = neoprof_observe(state.prof, pages, prof_params,
+                           rd_bytes=rd_bytes, wr_bytes=wr_bytes,
+                           budget_bytes=budget_bytes)
+    tier = tiering.touch(state.tier,
+                         pages if touch_pages is None else touch_pages)
+    return state._replace(prof=prof, tier=tier)
+
+
+def lookup(state: TieredMemoryState,
+           page_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Pure: (fast-slot or -1, hit mask) for a batch of page ids."""
+    return tiering.lookup(state.tier, page_ids)
+
+
+class TieredMemory:
+    """Facade owning the params + host-side daemon verbs for one resource.
+
+    Construct from explicit params or via ``ResourceSpec.memory()`` /
+    ``TieredMemory.from_spec`` — either way ONE object sources the prof,
+    tier, and quota geometry (no way to hand the daemon a different
+    TierParams than the tier was initialized with).
+    """
+
+    def __init__(
+        self,
+        prof_params: NeoProfParams,
+        tier_params: TierParams,
+        daemon_params: DaemonParams | None = None,
+        policy_params: PolicyParams | None = None,
+        fixed_theta: int | None = None,
+    ):
+        self.pp = prof_params
+        self.tp = tier_params
+        self.dp = daemon_params or DaemonParams()
+        self.quota = (self.dp.quota_pages if self.dp.quota_pages is not None
+                      else tier_params.quota_pages)
+        # policy quota bound: 4x migration capacity per update period
+        # (equal-to-capacity degenerates into p starve/flood oscillation)
+        self.pol_params = policy_params or PolicyParams(
+            m_quota_pages=4 * self.quota * max(
+                1, self.dp.threshold_update_period // self.dp.migration_interval))
+        self.fixed_theta = fixed_theta
+        self.cmd = NeoProfCommands(prof_params)
+        self._pending = np.empty((0,), np.int64)
+
+    @classmethod
+    def from_spec(cls, spec, daemon_params=None, policy_params=None,
+                  fixed_theta=None) -> "TieredMemory":
+        return cls(spec.prof_params(), spec.tier_params(),
+                   daemon_params=daemon_params, policy_params=policy_params,
+                   fixed_theta=fixed_theta)
+
+    # -- state ---------------------------------------------------------------
+    def init(self, key: jax.Array | None = None) -> TieredMemoryState:
+        prof = neoprof_init(self.pp, key)
+        theta0 = (self.fixed_theta if self.fixed_theta is not None
+                  else self.pol_params.theta_min)
+        return TieredMemoryState(
+            prof=self.cmd.set_threshold(prof, theta0),
+            tier=tiering.tier_init(self.tp),
+            p=jnp.float32(self.pol_params.p_init),
+            tick=jnp.zeros((), jnp.int32),
+        )
+
+    def observe(self, state: TieredMemoryState, pages, *, touch_pages=None,
+                rd_bytes=0.0, wr_bytes=0.0, budget_bytes=0.0) -> TieredMemoryState:
+        return observe(state, pages, self.pp, touch_pages=touch_pages,
+                       rd_bytes=rd_bytes, wr_bytes=wr_bytes,
+                       budget_bytes=budget_bytes)
+
+    def profile(self, state: TieredMemoryState, pages, *, rd_bytes=0.0,
+                wr_bytes=0.0, budget_bytes=0.0) -> TieredMemoryState:
+        """NeoProf snoop only (callers that account tier hits separately)."""
+        return state._replace(prof=neoprof_observe(
+            state.prof, pages, self.pp, rd_bytes=rd_bytes, wr_bytes=wr_bytes,
+            budget_bytes=budget_bytes))
+
+    def touch(self, state: TieredMemoryState, pages) -> TieredMemoryState:
+        """Tier hit/2Q accounting only."""
+        return state._replace(tier=tiering.touch(state.tier, pages))
+
+    def policy_state(self, state: TieredMemoryState,
+                     stats: TierStats | None = None) -> PolicyState:
+        """Reconstruct the Algorithm-1 view from the pytree (+ telemetry)."""
+        last = lambda tr, d: tr[-1] if stats is not None and tr else d
+        return PolicyState(
+            p=float(state.p), theta=int(state.prof.theta),
+            last_B=last(stats.bw_trace if stats else [], 0.0),
+            last_P=last(stats.pp_trace if stats else [], 0.0),
+            last_E=int(last(stats.err_trace if stats else [], 0)),
+        )
+
+    def hit_rate(self, state: TieredMemoryState, stats: TierStats) -> float:
+        return _hit_rate(state.tier, stats)
+
+    # -- daemon verbs (host side) ---------------------------------------------
+    def collect(self, state: TieredMemoryState,
+                stats: TierStats) -> tuple[TieredMemoryState, int]:
+        """Drain NeoProf's hot buffer into the pending FIFO; return demand."""
+        prof, hot = self.cmd.drain_hotpages(state.prof)
+        self.enqueue(hot)
+        stats.pending = len(self._pending)
+        return state._replace(prof=prof), len(self._pending)
+
+    def enqueue(self, pages) -> None:
+        """Queue externally-detected hot pages (baseline profilers, tests)."""
+        self._pending = np.concatenate(
+            [self._pending, np.asarray(pages, np.int64)])[: 4 * MAX_PENDING]
+
+    def migrate(self, state: TieredMemoryState, stats: TierStats,
+                quota: int | None = None,
+                ) -> tuple[TieredMemoryState, MigrationEvent | None]:
+        """Promote up to ``quota`` pending pages (batch width stays static)."""
+        k = self.quota                       # static promote width (no retrace)
+        take = min(quota if quota is not None else k, k, len(self._pending))
+        if take <= 0:
+            stats.pending = len(self._pending)
+            return state, None
+        batch = np.full((k,), -1, np.int32)
+        batch[:take] = self._pending[:take]
+        self._pending = self._pending[take:][:MAX_PENDING]
+        tier, promoted, victims = tiering.promote(
+            state.tier, jnp.asarray(batch), k)
+        n = int(np.sum(np.asarray(promoted) >= 0))
+        stats.migrated_this_period += n
+        stats.pending = len(self._pending)
+        return state._replace(tier=tier), MigrationEvent(promoted, victims, n)
+
+    def drain(self, state: TieredMemoryState,
+              stats: TierStats) -> TieredMemoryState:
+        """Drain tier period counters into stats (the one shared code path)."""
+        return state._replace(tier=drain_tier_stats(state.tier, stats))
+
+    def update_threshold(self, state: TieredMemoryState,
+                         stats: TierStats) -> TieredMemoryState:
+        """One Algorithm-1 period: read NeoProf, drain stats, retune θ."""
+        hist = self.cmd.get_hist(state.prof)
+        bw = self.cmd.bandwidth_util(state.prof)
+        err = self.cmd.get_error_bound(state.prof, hist)
+        state = self.drain(state, stats)
+        period = stats.last_period
+        # Laplace-damped: a single bounce at low volume must not crash p
+        pp_ratio = float(period["ping_pong"]) / max(
+            int(period["promoted"]), self.quota // 2, 1)
+        if self.fixed_theta is None:
+            # M = migration DEMAND (migrated + still-queued): Alg.1's quota
+            # constraint throttles when demand exceeds capacity, not merely
+            # when the migrator runs at capacity.
+            demand = stats.migrated_this_period + len(self._pending)
+            pol = _algorithm1(
+                PolicyState(p=float(state.p), theta=int(state.prof.theta)),
+                self.pol_params, hist, bandwidth_util=bw,
+                ping_pong_ratio=pp_ratio, migrated_pages=demand,
+                error_bound=err)
+            state = state._replace(
+                prof=self.cmd.set_threshold(state.prof, pol.theta),
+                p=jnp.float32(pol.p))
+        stats.migrated_this_period = 0
+        stats.theta_trace.append(int(state.prof.theta))
+        stats.bw_trace.append(float(bw))
+        stats.pp_trace.append(pp_ratio)
+        stats.err_trace.append(int(err))
+        stats.p_trace.append(float(state.p))
+        return state
+
+    def clear(self, state: TieredMemoryState) -> TieredMemoryState:
+        return state._replace(prof=self.cmd.reset(state.prof))
+
+    def tick(self, state: TieredMemoryState, stats: TierStats,
+             ) -> tuple[TieredMemoryState, MigrationEvent | None]:
+        """Single-resource cadence driver (the multiplexed daemon drives the
+        verbs itself so it can split the quota budget across resources)."""
+        state = state._replace(tick=state.tick + 1)
+        t, dp, event = int(state.tick), self.dp, None
+        if t % dp.migration_interval == 0:
+            state, _ = self.collect(state, stats)
+            state, event = self.migrate(state, stats)
+        if t % dp.threshold_update_period == 0:
+            state = self.update_threshold(state, stats)
+        if t % dp.clear_interval == 0:
+            state = self.clear(state)
+        return state, event

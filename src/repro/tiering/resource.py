@@ -1,0 +1,113 @@
+"""TieredResource — the one API every consumer of slow memory speaks.
+
+NeoMem's core claim is that one device-side profiler plus one OS policy loop
+serves *every* consumer of CXL memory.  The software analogue (DESIGN.md §1):
+a resource adapts itself to the tiering layer by implementing two methods —
+
+  * ``encode_stream(*observation) -> page-id stream`` — a PURE function
+    mapping whatever the model already computes (router indices, attention
+    page masses, token ids) onto the flat page-id address space NeoProf
+    profiles.  Jittable; -1 entries are padding.
+  * ``apply_migration(promoted_pages, victim_slots)`` — the host-side data
+    movement callback for a promotion batch (expert weights, KV pages,
+    embedding rows).  The tiering layer itself never touches payload data.
+
+Everything else — sketch profiling, Algorithm 1, 2Q placement, stats — is
+shared machinery in :mod:`repro.tiering.memory` / :mod:`repro.tiering.daemon`.
+
+A :class:`ResourceSpec` is the SINGLE source of sizing truth: prof params,
+tier params, and the daemon's quota all derive from one spec object, so a
+resource cannot accidentally hand different geometries to the tier and the
+daemon (the bug the old ExpertCache had).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Protocol, runtime_checkable
+
+import jax
+
+from repro.core.neoprof import NeoProfParams
+from repro.core.sketch import SketchParams
+from repro.core.tiering import TierParams
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceSpec:
+    """Sizing for one tiered resource — the only place geometry is declared."""
+
+    name: str
+    n_pages: int                  # logical pages in the slow tier
+    hot_slots: int                # fast-tier capacity (pages)
+    quota_pages: int = 64         # promotions per migration interval
+    sketch_width: int = 1 << 14
+    sketch_depth: int = 2
+    stream_cap: int = 1 << 14     # max page ids fed to NeoProf per step
+    touch_cap: int = 4096         # max page ids fed to tier accounting per step
+
+    def prof_params(self) -> NeoProfParams:
+        return NeoProfParams(sketch=SketchParams(
+            width=self.sketch_width, depth=self.sketch_depth))
+
+    def tier_params(self) -> TierParams:
+        return TierParams(num_pages=self.n_pages, num_slots=self.hot_slots,
+                          quota_pages=self.quota_pages)
+
+
+@runtime_checkable
+class TieredResource(Protocol):
+    """What a consumer of tiered memory must provide (see module docstring)."""
+
+    spec: ResourceSpec
+
+    def encode_stream(self, *observation) -> jax.Array:
+        """Pure: model-side observation -> (N,) int32 page-id stream, -1 pad."""
+        ...
+
+    def apply_migration(self, promoted_pages, victim_slots) -> None:
+        """Host-side data movement for one promotion batch (may be a no-op)."""
+        ...
+
+
+class StreamResource:
+    """Convenience base: spec + optional ``migrate_fn`` data-movement hook."""
+
+    def __init__(self, spec: ResourceSpec,
+                 migrate_fn: Callable[[jax.Array, jax.Array], None] | None = None):
+        self.spec = spec
+        self.migrate_fn = migrate_fn
+
+    def apply_migration(self, promoted_pages, victim_slots) -> None:
+        if self.migrate_fn is not None:
+            self.migrate_fn(promoted_pages, victim_slots)
+
+
+# ---------------------------------------------------------------------------
+# Registry: resource kind -> class.  The serve engine / examples look tiered
+# resources up by name ("kv", "experts", "embeddings") so new consumers can
+# be plugged in without touching the engine.
+# ---------------------------------------------------------------------------
+
+_REGISTRY: dict[str, type] = {}
+
+
+def register_resource(kind: str):
+    """Class decorator: register a TieredResource implementation by name."""
+
+    def deco(cls):
+        cls.kind = kind
+        _REGISTRY[kind] = cls
+        return cls
+
+    return deco
+
+
+def resource_kinds() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def make_resource(kind: str, *args, **kwargs) -> TieredResource:
+    if kind not in _REGISTRY:
+        raise KeyError(
+            f"unknown tiered resource {kind!r}; known: {resource_kinds()}")
+    return _REGISTRY[kind](*args, **kwargs)

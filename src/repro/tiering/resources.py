@@ -1,0 +1,79 @@
+"""The three built-in tiered resources: KV pages, MoE experts, vocab rows.
+
+Each is a ~30-line stream encoder over :class:`~repro.tiering.resource
+.StreamResource` — the adapter surface the old ``core/adapters`` classes
+hand-wired three times now reduces to (DESIGN.md §3):
+
+  §3.1 experts ..... router token->expert ids, page = (group, expert)
+  §3.2 KV pages .... pages carrying non-trivial attention softmax mass
+  §3.3 embeddings .. token ids mapped to vocab row-blocks
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.tiering.resource import ResourceSpec, StreamResource, register_resource
+
+EMBED_ROWS_PER_PAGE = 64
+
+
+def _subsample(pages: jax.Array, cap: int) -> jax.Array:
+    """Deterministic stride subsampling to the NeoProf line-rate block size."""
+    if pages.shape[0] > cap:
+        pages = pages[:: pages.shape[0] // cap][:cap]
+    return pages
+
+
+@register_resource("kv")
+class KVPagesResource(StreamResource):
+    """Paged-KV cache (§3.2): a page is hot if it carries attention mass.
+
+    The access stream is the set of page ids whose content contributed
+    non-trivial softmax mass at a decode step — the analogue of LLC misses
+    to CXL memory: pages the model actually pulled from.
+    """
+
+    def __init__(self, spec: ResourceSpec, mass_threshold: float = 0.02,
+                 migrate_fn=None):
+        super().__init__(spec, migrate_fn)
+        self.mass_threshold = mass_threshold
+
+    def encode_stream(self, page_mass: jax.Array,
+                      page_ids: jax.Array) -> jax.Array:
+        """(P,) per-page softmax mass + ids -> ids with cold pages masked -1."""
+        total = jnp.maximum(jnp.sum(page_mass), 1e-30)
+        keep = page_mass / total >= self.mass_threshold
+        return jnp.where(keep, page_ids.astype(jnp.int32), -1).reshape(-1)
+
+
+@register_resource("experts")
+class ExpertStreamResource(StreamResource):
+    """MoE expert weights (§3.1): page_id = group * n_experts + expert."""
+
+    def __init__(self, spec: ResourceSpec, n_experts: int, migrate_fn=None):
+        super().__init__(spec, migrate_fn)
+        self.n_experts = n_experts
+
+    def encode_stream(self, router_streams: jax.Array) -> jax.Array:
+        """(G, n_moe, ..., k) router expert indices -> flat page stream."""
+        g = router_streams.shape[0]
+        group_ids = jnp.arange(g, dtype=jnp.int32).reshape(
+            (g,) + (1,) * (router_streams.ndim - 1))
+        pages = (group_ids * self.n_experts
+                 + router_streams.astype(jnp.int32)).reshape(-1)
+        return _subsample(pages, self.spec.stream_cap)
+
+
+@register_resource("embeddings")
+class EmbedRowsResource(StreamResource):
+    """Vocab tables (§3.3): the access stream is the model's own input."""
+
+    def __init__(self, spec: ResourceSpec,
+                 rows_per_page: int = EMBED_ROWS_PER_PAGE, migrate_fn=None):
+        super().__init__(spec, migrate_fn)
+        self.rows_per_page = rows_per_page
+
+    def encode_stream(self, tokens: jax.Array) -> jax.Array:
+        pages = (tokens.reshape(-1) // self.rows_per_page).astype(jnp.int32)
+        return _subsample(pages, self.spec.stream_cap)

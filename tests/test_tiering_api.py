@@ -1,0 +1,235 @@
+"""Unit tests for the unified repro.tiering surface.
+
+Covers: the TieredResource registry + stream encoders, the TieredMemoryState
+pytree + pure observe/lookup, the multiplexed daemon's shared-quota split,
+the ExpertCache single-spec regression (daemon and tier geometry must agree),
+and the pinned 2Q eviction preference order.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import tiering as tm
+from repro.core import tiering as tier_lib
+from repro.core.adapters.expert_cache import ExpertCache, ExpertTierConfig
+from repro.core.tiering import TierParams, tier_init
+
+
+# ---------------------------------------------------------------------------
+# registry + encoders
+# ---------------------------------------------------------------------------
+
+def test_registry_has_builtin_kinds():
+    kinds = tm.resource_kinds()
+    assert {"kv", "experts", "embeddings"} <= set(kinds)
+    with pytest.raises(KeyError):
+        tm.make_resource("no-such-kind", None)
+
+
+def test_kv_encoder_masks_low_mass_pages():
+    spec = tm.ResourceSpec("kv", n_pages=16, hot_slots=4)
+    res = tm.make_resource("kv", spec, mass_threshold=0.25)
+    mass = jnp.asarray([0.7, 0.2, 0.1, 0.0])
+    ids = jnp.asarray([3, 5, 7, 9], jnp.int32)
+    out = np.asarray(res.encode_stream(mass, ids))
+    np.testing.assert_array_equal(out, [3, -1, -1, -1])
+
+
+def test_expert_encoder_flattens_group_pages():
+    spec = tm.ResourceSpec("experts", n_pages=2 * 4, hot_slots=2)
+    res = tm.make_resource("experts", spec, n_experts=4)
+    # (G=2, n_moe=1, B=1, S=2, k=1)
+    streams = jnp.asarray([[[[[0], [3]]]], [[[[1], [2]]]]], jnp.int32)
+    out = np.asarray(res.encode_stream(streams))
+    np.testing.assert_array_equal(out, [0, 3, 4 + 1, 4 + 2])
+
+
+def test_embed_encoder_maps_rows_to_pages():
+    spec = tm.ResourceSpec("embeddings", n_pages=8, hot_slots=2)
+    res = tm.make_resource("embeddings", spec, rows_per_page=64)
+    out = np.asarray(res.encode_stream(jnp.asarray([0, 63, 64, 129], jnp.int32)))
+    np.testing.assert_array_equal(out, [0, 0, 1, 2])
+
+
+def test_encoder_subsamples_to_stream_cap():
+    spec = tm.ResourceSpec("embeddings", n_pages=8, hot_slots=2, stream_cap=128)
+    res = tm.make_resource("embeddings", spec)
+    out = res.encode_stream(jnp.zeros((1000,), jnp.int32))
+    assert out.shape[0] <= 128
+
+
+# ---------------------------------------------------------------------------
+# TieredMemory: pytree state, pure observe/lookup
+# ---------------------------------------------------------------------------
+
+def _small_mem(**kw):
+    spec = tm.ResourceSpec("t", n_pages=64, hot_slots=8, quota_pages=4,
+                           sketch_width=1 << 8, **kw)
+    return tm.TieredMemory.from_spec(spec), spec
+
+
+def test_state_is_a_pytree_of_arrays():
+    mem, _ = _small_mem()
+    state = mem.init()
+    leaves = jax.tree.leaves(state)
+    assert leaves and all(hasattr(x, "shape") for x in leaves)
+    # round-trips through flatten/unflatten (checkpointable / jit-carryable)
+    rebuilt = jax.tree.unflatten(jax.tree.structure(state), leaves)
+    assert int(rebuilt.tick) == 0 and float(rebuilt.p) == float(state.p)
+
+
+def test_observe_is_pure_and_jittable():
+    mem, _ = _small_mem()
+    s0 = mem.init()
+    pages = jnp.asarray([1, 2, 2, 3, -1], jnp.int32)
+    s1 = mem.observe(s0, pages)
+    s2 = mem.observe(s0, pages)           # same input, same output
+    assert int(s0.tier.slow_reads) == 0   # input state unchanged
+    np.testing.assert_array_equal(np.asarray(s1.prof.sketch.counts),
+                                  np.asarray(s2.prof.sketch.counts))
+    # explicit jit over the facade's pure function
+    jitted = jax.jit(lambda s, p: tm.observe(s, p, mem.pp))
+    s3 = jitted(s0, pages)
+    np.testing.assert_array_equal(np.asarray(s3.tier.fast_reads),
+                                  np.asarray(s1.tier.fast_reads))
+
+
+def test_lookup_reports_residency():
+    mem, _ = _small_mem()
+    state = mem.init()
+    mem.enqueue(np.asarray([5, 9]))
+    stats = tm.TierStats()
+    state, event = mem.migrate(state, stats)
+    assert event is not None and event.n_promoted == 2
+    slots, hit = tm.lookup(state, jnp.asarray([5, 9, 11], jnp.int32))
+    assert np.asarray(hit).tolist() == [True, True, False]
+    assert (np.asarray(slots)[:2] >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# multiplexed daemon: quota split + independent stats
+# ---------------------------------------------------------------------------
+
+def test_split_quota_proportional_largest_remainder():
+    shares = tm.split_quota(10, {"a": 30, "b": 10})
+    assert shares == {"a": 8, "b": 2}      # 7.5/2.5 -> 8/2
+    assert tm.split_quota(10, {"a": 3, "b": 2}) == {"a": 3, "b": 2}  # fits
+    assert sum(tm.split_quota(7, {"a": 5, "b": 5, "c": 5}).values()) == 7
+
+
+def test_split_quota_caps_unservable_backlog():
+    """A huge backlog one resource can't promote anyway must not draw budget
+    away from a resource that can use it."""
+    shares = tm.split_quota(128, {"kv": 1000, "experts": 100},
+                            caps={"kv": 64, "experts": 64})
+    assert shares == {"kv": 64, "experts": 64}
+    shares = tm.split_quota(96, {"kv": 1000, "experts": 32},
+                            caps={"kv": 64, "experts": 64})
+    assert shares == {"kv": 64, "experts": 32}
+    # still proportional when the capped demand exceeds the budget
+    shares = tm.split_quota(64, {"kv": 64, "experts": 64},
+                            caps={"kv": 64, "experts": 64})
+    assert shares == {"kv": 32, "experts": 32}
+
+
+def test_multiplexed_daemon_independent_resources():
+    daemon = tm.NeoMemDaemon(tm.DaemonParams(
+        migration_interval=1, threshold_update_period=4, clear_interval=16))
+    specs = {
+        "embeddings": tm.ResourceSpec("embeddings", n_pages=128, hot_slots=16,
+                                      quota_pages=8, sketch_width=1 << 10),
+        "experts": tm.ResourceSpec("experts", n_pages=32, hot_slots=8,
+                                   quota_pages=8, sketch_width=1 << 10),
+    }
+    emb = daemon.register(tm.make_resource("embeddings", specs["embeddings"]))
+    exp = daemon.register(tm.make_resource("experts", specs["experts"],
+                                           n_experts=16))
+    rng = np.random.default_rng(0)
+    for _ in range(24):
+        toks = (rng.zipf(1.5, 512) % (128 * 64)).astype(np.int32)
+        daemon.observe("embeddings", jnp.asarray(toks))
+        # experts 0..3 hot in both groups: (G=2, 1, B=2, S=8, k=2)
+        idx = rng.choice(4, size=(2, 1, 2, 8, 2)).astype(np.int32)
+        daemon.observe("experts", jnp.asarray(idx))
+        daemon.tick()
+    assert set(daemon.stats()) == {"embeddings", "experts"}
+    # both resources promoted under the shared budget and count stats apart
+    assert emb.stats.promoted + emb.stats.migrated_this_period > 0
+    assert exp.stats.promoted + exp.stats.migrated_this_period > 0
+    assert exp.hit_rate() > 0.5           # 4 hot experts x 2 groups fit in 8
+    assert emb.hit_rate() != exp.hit_rate()
+    # the hot experts became resident
+    resident = set(np.flatnonzero(np.asarray(exp.state.tier.page_slot) >= 0))
+    hot = {g * 16 + e for g in range(2) for e in range(4)}
+    assert len(resident & hot) >= 6
+
+
+def test_shared_budget_caps_total_promotions_per_interval():
+    daemon = tm.NeoMemDaemon(tm.DaemonParams(
+        migration_interval=1, threshold_update_period=64, clear_interval=64,
+        quota_pages=8))   # explicit shared budget < sum of per-resource quotas
+    a = daemon.register(tm.make_resource("embeddings", tm.ResourceSpec(
+        "embeddings", n_pages=256, hot_slots=64, quota_pages=8,
+        sketch_width=1 << 10)))
+    b = daemon.register(tm.make_resource("embeddings", tm.ResourceSpec(
+        "b", n_pages=256, hot_slots=64, quota_pages=8,
+        sketch_width=1 << 10)))
+    # force demand directly through the pending queues
+    a.mem.enqueue(np.arange(20))
+    b.mem.enqueue(np.arange(20))
+    daemon.tick()
+    total = (a.stats.migrated_this_period + b.stats.migrated_this_period)
+    assert total <= 8
+    assert a.stats.migrated_this_period > 0
+    assert b.stats.migrated_this_period > 0
+
+
+def test_duplicate_registration_rejected():
+    daemon = tm.NeoMemDaemon()
+    spec = tm.ResourceSpec("embeddings", n_pages=8, hot_slots=2)
+    daemon.register(tm.make_resource("embeddings", spec))
+    with pytest.raises(ValueError):
+        daemon.register(tm.make_resource("embeddings", spec))
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions
+# ---------------------------------------------------------------------------
+
+def test_expert_cache_single_spec_for_tier_and_daemon():
+    """Regression: one ResourceSpec must flow to BOTH the tier and daemon
+    (the old ExpertCache built two separate TierParams)."""
+    cfg = ExpertTierConfig(n_groups=3, n_experts=8, hot_slots=2,
+                           quota_pages=16)
+    cache = ExpertCache(cfg)
+    spec_tp = cache.spec.tier_params()
+    assert cache.daemon.tp == spec_tp                  # daemon geometry
+    assert cache.tier.page_slot.shape[0] == spec_tp.num_pages
+    assert cache.tier.slot_page.shape[0] == spec_tp.num_slots
+    assert cache.handle.mem.quota == cfg.quota_pages   # promotion batch width
+    assert spec_tp.num_pages == 3 * 8
+    assert spec_tp.num_slots == 3 * 2
+
+
+def test_victim_rank_prefers_2q_order():
+    """Pin the 2Q eviction preference:
+    free < A1-unref < A1-ref < Am-unref < Am-ref, ties by last_touch."""
+    tp = TierParams(num_pages=16, num_slots=6, quota_pages=4)
+    ts = tier_init(tp)
+    # slot: 0 free | 1 A1-unref | 2 A1-ref | 3 Am-unref | 4 Am-ref | 5 A1-unref(older)
+    ts = ts._replace(
+        slot_page=jnp.asarray([-1, 1, 2, 3, 4, 5], jnp.int32),
+        active=jnp.asarray([False, False, False, True, True, False]),
+        referenced=jnp.asarray([False, False, True, False, True, False]),
+        last_touch=jnp.asarray([0, 7, 3, 3, 3, 2], jnp.int32),
+    )
+    rank = np.asarray(tier_lib._victim_rank(ts))
+    order = np.argsort(rank, kind="stable").tolist()
+    #             free, older A1-unref, newer A1-unref, A1-ref, Am-unref, Am-ref
+    assert order == [0, 5, 1, 2, 3, 4]
+    # behavioral check: a promotion takes the free slot first, then slot 5
+    ts2, promoted, victims = tier_lib.promote(
+        ts, jnp.asarray([9, 10, -1, -1], jnp.int32), 4)
+    v = np.asarray(victims)[:2].tolist()
+    assert v == [0, 5], v
