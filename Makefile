@@ -1,6 +1,6 @@
 PYTEST ?= python -m pytest
 
-.PHONY: test test-fast test-dist dryrun bench-serve
+.PHONY: test test-fast test-dist dryrun bench-serve validate-bench
 
 # full tier-1 suite (includes slow 8-host-device subprocess parity tests)
 test:
@@ -18,7 +18,11 @@ test-dist:
 dryrun:
 	PYTHONPATH=src python -m repro.launch.dryrun
 
-# short serving benchmark (tokens/s + per-resource tier hit rates); writes
-# BENCH_serve.json so the perf trajectory is recorded per commit
+# short serving benchmark (tokens/s + tier hit rates + migration bytes/s);
+# writes BENCH_serve.json so the perf trajectory is recorded per commit
 bench-serve:
 	PYTHONPATH=src:. python benchmarks/run.py --quick --only serve_bench
+
+# check BENCH_serve.json against the schema documented in benchmarks/README.md
+validate-bench:
+	PYTHONPATH=src:. python benchmarks/validate_bench.py

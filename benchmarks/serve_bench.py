@@ -1,9 +1,14 @@
-"""Serving benchmark: tokens/s + per-resource fast-tier hit rates.
+"""Serving benchmark: tokens/s + tier hit rates + measured migration bytes/s.
 
 Drives the ServeEngine's multi-resource tiering path (paged KV + embedding
 rows, plus experts on the MoE arch) on smoke-scale models and records the
 perf trajectory into ``BENCH_serve.json`` — one row per served arch with
-throughput and the unified TierStats snapshot of every registered resource.
+throughput, the unified TierStats snapshot of every registered resource,
+and the migration data plane's measured traffic (payload bytes the daemon
+epochs physically moved, next to the hit rates they bought).
+
+The emitted schema is documented key-by-key in benchmarks/README.md and
+validated in CI by benchmarks/validate_bench.py.
 """
 from __future__ import annotations
 
@@ -44,6 +49,8 @@ def _bench(arch: str, scfg_kw: dict, batch: int, prompt_len: int,
     out = eng.generate(prompts, n_tokens=n_tokens)
     dt = time.perf_counter() - t0
     assert out.shape == (batch, n_tokens)
+    resources = eng.tier_stats()
+    moved = sum(r["migration_bytes"] for r in resources.values())
     return {
         "arch": arch,
         "batch": batch,
@@ -51,7 +58,9 @@ def _bench(arch: str, scfg_kw: dict, batch: int, prompt_len: int,
         "n_tokens": n_tokens,
         "tokens_per_s": batch * n_tokens / dt,
         "wall_s": dt,
-        "resources": eng.tier_stats(),
+        "migration_bytes": moved,
+        "migration_bytes_per_s": moved / dt,
+        "resources": resources,
     }
 
 
@@ -63,7 +72,8 @@ def run(quick: bool = False):
         hits = " ".join(f"{name}_hit={res['hit_rate']:.3f}"
                         for name, res in sorted(r["resources"].items()))
         emit(f"serve_{r['arch']}", r["wall_s"] * 1e6 / (r['batch'] * n_tokens),
-             f"tok_s={r['tokens_per_s']:.1f} {hits}")
+             f"tok_s={r['tokens_per_s']:.1f} "
+             f"mig_B_s={r['migration_bytes_per_s']:.0f} {hits}")
     with open(OUT_PATH, "w") as f:
         json.dump({"quick": quick, "cases": rows}, f, indent=2)
     emit("serve_bench_json", 0.0, os.path.normpath(OUT_PATH))

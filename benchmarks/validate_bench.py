@@ -1,0 +1,76 @@
+"""Validate BENCH_serve.json against the documented schema (CI gate).
+
+Checks what benchmarks/README.md documents: every case and resource row
+carries the expected keys, the serve bench actually moved migration bytes
+(the data plane is live, not simulated), and no epoch exceeded its byte
+quota.  Run after ``make bench-serve``:
+
+    PYTHONPATH=src:. python benchmarks/validate_bench.py [path]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+CASE_KEYS = {
+    "arch", "batch", "prompt_len", "n_tokens", "tokens_per_s", "wall_s",
+    "migration_bytes", "migration_bytes_per_s", "resources",
+}
+RESOURCE_KEYS = {
+    "name", "fast_reads", "slow_reads", "hit_rate", "promoted", "demoted",
+    "ping_pong", "migration_bytes", "last_epoch_bytes", "quota_bytes",
+    "migration_epochs", "flush_bytes",
+}
+
+
+def validate(path: str) -> list[str]:
+    with open(path) as f:
+        doc = json.load(f)
+    errors = []
+    if set(doc) != {"quick", "cases"}:
+        errors.append(f"top-level keys {sorted(doc)} != ['cases', 'quick']")
+        return errors
+    if not doc["cases"]:
+        errors.append("no benchmark cases recorded")
+    for case in doc["cases"]:
+        arch = case.get("arch", "<missing arch>")
+        missing = CASE_KEYS - set(case)
+        if missing:
+            errors.append(f"{arch}: missing case keys {sorted(missing)}")
+            continue
+        if case["migration_bytes"] <= 0:
+            errors.append(f"{arch}: migration_bytes must be nonzero — the "
+                          "serve bench is expected to move real payload")
+        for name, row in case["resources"].items():
+            rmissing = RESOURCE_KEYS - set(row)
+            if rmissing:
+                errors.append(f"{arch}/{name}: missing keys "
+                              f"{sorted(rmissing)}")
+                continue
+            if row["quota_bytes"] and row["last_epoch_bytes"] > row["quota_bytes"]:
+                errors.append(
+                    f"{arch}/{name}: last_epoch_bytes {row['last_epoch_bytes']}"
+                    f" exceeds quota_bytes {row['quota_bytes']}")
+            if not 0.0 <= row["hit_rate"] <= 1.0:
+                errors.append(f"{arch}/{name}: hit_rate {row['hit_rate']} "
+                              "out of [0, 1]")
+    return errors
+
+
+def main() -> int:
+    default = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    path = sys.argv[1] if len(sys.argv) > 1 else default
+    errors = validate(path)
+    if errors:
+        for e in errors:
+            print(f"FAIL: {e}", file=sys.stderr)
+        return 1
+    with open(path) as f:
+        n = len(json.load(f)["cases"])
+    print(f"BENCH_serve.json ok: {n} cases, schema + quota checks pass")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

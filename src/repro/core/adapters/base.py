@@ -9,10 +9,21 @@ pytree, and all hit-rate / policy arithmetic goes through the unified
 """
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from repro import tiering as tm
 from repro.tiering.stats import LegacyDaemonStateView
+
+
+def warn_deprecated(old: str, new: str) -> None:
+    """One-liner the shims emit at construction (README: migration path)."""
+    warnings.warn(
+        f"{old} is a deprecation shim; register a {new} on the multiplexed "
+        f"repro.tiering.NeoMemDaemon instead (see README.md 'Migrating off "
+        f"the legacy adapters' and DESIGN.md §1).",
+        DeprecationWarning, stacklevel=3)
 
 
 class _DaemonView:
@@ -74,6 +85,19 @@ class LegacyTierAdapter:
 
     def hit_rate(self) -> float:
         return self._h.hit_rate()
+
+    # migration data plane — forwarded to the unified layer (DESIGN.md §8)
+    def bind_data(self, slow_data) -> None:
+        """Attach payload; promotions then move real bytes (metered)."""
+        self._h.bind_data(slow_data)
+
+    def read_rows(self, page_ids):
+        """Serve payload rows: fast-buffer hit, slow-tier fallback."""
+        return self._h.read_rows(page_ids)
+
+    @property
+    def migration_bytes(self) -> int:
+        return self._h.stats.migration_bytes
 
     def residency(self) -> np.ndarray:
         """page -> fast-slot (-1 if slow-tier / host-resident)."""

@@ -30,6 +30,9 @@ class EmbedTierConfig:
 
 class EmbedCache(LegacyTierAdapter):
     def __init__(self, cfg: EmbedTierConfig, migrate_fn=None):
+        from repro.core.adapters.base import warn_deprecated
+        warn_deprecated("core.adapters.EmbedCache",
+                        '"embeddings" TieredResource')
         self.cfg = cfg
         n_pages = (cfg.vocab + cfg.rows_per_page - 1) // cfg.rows_per_page
         spec = tm.ResourceSpec(

@@ -32,6 +32,8 @@ class ExpertCache(LegacyTierAdapter):
     """Host-side manager wiring NeoProf <-> TieredStore for expert weights."""
 
     def __init__(self, cfg: ExpertTierConfig, migrate_fn=None):
+        from repro.core.adapters.base import warn_deprecated
+        warn_deprecated("core.adapters.ExpertCache", '"experts" TieredResource')
         self.cfg = cfg
         spec = tm.ResourceSpec(
             name="experts", n_pages=cfg.n_groups * cfg.n_experts,

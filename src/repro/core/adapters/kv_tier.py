@@ -30,6 +30,8 @@ class KVTierConfig:
 
 class KVTier(LegacyTierAdapter):
     def __init__(self, cfg: KVTierConfig, migrate_fn=None):
+        from repro.core.adapters.base import warn_deprecated
+        warn_deprecated("core.adapters.KVTier", '"kv" TieredResource')
         self.cfg = cfg
         spec = tm.ResourceSpec(
             name="kv", n_pages=cfg.n_pages_total, hot_slots=cfg.hot_slots,

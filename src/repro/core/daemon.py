@@ -50,9 +50,13 @@ class NeoMemDaemon:
     ):
         # Imported lazily: repro.core's package init imports this module,
         # while repro.tiering.memory imports repro.core submodules.
+        from repro.core.adapters.base import warn_deprecated
         from repro.tiering.memory import DaemonParams as _DaemonParams
         from repro.tiering.memory import TieredMemory
         from repro.tiering.stats import TierStats
+
+        warn_deprecated("core.daemon.NeoMemDaemon",
+                        "TieredResource (or drive TieredMemory directly)")
 
         self.pp = prof_params
         self.tp = tier_params
@@ -85,6 +89,12 @@ class NeoMemDaemon:
     @property
     def _pending(self) -> np.ndarray:
         return self.mem._pending
+
+    def bind_data(self, slow_data) -> None:
+        """Forward to the unified data plane: promotions move real bytes
+        (metered in ``self.stats``) once a payload is bound (DESIGN.md §8)."""
+        self.mem.bind_data(slow_data)
+        self.stats.quota_bytes = self.mem.quota_bytes
 
     # ------------------------------------------------------------------
     def tick(

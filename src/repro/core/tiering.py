@@ -174,12 +174,16 @@ def migrate_data(
     fast: jax.Array, slow: jax.Array,
     promoted_pages: jax.Array, victim_slots: jax.Array,
 ) -> tuple[jax.Array, jax.Array]:
-    """Apply the data movement for a promotion batch.
+    """Apply the data movement for a promotion batch (low-level helper).
 
     fast: (num_slots, *page_shape); slow: (num_pages, *page_shape).
     Victims are written back to the slow tier first, then hot pages are
     copied into their slots.  On real TPU ``slow`` carries a pinned_host
     memory-kind sharding; XLA emits the H2D/D2H copies.
+
+    The full data plane — buffer placement, donation, demotion write-back
+    targets, byte metering — lives in :mod:`repro.tiering.migrate`
+    (DESIGN.md §8); prefer ``TieredMemory.bind_data`` + the daemon verbs.
     """
     ok = (promoted_pages >= 0) & (victim_slots >= 0)
     safe_page = jnp.maximum(promoted_pages, 0)

@@ -13,7 +13,14 @@ models.decode steps:
                                 per migration_interval the daemon promotes
                                 sketch-hot pages for every resource under a
                                 shared quota budget, between steps (never
-                                inside the jitted hot path).
+                                inside the jitted hot path);
+  * migration data plane      — each built-in resource binds REAL payload
+                                (embedding-table pages, expert weight
+                                blocks, flushed KV pages) to fast/slow
+                                TierBuffers, so daemon epochs physically
+                                move rows and meter bytes; ``read_rows``
+                                serves lookups from the fast buffer with
+                                slow-tier fallback (DESIGN.md §8).
 
 Access streams fed per decode step (DESIGN.md §3): the token column
 (embedding rows), the router's token->expert ids surfaced by
@@ -68,6 +75,7 @@ class ServeEngine:
         self._decode_paged = jax.jit(self._decode_paged_fn)
         self.cache = None
         self.step_count = 0
+        self._kv_flushed: dict[int, tuple[int, int]] = {}  # slot -> (id, fill)
 
     def _register_resources(self) -> None:
         cfg, scfg = self.cfg, self.scfg
@@ -78,32 +86,80 @@ class ServeEngine:
             if kind == "kv":
                 if not scfg.paged:
                     raise ValueError("the 'kv' resource requires paged=True")
+                row_shape = self._kv_row_shape()
                 spec = tm.ResourceSpec(
                     "kv", n_pages=scfg.max_seq // scfg.page_t,
-                    hot_slots=scfg.hot_slots, quota_pages=scfg.kv_quota)
+                    hot_slots=scfg.hot_slots, quota_pages=scfg.kv_quota,
+                    row_shape=row_shape, row_dtype="bfloat16")
                 res = tm.make_resource(
                     "kv", spec, mass_threshold=scfg.kv_mass_threshold)
+                # the slow tier starts empty: pages are flushed down from the
+                # paged cache as decode fills them (_flush_kv_slow)
+                payload = jnp.zeros((spec.n_pages,) + row_shape, jnp.bfloat16)
             elif kind == "experts":
-                if cfg.moe is None:
+                if cfg.moe is None or "moe" not in cfg.pattern:
                     raise ValueError(
                         f"arch {cfg.name!r} has no MoE layers to tier")
+                payload = self._expert_payload()
                 spec = tm.ResourceSpec(
                     "experts", n_pages=cfg.n_groups * cfg.moe.n_experts,
                     hot_slots=cfg.n_groups * scfg.expert_hot_slots,
-                    quota_pages=scfg.expert_quota)
+                    quota_pages=scfg.expert_quota,
+                    row_shape=tuple(payload.shape[1:]),
+                    row_dtype=str(payload.dtype))
                 res = tm.make_resource("experts", spec,
                                        n_experts=cfg.moe.n_experts)
             elif kind == "embeddings":
                 rows = tm.EMBED_ROWS_PER_PAGE
+                payload = self._embed_payload(rows)
                 spec = tm.ResourceSpec(
                     "embeddings", n_pages=(cfg.vocab + rows - 1) // rows,
                     hot_slots=scfg.embed_hot_slots,
-                    quota_pages=scfg.embed_quota)
+                    quota_pages=scfg.embed_quota,
+                    row_shape=tuple(payload.shape[1:]),
+                    row_dtype=str(payload.dtype))
                 res = tm.make_resource("embeddings", spec)
             else:
                 raise KeyError(f"unknown serve resource kind {kind!r}; "
                                f"known: {tm.resource_kinds()}")
-            self.daemon.register(res)
+            handle = self.daemon.register(res)
+            handle.bind_data(payload)
+
+    # -- payload construction (the migration data plane, DESIGN.md §8) -------
+    def _kv_row_shape(self) -> tuple[int, ...]:
+        """One logical KV page across all layer groups: K and V payloads of
+        the representative paged-attention entry, concatenated on the last
+        axis (MLA: latent + rope widths; GQA: 2 x head_dim)."""
+        cfg = self.cfg
+        if cfg.mla is not None:
+            hkv, dk, dv = 1, cfg.mla.kv_lora + cfg.mla.d_rope, cfg.mla.kv_lora
+        else:
+            hkv, dk, dv = cfg.n_kv_heads, cfg.head_dim, cfg.head_dim
+        return (cfg.n_groups, self.scfg.page_t, hkv, dk + dv)
+
+    def _expert_payload(self) -> jax.Array:
+        """(G*E, flat) expert weight blocks, page_id = group*n_experts+expert.
+
+        Uses the first MoE position in the layer pattern as the weight block
+        (one representative block per expert; per-position payloads would
+        multiply the slow tier by the MoE depth without changing placement).
+        """
+        i = self.cfg.pattern.index("moe")
+        ffn = self.params["blocks"][i]["ffn"]
+        g, e = ffn["w_in"].shape[:2]
+        parts = [ffn[k].reshape(g * e, -1) for k in ("w_gate", "w_in", "w_out")]
+        return jnp.concatenate(parts, axis=-1)
+
+    def _embed_payload(self, rows_per_page: int) -> jax.Array:
+        """(n_pages, rows_per_page, d) vocab row-blocks of the live table."""
+        table = self.params["embed"]["table"]
+        v, d = table.shape
+        n_pages = (v + rows_per_page - 1) // rows_per_page
+        pad = n_pages * rows_per_page - v
+        if pad:
+            table = jnp.concatenate(
+                [table, jnp.zeros((pad, d), table.dtype)], axis=0)
+        return table.reshape(n_pages, rows_per_page, d)
 
     # -- jitted step bodies -------------------------------------------------
     def _decode_fn(self, params, cache, token, aux):
@@ -125,6 +181,7 @@ class ServeEngine:
         if self.scfg.paged:
             self.cache = dec.init_paged_cache(
                 self.cfg, b, self.scfg.hot_slots, self.scfg.page_t)
+            self._kv_flushed.clear()         # fresh ring: re-flush everything
             # seed by streaming the prompt through paged decode (keeps one
             # code path; production would bulk-write pages from prefill)
             logits = None
@@ -200,10 +257,54 @@ class ServeEngine:
         ids = np.where((plen > 0) & (ids >= 0), ids, -1)
         return jnp.asarray(plen, jnp.float32), jnp.asarray(ids, jnp.int32)
 
+    def _flush_kv_slow(self) -> None:
+        """Flush the resident paged-cache window down to the KV data plane.
+
+        The ring of hot page slots is the authoritative copy of recent pages
+        (DESIGN.md §3.2); before each daemon epoch the engine writes their
+        payloads through ``write_rows`` — slow store always, plus the fast
+        copies of promoted pages so neither reads nor demotion write-backs
+        ever serve a stale snapshot.  Ring pages unchanged since the last
+        flush (same page id, same fill) are skipped, and the flushed bytes
+        are metered as ``flush_bytes``.  Batch row 0 is the representative
+        payload, matching the mass proxy in _kv_page_stream.
+        """
+        h = self.daemon["kv"]
+        if h.mem.buffers is None:
+            return
+        entry = next((c for c in self.cache["blocks"]
+                      if isinstance(c, dict) and "page_len" in c), None)
+        if entry is None:
+            return
+        mass, ids = self._kv_page_stream()
+        if not ids.size:
+            return
+        ids = np.asarray(ids)
+        fill = np.asarray(mass, np.int64)            # per-slot page_len
+        changed = np.array([
+            self._kv_flushed.get(slot) != (int(ids[slot]), int(fill[slot]))
+            for slot in range(ids.shape[0])])
+        ids = np.where(changed, ids, -1)             # -1 lanes are dropped
+        if not (ids >= 0).any():
+            return
+        # (G, n_slots, T, hkv, dk+dv) -> slot-major rows for write_rows
+        pages = jnp.concatenate(
+            [entry["k_pages"][:, 0], entry["v_pages"][:, 0]], axis=-1)
+        h.write_rows(ids, jnp.moveaxis(pages, 1, 0))
+        for slot in np.flatnonzero(ids >= 0):
+            self._kv_flushed[slot] = (int(ids[slot]), int(fill[slot]))
+
+    def read_rows(self, name: str, page_ids) -> jax.Array:
+        """Serve payload rows for a resource: fast-tier copy when the page
+        is resident, slow-tier fallback otherwise (bit-exact either way)."""
+        return self.daemon[name].read_rows(page_ids)
+
     def _maybe_tick(self) -> None:
         self.step_count += 1
         if self.daemon.resources \
                 and self.step_count % self.scfg.migration_interval == 0:
+            if "kv" in self.daemon:
+                self._flush_kv_slow()
             self.daemon.tick()
 
     # -- telemetry ------------------------------------------------------------

@@ -6,6 +6,7 @@ One API for every consumer of slow memory:
   TieredMemory / TieredMemoryState ........... pure profiling + placement
   NeoMemDaemon (multiplexed) ................. one loop, N resources
   TierStats .................................. one telemetry schema
+  migrate / TierBuffers ...................... the data plane (DESIGN.md §8)
 
 The legacy ``repro.core.adapters`` classes and ``repro.core.daemon`` are
 thin deprecation shims over this package.
@@ -16,6 +17,9 @@ from repro.tiering.daemon import (  # noqa: F401
 from repro.tiering.memory import (  # noqa: F401
     DaemonParams, MigrationEvent, TieredMemory, TieredMemoryState, lookup,
     observe,
+)
+from repro.tiering.migrate import (  # noqa: F401
+    TierBuffers, init_buffers, read_rows, write_rows,
 )
 from repro.tiering.resource import (  # noqa: F401
     ResourceSpec, StreamResource, TieredResource, make_resource,

@@ -13,6 +13,10 @@ resource's own promotion-batch quota) — the multiplexed form of
 Algorithm 1's quota constraint: a bursty resource is throttled toward its
 fair share instead of starving the others, and demand it could not promote
 anyway never draws budget away from resources that can.
+
+Resources with bound payload buffers get each epoch's promotion batch
+applied as one fused copy through the migration data plane, with the moved
+bytes metered per resource (DESIGN.md §8).
 """
 from __future__ import annotations
 
@@ -71,6 +75,21 @@ class ResourceHandle:
 
     def lookup(self, page_ids) -> tuple[jax.Array, jax.Array]:
         return lookup(self.state, page_ids)
+
+    # -- data plane (DESIGN.md §8) -------------------------------------------
+    def bind_data(self, slow_data) -> None:
+        """Attach the resource's payload; promotions then move real bytes."""
+        self.mem.bind_data(slow_data)
+        self.stats.quota_bytes = self.mem.quota_bytes
+
+    def read_rows(self, page_ids) -> jax.Array:
+        """Serve payload rows: fast-buffer copy on hit, slow-tier fallback."""
+        return self.mem.read_rows(self.state, page_ids)
+
+    def write_rows(self, page_ids, rows) -> None:
+        """Owner payload refresh, both tiers kept coherent; bytes metered."""
+        n = self.mem.write_rows(self.state, page_ids, rows)
+        self.stats.flush_bytes += n * self.mem.row_bytes
 
     def hit_rate(self) -> float:
         return self.mem.hit_rate(self.state, self.stats)
@@ -140,6 +159,9 @@ class NeoMemDaemon:
                 h.state, event = h.mem.migrate(h.state, h.stats,
                                                quota=shares.get(name, 0))
                 if event is not None:
+                    # data plane first (one fused copy against the bound
+                    # buffers, bytes metered), then the resource's own hook
+                    h.mem.apply_migration(event, h.stats)
                     h.resource.apply_migration(event.promoted, event.victims)
                     events[name] = event
 

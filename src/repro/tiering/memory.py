@@ -14,7 +14,11 @@ jit/pjit/shard_map.  The split mirrors the paper's hardware/software line:
 
 The host side keeps exactly two non-pytree artifacts: the overflow queue of
 hot pages awaiting quota (a numpy FIFO, as in the kernel daemon) and the
-:class:`~repro.tiering.stats.TierStats` telemetry accumulator.
+:class:`~repro.tiering.stats.TierStats` telemetry accumulator — plus, when
+payload data is bound via :meth:`TieredMemory.bind_data`, the
+:class:`~repro.tiering.migrate.TierBuffers` pair the migration data plane
+copies through (DESIGN.md §8: one fused donated copy per epoch, bytes
+metered against the per-epoch quota).
 """
 from __future__ import annotations
 
@@ -32,6 +36,7 @@ from repro.core.neoprof import (NeoProfCommands, NeoProfParams, NeoProfState,
 from repro.core.policy import PolicyParams, PolicyState
 from repro.core.policy import update_threshold as _algorithm1
 from repro.core.tiering import TierParams, TierState
+from repro.tiering import migrate as migrate_lib
 from repro.tiering.stats import TierStats, drain_tier_stats
 from repro.tiering.stats import hit_rate as _hit_rate
 
@@ -64,11 +69,13 @@ class TieredMemoryState(NamedTuple):
 
 @dataclasses.dataclass
 class MigrationEvent:
-    """One promotion batch: copy slow[promoted[i]] into fast victims[i]."""
+    """One promotion batch: copy slow[promoted[i]] into fast victims[i],
+    after writing the slot's previous occupant ``evicted[i]`` back down."""
 
     promoted: jax.Array   # (k,) int32 page ids, -1 = no-op lane
     victims: jax.Array    # (k,) int32 slot ids, -1 = no-op lane
     n_promoted: int
+    evicted: jax.Array | None = None   # (k,) int32 demoted page ids, -1 no-op
 
 
 @functools.partial(jax.jit, static_argnames=("prof_params",))
@@ -128,13 +135,103 @@ class TieredMemory:
         self.fixed_theta = fixed_theta
         self.cmd = NeoProfCommands(prof_params)
         self._pending = np.empty((0,), np.int64)
+        # migration data plane (DESIGN.md §8) — absent until bind_data
+        self.spec = None
+        self.buffers: migrate_lib.TierBuffers | None = None
+        self.row_bytes = 0
+        self.quota_bytes = 0
 
     @classmethod
     def from_spec(cls, spec, daemon_params=None, policy_params=None,
                   fixed_theta=None) -> "TieredMemory":
-        return cls(spec.prof_params(), spec.tier_params(),
-                   daemon_params=daemon_params, policy_params=policy_params,
-                   fixed_theta=fixed_theta)
+        mem = cls(spec.prof_params(), spec.tier_params(),
+                  daemon_params=daemon_params, policy_params=policy_params,
+                  fixed_theta=fixed_theta)
+        mem.spec = spec
+        return mem
+
+    # -- data plane (DESIGN.md §8) -------------------------------------------
+    def bind_data(self, slow_data) -> None:
+        """Attach payload buffers: ``slow_data`` is (num_pages, *row_shape).
+
+        After binding, every promotion epoch physically moves rows between
+        the fast/slow buffers (:meth:`apply_migration`) and meters the bytes;
+        without it the resource stays placement/telemetry-only.
+        """
+        slow_data = jnp.asarray(slow_data)
+        if slow_data.shape[0] != self.tp.num_pages:
+            raise ValueError(
+                f"slow_data has {slow_data.shape[0]} pages, tier declares "
+                f"{self.tp.num_pages}")
+        if self.spec is not None and self.spec.row_shape is not None:
+            want = (tuple(self.spec.row_shape), jnp.dtype(self.spec.row_dtype))
+            got = (tuple(slow_data.shape[1:]), slow_data.dtype)
+            if want != got:
+                raise ValueError(
+                    f"slow_data rows {got} != ResourceSpec declaration {want}")
+        self.buffers = migrate_lib.init_buffers(slow_data, self.tp.num_slots)
+        self.row_bytes = migrate_lib.row_bytes(self.buffers)
+        self.quota_bytes = 2 * self.quota * self.row_bytes
+
+    def apply_migration(self, event: MigrationEvent | None,
+                        stats: TierStats) -> int:
+        """Execute one epoch's data movement against the bound buffers.
+
+        Returns the payload bytes moved (promotions + demotion write-backs),
+        metered into ``stats`` against the per-epoch byte quota.  A no-op
+        (no buffers bound, or an empty event) moves and meters nothing.
+        """
+        if self.buffers is None or event is None:
+            return 0
+        evicted = (event.evicted if event.evicted is not None
+                   else jnp.full_like(jnp.asarray(event.victims), -1))
+        self.buffers, n_up, n_down = migrate_lib.migrate(
+            self.buffers, event.promoted, event.victims, evicted)
+        moved = (n_up + n_down) * self.row_bytes
+        stats.migration_bytes += moved
+        stats.last_epoch_bytes = moved
+        stats.quota_bytes = self.quota_bytes
+        if moved:
+            stats.migration_epochs += 1
+        return moved
+
+    def read_rows(self, state: TieredMemoryState, page_ids) -> jax.Array:
+        """Serve page payloads: fast-tier copy on hit, slow-tier fallback.
+
+        The gathers are partitioned host-side by the hit mask, so fast-tier
+        hits never touch the slow store — on real hardware a 100% hit batch
+        costs zero pinned-host bandwidth.  (:func:`migrate.read_rows` is the
+        fused single-gather variant for in-jit consumers.)
+        """
+        if self.buffers is None:
+            raise ValueError("no payload bound — call bind_data() first")
+        page_ids = jnp.asarray(page_ids, jnp.int32)
+        slots, _ = lookup(state, page_ids)
+        slots_np = np.asarray(slots)
+        ids_np = np.maximum(np.asarray(page_ids), 0)
+        hit = slots_np >= 0
+        if hit.all():
+            return self.buffers.fast[slots]
+        if not hit.any():
+            return self.buffers.slow[ids_np]
+        rows = jnp.empty(page_ids.shape + self.buffers.slow.shape[1:],
+                         self.buffers.slow.dtype)
+        rows = rows.at[np.flatnonzero(hit)].set(
+            self.buffers.fast[slots_np[hit]])
+        return rows.at[np.flatnonzero(~hit)].set(
+            self.buffers.slow[ids_np[~hit]])
+
+    def write_rows(self, state: TieredMemoryState, page_ids, rows) -> int:
+        """Refresh page payloads in both tiers (owners with mutating data):
+        the slow store always takes the write, fast copies of promoted pages
+        are refreshed for coherence.  Returns the rows written."""
+        if self.buffers is None:
+            raise ValueError("no payload bound — call bind_data() first")
+        page_ids = jnp.asarray(page_ids, jnp.int32)
+        slots, _ = lookup(state, page_ids)
+        self.buffers = migrate_lib.write_rows(self.buffers, page_ids, slots,
+                                              rows)
+        return int(np.sum(np.asarray(page_ids) >= 0))
 
     # -- state ---------------------------------------------------------------
     def init(self, key: jax.Array | None = None) -> TieredMemoryState:
@@ -198,6 +295,7 @@ class TieredMemory:
                 ) -> tuple[TieredMemoryState, MigrationEvent | None]:
         """Promote up to ``quota`` pending pages (batch width stays static)."""
         k = self.quota                       # static promote width (no retrace)
+        stats.last_epoch_bytes = 0   # an epoch that moves nothing reports 0
         take = min(quota if quota is not None else k, k, len(self._pending))
         if take <= 0:
             stats.pending = len(self._pending)
@@ -205,12 +303,18 @@ class TieredMemory:
         batch = np.full((k,), -1, np.int32)
         batch[:take] = self._pending[:take]
         self._pending = self._pending[take:][:MAX_PENDING]
+        old_slot_page = state.tier.slot_page
         tier, promoted, victims = tiering.promote(
             state.tier, jnp.asarray(batch), k)
+        # the page each victim slot held BEFORE this batch — the demotion
+        # write-back targets for the data plane (apply_migration)
+        evicted = jnp.where(victims >= 0,
+                            old_slot_page[jnp.maximum(victims, 0)], -1)
         n = int(np.sum(np.asarray(promoted) >= 0))
         stats.migrated_this_period += n
         stats.pending = len(self._pending)
-        return state._replace(tier=tier), MigrationEvent(promoted, victims, n)
+        return state._replace(tier=tier), MigrationEvent(promoted, victims, n,
+                                                         evicted=evicted)
 
     def drain(self, state: TieredMemoryState,
               stats: TierStats) -> TieredMemoryState:
@@ -261,6 +365,7 @@ class TieredMemory:
         if t % dp.migration_interval == 0:
             state, _ = self.collect(state, stats)
             state, event = self.migrate(state, stats)
+            self.apply_migration(event, stats)   # no-op without bound data
         if t % dp.threshold_update_period == 0:
             state = self.update_threshold(state, stats)
         if t % dp.clear_interval == 0:

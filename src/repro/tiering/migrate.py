@@ -1,0 +1,156 @@
+"""The migration data plane: real byte movement behind ``apply_migration``.
+
+The placement layer (:mod:`repro.core.tiering`) decides WHICH pages move;
+this module moves them.  A resource that binds payload data gets a
+:class:`TierBuffers` pair (DESIGN.md §8):
+
+  * ``fast``: ``(num_slots, *row_shape)`` — promoted copies, device memory;
+  * ``slow``: ``(num_pages, *row_shape)`` — the full backing store, placed
+    in the ``pinned_host`` slow tier when the backend supports memory kinds
+    (:mod:`repro.dist.host_offload`), or kept as a logically-separate device
+    array on the CPU fallback so the data path runs unchanged in CI.
+
+Each daemon epoch applies ONE fused copy (:func:`migrate`): victims are
+written back to their old slow-tier pages (demotion), then the promoted
+pages are gathered into the freed fast slots.  Both buffers are donated on
+accelerators, so the epoch costs exactly the moved bytes — which the caller
+meters against the per-epoch byte quota in
+:class:`~repro.tiering.stats.TierStats`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist import host_offload as ho
+
+
+class TierBuffers(NamedTuple):
+    """Payload buffers for one resource: fast copies over a slow store."""
+
+    fast: jax.Array   # (num_slots, *row_shape)
+    slow: jax.Array   # (num_pages, *row_shape) — full backing store
+
+
+def row_bytes(buffers: TierBuffers) -> int:
+    """Payload bytes of one page row (the migration byte unit)."""
+    return int(np.prod(buffers.slow.shape[1:], dtype=np.int64)
+               * buffers.slow.dtype.itemsize)
+
+
+def place_slow(x: jax.Array) -> jax.Array:
+    """Place the backing store in the slow tier (pinned host when available).
+
+    On TPU/GPU this carries a ``pinned_host`` memory-kind sharding and XLA
+    emits real H2D/D2H copies for every gather/scatter against it; on CPU
+    the tiers degrade to logical separation (DESIGN.md §7) and the data
+    path is exercised bit-for-bit without the placement.
+    """
+    x = jnp.asarray(x)
+    if not ho.supports_memory_kinds():
+        return x
+    from jax.sharding import Mesh, PartitionSpec as P
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("_tier",))
+    return ho.to_slow_tier(x, mesh, P())
+
+
+def init_buffers(slow_data: jax.Array, num_slots: int) -> TierBuffers:
+    """Build the buffer pair around an existing slow-tier payload array."""
+    slow = place_slow(slow_data)
+    fast = jnp.zeros((num_slots,) + slow.shape[1:], slow.dtype)
+    return TierBuffers(fast=fast, slow=slow)
+
+
+def _migrate_impl(fast, slow, promoted, victims, evicted):
+    ok = (promoted >= 0) & (victims >= 0)
+    ev_ok = ok & (evicted >= 0)
+    n_pages, n_slots = slow.shape[0], fast.shape[0]
+    # gather promoted rows BEFORE the write-back scatter (a page promoted in
+    # this batch is never also evicted in it, but order still documents it)
+    gathered = slow[jnp.where(ok, promoted, 0)]
+    # no-op lanes scatter out of bounds and are dropped — routing them to
+    # index 0 would race with a legitimate write to page/slot 0
+    ev_idx = jnp.where(ev_ok, evicted, n_pages)
+    sl_idx = jnp.where(ok, victims, n_slots)
+    # demotion write-back: the victim slot's current row returns to its page
+    slow = slow.at[ev_idx].set(fast[jnp.where(ev_ok, victims, 0)], mode="drop")
+    # promotion: hot rows land in the freed slots
+    fast = fast.at[sl_idx].set(gathered, mode="drop")
+    return (fast, slow, jnp.sum(ok, dtype=jnp.int32),
+            jnp.sum(ev_ok, dtype=jnp.int32))
+
+
+@functools.lru_cache(maxsize=None)
+def _migrate_jit():
+    # donation frees the pre-copy buffers on accelerators; the CPU backend
+    # ignores donation with a warning, so only request it where it works
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(_migrate_impl, donate_argnums=donate)
+
+
+def migrate(buffers: TierBuffers, promoted: jax.Array, victims: jax.Array,
+            evicted: jax.Array) -> tuple[TierBuffers, int, int]:
+    """Apply one promotion batch as ONE fused copy (the epoch's data plane).
+
+    ``promoted[i]`` is copied into fast slot ``victims[i]`` after the slot's
+    previous occupant ``evicted[i]`` is written back to the slow store
+    (-1 = no-op lane everywhere).  Returns the new buffers plus the promoted
+    / demoted row counts actually moved (multiply by :func:`row_bytes` for
+    the metered traffic).
+    """
+    fast, slow, n_up, n_down = _migrate_jit()(
+        buffers.fast, buffers.slow, jnp.asarray(promoted, jnp.int32),
+        jnp.asarray(victims, jnp.int32), jnp.asarray(evicted, jnp.int32))
+    return TierBuffers(fast=fast, slow=slow), int(n_up), int(n_down)
+
+
+@jax.jit
+def read_rows(fast: jax.Array, slow: jax.Array, slots: jax.Array,
+              page_ids: jax.Array) -> jax.Array:
+    """Serve a batch of page reads: fast copy when resident, slow fallback.
+
+    ``slots`` is the placement lookup result (-1 = not resident).  Rows for
+    invalid page ids (< 0) read slow page 0 — callers mask them.
+    """
+    hit = slots >= 0
+    safe_page = jnp.where(page_ids >= 0, page_ids, 0)
+    mask = hit.reshape(hit.shape + (1,) * (fast.ndim - 1))
+    return jnp.where(mask, fast[jnp.where(hit, slots, 0)], slow[safe_page])
+
+
+def _write_rows_impl(fast, slow, page_ids, slots, rows):
+    rows = rows.astype(slow.dtype)
+    slow_idx = jnp.where(page_ids >= 0, page_ids, slow.shape[0])
+    slow = slow.at[slow_idx].set(rows, mode="drop")
+    # keep promoted copies coherent: a page resident in the fast tier gets
+    # its fast row refreshed too, so later reads/write-backs never serve or
+    # demote a stale snapshot
+    fast_idx = jnp.where((page_ids >= 0) & (slots >= 0), slots,
+                         fast.shape[0])
+    fast = fast.at[fast_idx].set(rows, mode="drop")
+    return fast, slow
+
+
+@functools.lru_cache(maxsize=None)
+def _write_rows_jit():
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(_write_rows_impl, donate_argnums=donate)
+
+
+def write_rows(buffers: TierBuffers, page_ids: jax.Array, slots: jax.Array,
+               rows: jax.Array) -> TierBuffers:
+    """Refresh page payloads in BOTH tiers (owners with mutating payloads,
+    e.g. the serve engine flushing freshly-filled KV pages).
+
+    The slow store always takes the write; pages currently promoted
+    (``slots[i] >= 0``) also get their fast copy refreshed so the tiers
+    stay coherent.  -1 page ids are dropped lanes.
+    """
+    fast, slow = _write_rows_jit()(
+        buffers.fast, buffers.slow, jnp.asarray(page_ids, jnp.int32),
+        jnp.asarray(slots, jnp.int32), rows)
+    return TierBuffers(fast=fast, slow=slow)

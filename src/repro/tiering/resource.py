@@ -9,8 +9,11 @@ a resource adapts itself to the tiering layer by implementing two methods —
     page masses, token ids) onto the flat page-id address space NeoProf
     profiles.  Jittable; -1 entries are padding.
   * ``apply_migration(promoted_pages, victim_slots)`` — the host-side data
-    movement callback for a promotion batch (expert weights, KV pages,
-    embedding rows).  The tiering layer itself never touches payload data.
+    movement hook for a promotion batch (expert weights, KV pages,
+    embedding rows).  Resources that declare ``row_shape``/``row_dtype`` in
+    their spec and bind payload data get the movement done for them by the
+    migration data plane (:mod:`repro.tiering.migrate`, DESIGN.md §8); the
+    hook remains for custom owners with their own layouts.
 
 Everything else — sketch profiling, Algorithm 1, 2Q placement, stats — is
 shared machinery in :mod:`repro.tiering.memory` / :mod:`repro.tiering.daemon`.
@@ -23,9 +26,11 @@ daemon (the bug the old ExpertCache had).
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Protocol, runtime_checkable
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.neoprof import NeoProfParams
 from repro.core.sketch import SketchParams
@@ -34,7 +39,12 @@ from repro.core.tiering import TierParams
 
 @dataclasses.dataclass(frozen=True)
 class ResourceSpec:
-    """Sizing for one tiered resource — the only place geometry is declared."""
+    """Sizing for one tiered resource — the only place geometry is declared.
+
+    ``row_shape``/``row_dtype`` declare the PAYLOAD of one page for the
+    migration data plane (DESIGN.md §8): ``row_shape=None`` means the
+    resource is placement/telemetry-only (no data buffers bound).
+    """
 
     name: str
     n_pages: int                  # logical pages in the slow tier
@@ -44,6 +54,8 @@ class ResourceSpec:
     sketch_depth: int = 2
     stream_cap: int = 1 << 14     # max page ids fed to NeoProf per step
     touch_cap: int = 4096         # max page ids fed to tier accounting per step
+    row_shape: tuple | None = None   # payload shape of ONE page (data plane)
+    row_dtype: str = "bfloat16"      # payload dtype name
 
     def prof_params(self) -> NeoProfParams:
         return NeoProfParams(sketch=SketchParams(
@@ -52,6 +64,19 @@ class ResourceSpec:
     def tier_params(self) -> TierParams:
         return TierParams(num_pages=self.n_pages, num_slots=self.hot_slots,
                           quota_pages=self.quota_pages)
+
+    @property
+    def row_bytes(self) -> int:
+        """Payload bytes per page (0 when no data plane is declared)."""
+        if self.row_shape is None:
+            return 0
+        return math.prod(self.row_shape) * jnp.dtype(self.row_dtype).itemsize
+
+    @property
+    def quota_bytes(self) -> int:
+        """Per-epoch migration byte budget: each of ``quota_pages``
+        promotions moves at most one row up AND one written-back row down."""
+        return 2 * self.quota_pages * self.row_bytes
 
 
 @runtime_checkable

@@ -7,6 +7,11 @@ hand-wired three times now reduces to (DESIGN.md §3):
   §3.1 experts ..... router token->expert ids, page = (group, expert)
   §3.2 KV pages .... pages carrying non-trivial attention softmax mass
   §3.3 embeddings .. token ids mapped to vocab row-blocks
+
+Payloads: the serve engine declares each resource's row shape/dtype in its
+:class:`ResourceSpec` and binds real model data (embedding rows, expert
+weight blocks, flushed KV pages), so daemon epochs move actual bytes
+through the migration data plane — see DESIGN.md §8.
 """
 from __future__ import annotations
 

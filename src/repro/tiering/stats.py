@@ -33,6 +33,12 @@ class TierStats:
     # Migration bookkeeping within the current Algorithm-1 period.
     migrated_this_period: int = 0
     pending: int = 0               # overflow queue depth (latest snapshot)
+    # Data-plane byte metering (DESIGN.md §8; zero when no buffers bound).
+    migration_bytes: int = 0       # lifetime payload bytes moved (both ways)
+    last_epoch_bytes: int = 0      # bytes moved by the most recent epoch
+    quota_bytes: int = 0           # per-epoch byte budget (2 * quota * row)
+    migration_epochs: int = 0      # epochs that actually moved payload
+    flush_bytes: int = 0           # owner write_rows traffic (e.g. KV flush)
     # Fig. 14-style traces, appended once per threshold-update period.
     theta_trace: list = dataclasses.field(default_factory=list)
     bw_trace: list = dataclasses.field(default_factory=list)
@@ -51,7 +57,8 @@ class TierStats:
         return self.fast_reads / max(self.total_reads, 1)
 
     def as_row(self) -> dict:
-        """Flat schema for benchmark emission (BENCH_serve.json rows)."""
+        """Flat schema for benchmark emission (BENCH_serve.json rows —
+        documented key-by-key in benchmarks/README.md)."""
         return {
             "name": self.name,
             "fast_reads": self.fast_reads,
@@ -60,6 +67,11 @@ class TierStats:
             "promoted": self.promoted,
             "demoted": self.demoted,
             "ping_pong": self.ping_pong,
+            "migration_bytes": self.migration_bytes,
+            "last_epoch_bytes": self.last_epoch_bytes,
+            "quota_bytes": self.quota_bytes,
+            "migration_epochs": self.migration_epochs,
+            "flush_bytes": self.flush_bytes,
         }
 
 
