@@ -1,6 +1,6 @@
 PYTEST ?= python -m pytest
 
-.PHONY: test test-fast test-dist dryrun bench-serve validate-bench
+.PHONY: test test-fast test-dist dryrun bench-serve bench-traffic validate-bench
 
 # full tier-1 suite (includes slow 8-host-device subprocess parity tests)
 test:
@@ -22,6 +22,13 @@ dryrun:
 # writes BENCH_serve.json so the perf trajectory is recorded per commit
 bench-serve:
 	PYTHONPATH=src:. python benchmarks/run.py --quick --only serve_bench
+
+# multi-tenant traffic benchmark: the continuous-batching scheduler over the
+# zipf-hot / diurnal-shift / scan-antagonist traces (throughput, p50/p99
+# per-token latency, steady-state hit rates, migration bytes/s) — appends
+# the "traffic" section to BENCH_serve.json
+bench-traffic:
+	PYTHONPATH=src:. python benchmarks/run.py --quick --only traffic_bench
 
 # check BENCH_serve.json against the schema documented in benchmarks/README.md
 validate-bench:

@@ -1,6 +1,8 @@
 """Shared benchmark harness config + CSV emission."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 # scaled-down but structure-preserving defaults (paper: ~4M pages, 1:2 ratio)
@@ -20,6 +22,20 @@ METHODS = ["neomem", "pebs", "tpp", "autonuma", "pte-scan", "first-touch"]
 
 def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def update_bench_json(path: str, **sections) -> None:
+    """Read-modify-write BENCH_serve.json: replace the given top-level
+    sections, preserving every other — the serve and traffic writers stay
+    order-independent.  A missing file starts from the minimal schema the
+    validator requires (benchmarks/README.md)."""
+    doc: dict = {"quick": False, "cases": []}
+    if os.path.exists(path):
+        with open(path) as f:
+            doc = json.load(f)
+    doc.update(sections)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, default=float)
 
 
 class Timer:

@@ -21,6 +21,7 @@ MODULES = [
     "fig16_convergence",
     "kernel_bench",
     "serve_bench",
+    "traffic_bench",
 ]
 
 

@@ -12,7 +12,6 @@ validated in CI by benchmarks/validate_bench.py.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -23,7 +22,7 @@ from repro.configs.registry import get_smoke_config
 from repro.models import transformer as tr
 from repro.serve.engine import ServeConfig, ServeEngine
 
-from benchmarks.common import emit
+from benchmarks.common import emit, update_bench_json
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
@@ -74,8 +73,7 @@ def run(quick: bool = False):
         emit(f"serve_{r['arch']}", r["wall_s"] * 1e6 / (r['batch'] * n_tokens),
              f"tok_s={r['tokens_per_s']:.1f} "
              f"mig_B_s={r['migration_bytes_per_s']:.0f} {hits}")
-    with open(OUT_PATH, "w") as f:
-        json.dump({"quick": quick, "cases": rows}, f, indent=2)
+    update_bench_json(OUT_PATH, quick=quick, cases=rows)
     emit("serve_bench_json", 0.0, os.path.normpath(OUT_PATH))
     return rows
 

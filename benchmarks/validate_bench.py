@@ -3,7 +3,12 @@
 Checks what benchmarks/README.md documents: every case and resource row
 carries the expected keys, the serve bench actually moved migration bytes
 (the data plane is live, not simulated), and no epoch exceeded its byte
-quota.  Run after ``make bench-serve``:
+quota.  When the ``traffic`` section is present (benchmarks/
+traffic_bench.py), additionally checks the multi-tenant trace schema — all
+three trace kinds, >= 2 tenants, latency percentiles, drained queues — and
+the NeoMem adaptivity signal: the zipf-hot trace's steady-state hit rate
+must exceed scan-antagonist's.  Run after ``make bench-serve`` /
+``make bench-traffic``:
 
     PYTHONPATH=src:. python benchmarks/validate_bench.py [path]
 """
@@ -22,16 +27,91 @@ RESOURCE_KEYS = {
     "ping_pong", "migration_bytes", "last_epoch_bytes", "quota_bytes",
     "migration_epochs", "flush_bytes",
 }
+TRACE_KEYS = {
+    "trace", "seed", "trace_steps", "steps", "lanes", "submitted",
+    "completed", "tokens", "wall_s", "tokens_per_s", "latency_ms",
+    "hit_rate", "hit_rate_steady", "resource_hit_steady", "migration_bytes",
+    "migration_bytes_per_s", "preemptions", "queued_peak", "tenants",
+    "resources",
+}
+TRACE_KINDS = {"zipf-hot", "diurnal-shift", "scan-antagonist"}
+TENANT_KEYS = {"weight", "completed", "tokens", "kv_hit_rate", "latency_ms"}
+LATENCY_KEYS = {"p50", "p99", "mean", "n"}
+
+
+def _check_resources(tag: str, resources: dict, errors: list[str]) -> None:
+    for name, row in resources.items():
+        rmissing = RESOURCE_KEYS - set(row)
+        if rmissing:
+            errors.append(f"{tag}/{name}: missing keys {sorted(rmissing)}")
+            continue
+        if row["quota_bytes"] and row["last_epoch_bytes"] > row["quota_bytes"]:
+            errors.append(
+                f"{tag}/{name}: last_epoch_bytes {row['last_epoch_bytes']}"
+                f" exceeds quota_bytes {row['quota_bytes']}")
+        if not 0.0 <= row["hit_rate"] <= 1.0:
+            errors.append(f"{tag}/{name}: hit_rate {row['hit_rate']} "
+                          "out of [0, 1]")
+        if row["hit_rate"] > 0 and row["fast_reads"] == 0:
+            errors.append(f"{tag}/{name}: nonzero hit_rate with zero "
+                          "fast_reads — read metering is broken")
+
+
+def _check_traffic(traffic: dict, errors: list[str]) -> None:
+    missing = {"quick", "arch", "lanes", "tenants", "traces"} - set(traffic)
+    if missing:
+        errors.append(f"traffic: missing keys {sorted(missing)}")
+        return
+    rows = {r.get("trace", "?"): r for r in traffic["traces"]}
+    absent = TRACE_KINDS - set(rows)
+    if absent:
+        errors.append(f"traffic: missing trace kinds {sorted(absent)}")
+    for kind, r in rows.items():
+        tag = f"traffic/{kind}"
+        missing = TRACE_KEYS - set(r)
+        if missing:
+            errors.append(f"{tag}: missing keys {sorted(missing)}")
+            continue
+        if len(r["tenants"]) < 2:
+            errors.append(f"{tag}: fewer than 2 tenants")
+        for tn, trow in r["tenants"].items():
+            tmissing = TENANT_KEYS - set(trow)
+            if tmissing:
+                errors.append(f"{tag}/{tn}: missing {sorted(tmissing)}")
+            elif LATENCY_KEYS - set(trow["latency_ms"]):
+                errors.append(f"{tag}/{tn}: incomplete latency row")
+        if LATENCY_KEYS - set(r["latency_ms"]):
+            errors.append(f"{tag}: incomplete latency_ms row")
+        if r["completed"] != r["submitted"]:
+            errors.append(f"{tag}: {r['submitted'] - r['completed']} "
+                          "requests never finished (undrained queue)")
+        if r["migration_bytes"] <= 0:
+            errors.append(f"{tag}: migration_bytes must be nonzero — the "
+                          "traffic bench moves real payload")
+        for key in ("hit_rate", "hit_rate_steady"):
+            if not 0.0 <= r[key] <= 1.0:
+                errors.append(f"{tag}: {key} {r[key]} out of [0, 1]")
+        _check_resources(tag, r["resources"], errors)
+    if TRACE_KINDS <= set(rows) and all(
+            "hit_rate_steady" in rows[k] for k in TRACE_KINDS):
+        z = rows["zipf-hot"]["hit_rate_steady"]
+        s = rows["scan-antagonist"]["hit_rate_steady"]
+        if not z > s:
+            errors.append(
+                f"traffic: adaptivity signal lost — zipf-hot steady hit "
+                f"rate {z:.3f} must exceed scan-antagonist {s:.3f}")
 
 
 def validate(path: str) -> list[str]:
     with open(path) as f:
         doc = json.load(f)
-    errors = []
-    if set(doc) != {"quick", "cases"}:
-        errors.append(f"top-level keys {sorted(doc)} != ['cases', 'quick']")
+    errors: list[str] = []
+    if not set(doc) <= {"quick", "cases", "traffic"} or \
+            not {"quick", "cases"} <= set(doc):
+        errors.append(f"top-level keys {sorted(doc)} not in expected "
+                      "['cases', 'quick'] (+ optional 'traffic')")
         return errors
-    if not doc["cases"]:
+    if not doc["cases"] and "traffic" not in doc:
         errors.append("no benchmark cases recorded")
     for case in doc["cases"]:
         arch = case.get("arch", "<missing arch>")
@@ -42,19 +122,9 @@ def validate(path: str) -> list[str]:
         if case["migration_bytes"] <= 0:
             errors.append(f"{arch}: migration_bytes must be nonzero — the "
                           "serve bench is expected to move real payload")
-        for name, row in case["resources"].items():
-            rmissing = RESOURCE_KEYS - set(row)
-            if rmissing:
-                errors.append(f"{arch}/{name}: missing keys "
-                              f"{sorted(rmissing)}")
-                continue
-            if row["quota_bytes"] and row["last_epoch_bytes"] > row["quota_bytes"]:
-                errors.append(
-                    f"{arch}/{name}: last_epoch_bytes {row['last_epoch_bytes']}"
-                    f" exceeds quota_bytes {row['quota_bytes']}")
-            if not 0.0 <= row["hit_rate"] <= 1.0:
-                errors.append(f"{arch}/{name}: hit_rate {row['hit_rate']} "
-                              "out of [0, 1]")
+        _check_resources(arch, case["resources"], errors)
+    if "traffic" in doc:
+        _check_traffic(doc["traffic"], errors)
     return errors
 
 
@@ -67,8 +137,11 @@ def main() -> int:
             print(f"FAIL: {e}", file=sys.stderr)
         return 1
     with open(path) as f:
-        n = len(json.load(f)["cases"])
-    print(f"BENCH_serve.json ok: {n} cases, schema + quota checks pass")
+        doc = json.load(f)
+    n = len(doc["cases"])
+    t = len(doc.get("traffic", {}).get("traces", []))
+    print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces, "
+          "schema + quota + adaptivity checks pass")
     return 0
 
 

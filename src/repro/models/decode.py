@@ -35,6 +35,14 @@ from repro.kernels.paged_attn import ops as pa_ops
 # cache construction
 # ---------------------------------------------------------------------------
 
+def _pos_col(pos: jax.Array, b: int) -> jax.Array:
+    """Decode positions as a (B, 1) column: ``pos`` is the scalar lockstep
+    counter (single-request serving) or a (B,) vector of per-lane positions
+    (continuous batching — each lane advances independently, DESIGN.md §9)."""
+    pos = jnp.asarray(pos)
+    return jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim else pos, (b, 1))
+
+
 def _attn_cache(cfg, batch, smax, dtype):
     if cfg.mla is not None:
         return attn.mla_init_cache(batch, smax, cfg.mla.kv_lora, cfg.mla.d_rope, dtype)
@@ -72,8 +80,13 @@ def init_cache(cfg: ArchConfig, batch: int, smax: int, dtype=jnp.bfloat16):
 
 
 def init_paged_cache(cfg: ArchConfig, batch: int, n_slots: int, page_t: int,
-                     dtype=jnp.bfloat16):
-    """NeoMem fast-tier paged cache for attention blocks; O(1) SSM states."""
+                     dtype=jnp.bfloat16, per_lane_pos: bool = False):
+    """NeoMem fast-tier paged cache for attention blocks; O(1) SSM states.
+
+    ``per_lane_pos=True`` makes ``pos`` a (batch,) vector so each batch row
+    (a continuous-batching lane) advances independently — required by the
+    request scheduler, which resets/preempts lanes mid-flight (DESIGN.md §9).
+    """
     def one(kind):
         if kind in ("mamba", "mlstm", "slstm"):
             return _block_cache(cfg, kind, batch, 0, dtype)
@@ -94,7 +107,8 @@ def init_paged_cache(cfg: ArchConfig, batch: int, n_slots: int, page_t: int,
     caches = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (g,) + x.shape),
         [one(kind) for kind in cfg.pattern])
-    out = {"blocks": caches, "pos": jnp.zeros((), jnp.int32)}
+    pos = jnp.zeros((batch,) if per_lane_pos else (), jnp.int32)
+    out = {"blocks": caches, "pos": pos}
     if cfg.moe and cfg.moe.n_dense_prologue:
         out["prologue"] = [one("attn") for _ in range(cfg.moe.n_dense_prologue)]
     return out
@@ -327,7 +341,7 @@ def _paged_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes, page_t,
         q = attn._rms(h @ p["attn"]["wq_a"], p["attn"]["q_norm"]) @ p["attn"]["wq_b"]
         q = q.reshape(b, cfg.n_heads, m.d_nope + m.d_rope)
         q_nope, q_rope = q[..., :m.d_nope], q[..., m.d_nope:]
-        pos_b = jnp.full((b, 1), pos)
+        pos_b = _pos_col(pos, b)
         q_rope = attn.apply_rope(q_rope[:, None], pos_b, cfg.rope_theta)[:, 0]
         wkv_b = p["attn"]["wkv_b"].reshape(m.kv_lora, cfg.n_heads, m.d_nope + m.d_v)
         w_k = wkv_b[..., :m.d_nope]
@@ -345,7 +359,7 @@ def _paged_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes, page_t,
     else:
         q, k, v = attn._proj_qkv(p["attn"], h, cfg.n_heads, cfg.n_kv_heads,
                                  cfg.head_dim)
-        pos_b = jnp.full((b, 1), pos)
+        pos_b = _pos_col(pos, b)
         if cfg.rope_theta > 0:
             q = attn.apply_rope(q, pos_b, cfg.rope_theta)
             k = attn.apply_rope(k, pos_b, cfg.rope_theta)
@@ -396,6 +410,8 @@ def decode_step_paged(cfg: ArchConfig, params, cache, token, *, page_t: int,
                       ep_axes=None, smesh=None, return_streams: bool = False):
     """Long-context decode over the NeoMem fast tier (hot pages only).
 
+    ``cache["pos"]`` may be the scalar lockstep counter or a (B,) vector of
+    per-lane positions (continuous batching, see :func:`init_paged_cache`).
     ``smesh``: {"mesh": Mesh, "axes": (...)} shards page slots across devices
     with cross-device flash-decode combining (production path).
     ``return_streams`` as in :func:`decode_step`."""

@@ -27,6 +27,18 @@ Access streams fed per decode step (DESIGN.md §3): the token column
 ``decode_step(..., return_streams=True)`` (experts), and the resident
 paged-KV window weighted by per-page fill (KV pages).
 
+Two serving modes share the machinery:
+
+  * single-request (``prefill``/``step``/``generate``) — one batched
+    prompt decoded lockstep, scalar position;
+  * continuous-batching lanes (``ServeConfig.lanes > 0``; DESIGN.md §9) —
+    the batch becomes independent decode *lanes* with per-lane positions,
+    driven one token per lane per ``advance_lanes`` call by the request
+    scheduler (serve/sched.py); the KV slow store is carved into
+    per-request segments, lanes reset/preempt/resume mid-flight
+    (``reset_lane``/``preempt_lane``/``resume_lane``, bit-exact), and
+    ``save_tiering``/``load_tiering`` checkpoint the placement maps.
+
 This is the substrate behind examples/serve_longctx.py and the serving
 benchmarks; the dry-run lowers the same step functions at production shapes.
 """
@@ -59,6 +71,14 @@ class ServeConfig:
     expert_quota: int = 32
     embed_hot_slots: int = 64       # hot vocab row-blocks kept HBM-resident
     embed_quota: int = 64
+    embed_rows_per_page: int = 0    # vocab rows per page (0 -> package default)
+    # Continuous-batching lane mode (serve/sched.py, DESIGN.md §9): the
+    # engine batch becomes `lanes` independent decode lanes with per-lane
+    # positions; the KV slow store is carved into `kv_segments` per-request
+    # address spaces of max_seq//page_t pages each.
+    lanes: int = 0                  # decode lanes (0 = single-request mode)
+    kv_segments: int = 0            # slow-store KV segments (0 -> lanes)
+    kv_tier_slots: int = 0          # kv fast-tier slots (0 -> hot_slots)
 
 
 class ServeEngine:
@@ -68,6 +88,8 @@ class ServeEngine:
         self.params = params
         self.scfg = scfg
         self.ep = ep_axes
+        if scfg.lanes and not scfg.paged:
+            raise ValueError("lane mode (ServeConfig.lanes) requires paged=True")
         self.daemon = tm.NeoMemDaemon()
         self._register_resources()
         self._want_streams = "experts" in self.daemon
@@ -75,7 +97,11 @@ class ServeEngine:
         self._decode_paged = jax.jit(self._decode_paged_fn)
         self.cache = None
         self.step_count = 0
-        self._kv_flushed: dict[int, tuple[int, int]] = {}  # slot -> (id, fill)
+        # (lane, slot) -> (page id, fill) change tracking for the KV flush
+        # (single-request mode uses lane 0)
+        self._kv_flushed: dict[tuple[int, int], tuple[int, int]] = {}
+        self._lane_active = np.zeros(max(scfg.lanes, 1), bool)
+        self._lane_segments = np.full(max(scfg.lanes, 1), -1, np.int32)
 
     def _register_resources(self) -> None:
         cfg, scfg = self.cfg, self.scfg
@@ -87,9 +113,13 @@ class ServeEngine:
                 if not scfg.paged:
                     raise ValueError("the 'kv' resource requires paged=True")
                 row_shape = self._kv_row_shape()
+                # lane mode: the slow store is carved into per-request
+                # segments, each a max_seq-worth of logical pages
+                n_segments = scfg.kv_segments or scfg.lanes or 1
                 spec = tm.ResourceSpec(
-                    "kv", n_pages=scfg.max_seq // scfg.page_t,
-                    hot_slots=scfg.hot_slots, quota_pages=scfg.kv_quota,
+                    "kv", n_pages=n_segments * self.pages_per_seq,
+                    hot_slots=scfg.kv_tier_slots or scfg.hot_slots,
+                    quota_pages=scfg.kv_quota,
                     row_shape=row_shape, row_dtype="bfloat16")
                 res = tm.make_resource(
                     "kv", spec, mass_threshold=scfg.kv_mass_threshold)
@@ -110,7 +140,7 @@ class ServeEngine:
                 res = tm.make_resource("experts", spec,
                                        n_experts=cfg.moe.n_experts)
             elif kind == "embeddings":
-                rows = tm.EMBED_ROWS_PER_PAGE
+                rows = scfg.embed_rows_per_page or tm.EMBED_ROWS_PER_PAGE
                 payload = self._embed_payload(rows)
                 spec = tm.ResourceSpec(
                     "embeddings", n_pages=(cfg.vocab + rows - 1) // rows,
@@ -118,7 +148,8 @@ class ServeEngine:
                     quota_pages=scfg.embed_quota,
                     row_shape=tuple(payload.shape[1:]),
                     row_dtype=str(payload.dtype))
-                res = tm.make_resource("embeddings", spec)
+                res = tm.make_resource("embeddings", spec,
+                                       rows_per_page=rows)
             else:
                 raise KeyError(f"unknown serve resource kind {kind!r}; "
                                f"known: {tm.resource_kinds()}")
@@ -174,6 +205,9 @@ class ServeEngine:
 
     # -- public API -----------------------------------------------------------
     def prefill(self, tokens: np.ndarray, aux_embeds=None):
+        if self.lane_mode:
+            raise ValueError("lane mode serves through advance_lanes (the "
+                             "request scheduler), not prefill/generate")
         b, s = tokens.shape
         self.aux = aux_embeds
         if self.cfg.encoder_layers and aux_embeds is not None:
@@ -209,6 +243,187 @@ class ServeEngine:
             out.append(nxt)
         return np.stack(out, axis=1)
 
+    # -- continuous-batching lane mode (serve/sched.py, DESIGN.md §9) ---------
+    @property
+    def pages_per_seq(self) -> int:
+        """Logical KV pages per request segment (= per max_seq sequence)."""
+        return self.scfg.max_seq // self.scfg.page_t
+
+    @property
+    def lane_mode(self) -> bool:
+        return self.scfg.lanes > 0
+
+    def start_lanes(self) -> None:
+        """Initialize the lane substrate: ``lanes`` independent decode lanes
+        over one paged ring with per-lane positions.  No prompt — the
+        scheduler streams prompt tokens through :meth:`advance_lanes`."""
+        scfg = self.scfg
+        if not self.lane_mode:
+            raise ValueError("start_lanes requires ServeConfig.lanes > 0")
+        self.cache = dec.init_paged_cache(self.cfg, scfg.lanes, scfg.hot_slots,
+                                          scfg.page_t, per_lane_pos=True)
+        # pristine one-lane template: reset_lane restores INITIAL values,
+        # which are not all zero (the m/sLSTM stabilizer state inits to -inf)
+        self._lane_init = dec.init_paged_cache(self.cfg, 1, scfg.hot_slots,
+                                               scfg.page_t, per_lane_pos=True)
+        self.aux = None
+        self._kv_flushed.clear()
+        self._lane_active = np.zeros(scfg.lanes, bool)
+        self._lane_segments = np.full(scfg.lanes, -1, np.int32)
+
+    def advance_lanes(self, tokens, active, segments) -> np.ndarray:
+        """One continuous-batching decode step for ALL lanes at once.
+
+        ``tokens`` (L,) — the next token of each lane's stream: a prompt
+        token while the lane prefills, the last sampled token while it
+        decodes, don't-care for inactive lanes (their compute is masked out
+        of every observation stream and never flushed).  ``active`` (L,)
+        bool, ``segments`` (L,) int — the lane's slow-store KV segment
+        (-1 = none).  Returns the last-position logits (L, vocab)."""
+        if not self.lane_mode:
+            raise ValueError("advance_lanes requires ServeConfig.lanes > 0")
+        if self.cache is None:
+            self.start_lanes()
+        self._lane_active = np.asarray(active, bool).copy()
+        self._lane_segments = np.asarray(segments, np.int32).copy()
+        tokens = np.asarray(tokens, np.int32)
+        tok = jnp.asarray(tokens)[:, None]
+        out = self._decode_paged(self.params, self.cache, tok)
+        if self._want_streams:
+            logits, self.cache, streams = out
+        else:
+            (logits, self.cache), streams = out, {}
+        self._observe_lanes(tokens, streams)
+        self._maybe_tick()
+        return np.asarray(logits[:, -1])
+
+    def _observe_lanes(self, tokens: np.ndarray, streams: dict) -> None:
+        """Feed the tiering streams with inactive lanes masked to -1 pads."""
+        act = self._lane_active
+        if "embeddings" in self.daemon:
+            toks = np.where(act, tokens, -1)
+            self.daemon.observe("embeddings", jnp.asarray(toks, jnp.int32))
+        if "experts" in self.daemon and streams.get("router") is not None:
+            router = streams["router"]        # (G, n_moe, L, 1, k)
+            mask = jnp.asarray(act)[None, None, :, None, None]
+            self.daemon.observe("experts", jnp.where(mask, router, -1))
+        if "kv" in self.daemon:
+            sv = self._kv_lane_stream()
+            if sv is not None:
+                mass, gids = sv
+                self.daemon.observe("kv", jnp.asarray(mass.reshape(-1)),
+                                    jnp.asarray(gids.reshape(-1), jnp.int32))
+
+    def reset_lane(self, lane: int) -> None:
+        """Return a lane to its initial state for a fresh request admission:
+        ring bookkeeping, O(1) recurrent states, and the lane position go
+        back to their INIT values from the pristine template (page payloads
+        may stay — ``page_len`` masks them)."""
+        def clear(entry: dict, tmpl: dict, idx, tmpl_idx) -> None:
+            for k, v in entry.items():
+                if k in ("k_pages", "v_pages"):
+                    continue
+                entry[k] = v.at[idx].set(tmpl[k][tmpl_idx])
+        for entry, tmpl in zip(self.cache["blocks"],
+                               self._lane_init["blocks"]):
+            if isinstance(entry, dict):
+                clear(entry, tmpl, (slice(None), lane), (slice(None), 0))
+        for entry, tmpl in zip(self.cache.get("prologue", []),
+                               self._lane_init.get("prologue", [])):
+            clear(entry, tmpl, lane, 0)
+        self.cache["pos"] = self.cache["pos"].at[lane].set(0)
+        self._invalidate_lane_flush(lane)
+
+    def preempt_lane(self, lane: int) -> dict:
+        """Evict a lane's request so the lane can serve someone else.
+
+        The lane's resident ring pages are force-flushed down to its KV
+        slow-store segment (the migration data plane — an exact snapshot of
+        the ring survives outside it), while the per-lane bookkeeping and
+        everything the tiered KV payload does not carry (O(1) recurrent
+        states, sibling attention positions beyond the representative entry,
+        the dense prologue ring) is snapshotted host-side into the returned
+        residual.  :meth:`resume_lane` restores bit-exactly."""
+        self._flush_kv_lanes(lanes=[lane], force=True)
+        residual = {"pos": int(np.asarray(self.cache["pos"])[lane]),
+                    "segment": int(self._lane_segments[lane]),
+                    "blocks": [], "prologue": []}
+        rep = self._paged_entry()
+        for entry in self.cache["blocks"]:
+            if not isinstance(entry, dict):
+                residual["blocks"].append({})
+                continue
+            skip = ("k_pages", "v_pages") if entry is rep else ()
+            residual["blocks"].append(
+                {k: np.asarray(v[:, lane]) for k, v in entry.items()
+                 if k not in skip})
+        for entry in self.cache.get("prologue", []):
+            residual["prologue"].append(
+                {k: np.asarray(v[lane]) for k, v in entry.items()})
+        return residual
+
+    def resume_lane(self, lane: int, residual: dict) -> None:
+        """Re-install a preempted request into a lane: residual bookkeeping
+        is restored and the representative entry's resident ring pages are
+        gathered back through the tiered KV store (fast-tier copy when
+        promoted, slow-tier fallback — bit-exact either way)."""
+        for entry, snap in zip(self.cache["blocks"], residual["blocks"]):
+            for k, v in snap.items():
+                entry[k] = entry[k].at[:, lane].set(
+                    jnp.asarray(v, entry[k].dtype))
+        for entry, snap in zip(self.cache.get("prologue", []),
+                               residual["prologue"]):
+            for k, v in snap.items():
+                entry[k] = entry[k].at[lane].set(jnp.asarray(v, entry[k].dtype))
+        self.cache["pos"] = self.cache["pos"].at[lane].set(residual["pos"])
+        self._invalidate_lane_flush(lane)
+        entry = self._paged_entry()
+        segment = residual["segment"]
+        if entry is None or segment < 0:
+            return
+        plen = np.asarray(entry["page_len"])[0, lane][None]      # (1, S)
+        cur = np.asarray(entry["cur_slot"])[0, lane][None]       # (1,)
+        pos = np.asarray([residual["pos"]])
+        local = self._ring_page_ids(plen, cur, pos, self.scfg.page_t)[0]
+        slots = np.flatnonzero(local >= 0)
+        if slots.size == 0:
+            return
+        gids = segment * self.pages_per_seq + local[slots]
+        rows = self.daemon["kv"].read_rows(jnp.asarray(gids, jnp.int32))
+        rows = jnp.moveaxis(rows, 0, 1)          # (G, n, T, hkv, dk+dv)
+        dk = self._kv_split_width()
+        entry["k_pages"] = entry["k_pages"].at[:, lane, slots].set(
+            rows[..., :dk].astype(entry["k_pages"].dtype))
+        entry["v_pages"] = entry["v_pages"].at[:, lane, slots].set(
+            rows[..., dk:].astype(entry["v_pages"].dtype))
+        for i, s in enumerate(slots):
+            self._kv_flushed[(lane, int(s))] = (int(gids[i]),
+                                                int(plen[0, s]))
+
+    def _kv_split_width(self) -> int:
+        """Last-axis K width inside a concatenated [K | V] payload row."""
+        cfg = self.cfg
+        if cfg.mla is not None:
+            return cfg.mla.kv_lora + cfg.mla.d_rope
+        return cfg.head_dim
+
+    def _invalidate_lane_flush(self, lane: int) -> None:
+        for key in [k for k in self._kv_flushed if k[0] == lane]:
+            del self._kv_flushed[key]
+
+    # -- tiering-state checkpoint (DESIGN.md §6) ------------------------------
+    def save_tiering(self, mgr, step: int) -> None:
+        """Checkpoint every resource's placement/profiling state through
+        ``ckpt/manager.py`` (one pure pytree; the pending FIFOs are
+        best-effort and re-derived from the next sketch epoch)."""
+        mgr.save(step, self.daemon.state_dict())
+
+    def load_tiering(self, mgr, step: int) -> None:
+        """Warm-restore the placement maps from a checkpoint; resident fast
+        rows are refilled from the bound slow stores (daemon.load_state), so
+        a restarted server serves with a warm placement map immediately."""
+        self.daemon.load_state(mgr.restore(step, self.daemon.state_dict()))
+
     # -- decode + NeoMem observation/cadence ----------------------------------
     def _advance(self, tok: jax.Array):
         """One decode step: run the jitted body, feed the tiering streams,
@@ -235,27 +450,70 @@ class ServeEngine:
             if ids.size:
                 self.daemon.observe("kv", mass, ids)
 
+    def _paged_entry(self) -> dict | None:
+        """The representative paged-attention cache entry (first in-pattern).
+
+        Its pages are the KV payload rows the tiered store carries; sibling
+        attention positions (and the dense prologue) share the same ring
+        geometry and travel in preemption residuals (see preempt_lane)."""
+        return next((c for c in self.cache["blocks"]
+                     if isinstance(c, dict) and "page_len" in c), None)
+
+    def _ring_view(self) -> tuple[np.ndarray, np.ndarray, np.ndarray] | None:
+        """Host view of the paged ring: (page_len (B, S), cur_slot (B,),
+        pos (B,)).  Group 0 is representative — all groups advance in
+        lockstep, one appended token per step."""
+        entry = self._paged_entry()
+        if entry is None:
+            return None
+        plen = np.asarray(entry["page_len"])[0]              # (B, S)
+        cur = np.asarray(entry["cur_slot"])[0]               # (B,)
+        pos = np.broadcast_to(np.asarray(self.cache["pos"]), cur.shape)
+        return plen, cur, pos
+
+    @staticmethod
+    def _ring_page_ids(plen: np.ndarray, cur: np.ndarray, pos: np.ndarray,
+                       page_t: int) -> np.ndarray:
+        """Per-row logical page id of every ring slot ((B, S); -1 = empty).
+
+        cur_slot advances eagerly when a page fills, so the page being
+        filled at cur is always floor(pos / page_t) — also on boundaries."""
+        n_slots = plen.shape[1]
+        cur_page = pos // page_t                             # (B,)
+        slots = np.arange(n_slots)[None]                     # (1, S)
+        ids = cur_page[:, None] - (cur[:, None] - slots) % n_slots
+        return np.where((plen > 0) & (ids >= 0), ids, -1)
+
     def _kv_page_stream(self) -> tuple[jax.Array, jax.Array]:
         """Resident paged-KV window as (per-page mass, logical page ids).
 
-        The paged cache is a ring of hot slots; per-page fill (page_len)
-        stands in for attention mass — full pages carry proportionally more
-        softmax mass on average.  Group 0 / batch row 0 is representative:
-        all rows advance in lockstep (one appended token per step)."""
-        entry = next((c for c in self.cache["blocks"]
-                      if isinstance(c, dict) and "page_len" in c), None)
-        if entry is None:
+        Single-request mode: per-page fill (page_len) stands in for
+        attention mass — full pages carry proportionally more softmax mass
+        on average.  Batch row 0 is representative: all rows advance in
+        lockstep."""
+        view = self._ring_view()
+        if view is None:
             return jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.int32)
-        plen = np.asarray(entry["page_len"])[0, 0]           # (n_slots,)
-        cur = int(np.asarray(entry["cur_slot"])[0, 0])
-        n_slots = plen.shape[0]
-        # cur_slot advances eagerly when a page fills, so the page being
-        # filled at cur is always floor(pos / page_t) — also on boundaries.
-        cur_page = int(self.cache["pos"]) // self.scfg.page_t
-        slots = np.arange(n_slots)
-        ids = cur_page - (cur - slots) % n_slots
-        ids = np.where((plen > 0) & (ids >= 0), ids, -1)
-        return jnp.asarray(plen, jnp.float32), jnp.asarray(ids, jnp.int32)
+        plen, cur, pos = view
+        ids = self._ring_page_ids(plen, cur, pos, self.scfg.page_t)[0]
+        return jnp.asarray(plen[0], jnp.float32), jnp.asarray(ids, jnp.int32)
+
+    def _kv_lane_stream(self, active: np.ndarray | None = None,
+                        ) -> tuple[np.ndarray, np.ndarray] | None:
+        """Lane mode: (mass (L, S), global page ids (L, S)) — each lane's
+        resident ring pages mapped into its slow-store segment's address
+        space; lanes outside ``active`` (default: the live mask) are -1."""
+        view = self._ring_view()
+        if view is None:
+            return None
+        plen, cur, pos = view
+        local = self._ring_page_ids(plen, cur, pos, self.scfg.page_t)
+        act = self._lane_active if active is None else np.asarray(active, bool)
+        seg = self._lane_segments[:, None].astype(np.int64)
+        gids = np.where((local >= 0) & act[:, None] & (seg >= 0),
+                        seg * self.pages_per_seq + local, -1)
+        mass = np.where(gids >= 0, plen, 0).astype(np.float32)
+        return mass, gids
 
     def _flush_kv_slow(self) -> None:
         """Flush the resident paged-cache window down to the KV data plane.
@@ -272,8 +530,7 @@ class ServeEngine:
         h = self.daemon["kv"]
         if h.mem.buffers is None:
             return
-        entry = next((c for c in self.cache["blocks"]
-                      if isinstance(c, dict) and "page_len" in c), None)
+        entry = self._paged_entry()
         if entry is None:
             return
         mass, ids = self._kv_page_stream()
@@ -282,7 +539,7 @@ class ServeEngine:
         ids = np.asarray(ids)
         fill = np.asarray(mass, np.int64)            # per-slot page_len
         changed = np.array([
-            self._kv_flushed.get(slot) != (int(ids[slot]), int(fill[slot]))
+            self._kv_flushed.get((0, slot)) != (int(ids[slot]), int(fill[slot]))
             for slot in range(ids.shape[0])])
         ids = np.where(changed, ids, -1)             # -1 lanes are dropped
         if not (ids >= 0).any():
@@ -292,7 +549,47 @@ class ServeEngine:
             [entry["k_pages"][:, 0], entry["v_pages"][:, 0]], axis=-1)
         h.write_rows(ids, jnp.moveaxis(pages, 1, 0))
         for slot in np.flatnonzero(ids >= 0):
-            self._kv_flushed[slot] = (int(ids[slot]), int(fill[slot]))
+            self._kv_flushed[(0, slot)] = (int(ids[slot]), int(fill[slot]))
+
+    def _flush_kv_lanes(self, lanes=None, force: bool = False) -> None:
+        """Lane-mode KV flush: every active lane's resident ring pages go
+        down to its slow-store segment through ``write_rows`` (real per-lane
+        payloads, unlike the single-request row-0 representative).  Pages
+        unchanged since the last flush are skipped unless ``force`` —
+        preemption forces a full flush of the evicted lane so the slow store
+        is an exact snapshot of its ring."""
+        h = self.daemon["kv"]
+        if h.mem.buffers is None:
+            return
+        entry = self._paged_entry()
+        if entry is None:
+            return
+        if lanes is None:
+            sv = self._kv_lane_stream()
+        else:
+            act = np.zeros(self.scfg.lanes, bool)
+            act[np.asarray(lanes, int)] = True
+            sv = self._kv_lane_stream(active=act)
+        if sv is None:
+            return
+        mass, gids = sv                              # (L, S)
+        fill = mass.astype(np.int64)
+        ids = gids.copy()
+        for lane, slot in np.argwhere(ids >= 0):
+            key = (int(lane), int(slot))
+            state = (int(gids[lane, slot]), int(fill[lane, slot]))
+            if not force and self._kv_flushed.get(key) == state:
+                ids[lane, slot] = -1
+        if not (ids >= 0).any():
+            return
+        # (G, L, S, T, hkv, dk+dv) -> (L*S, G, T, hkv, dk+dv) rows
+        pages = jnp.concatenate([entry["k_pages"], entry["v_pages"]], axis=-1)
+        rows = jnp.moveaxis(pages, 0, 2)             # (L, S, G, T, hkv, dk+dv)
+        rows = rows.reshape((-1,) + rows.shape[2:])  # (L*S, G, T, hkv, dk+dv)
+        h.write_rows(jnp.asarray(ids.reshape(-1), jnp.int32), rows)
+        for lane, slot in np.argwhere(ids >= 0):
+            self._kv_flushed[(int(lane), int(slot))] = (
+                int(gids[lane, slot]), int(fill[lane, slot]))
 
     def read_rows(self, name: str, page_ids) -> jax.Array:
         """Serve payload rows for a resource: fast-tier copy when the page
@@ -304,7 +601,10 @@ class ServeEngine:
         if self.daemon.resources \
                 and self.step_count % self.scfg.migration_interval == 0:
             if "kv" in self.daemon:
-                self._flush_kv_slow()
+                if self.lane_mode:
+                    self._flush_kv_lanes()
+                else:
+                    self._flush_kv_slow()
             self.daemon.tick()
 
     # -- telemetry ------------------------------------------------------------

@@ -1,0 +1,362 @@
+"""Continuous-batching request scheduler: many tenants, one tiered engine.
+
+The request lifecycle (DESIGN.md §9) over the ServeEngine lane substrate:
+
+    arrive ──> admit ──> prefill ──> decode ──> finish
+                 ^                     │
+                 └──── preempt <───────┘   (resume is bit-exact)
+
+* **arrive/admit** — requests queue per tenant; free decode lanes are
+  filled by a weighted-fair policy that reuses the daemon's
+  demand-proportional quota split (`tiering.daemon.split_quota`) with
+  per-tenant isolation weights: a tenant's target lane share is
+  proportional to ``weight x (running + queued)``, clamped at its own
+  demand.  Admission needs a free lane AND a free KV slow-store segment —
+  when either is exhausted (the paper's "slow tier full" condition at the
+  request level) arrivals stay queued.
+* **prefill** — iteration-level continuous batching: every lane consumes
+  exactly one token per engine step, a prompt token while prefilling, its
+  last sampled token while decoding, so new requests join the running
+  batch without draining it (the Orca-style schedule).
+* **decode** — one `advance_lanes` call per step serves all lanes; the
+  NeoMem daemon observes every tenant's streams and migrates on its own
+  cadence between steps.  The paged ring is the per-lane fast tier; filled
+  pages are flushed down to the lane's slow-store segment, so the ring
+  wrapping over old pages is a real fast-tier eviction, not data loss.
+* **preempt/finish** — the starvation guard: a tenant whose queue head has
+  waited longer than ``preempt_patience`` steps while the tenant holds no
+  lane preempts the most over-served tenant's youngest request.  Preemption
+  force-flushes the lane's resident pages to the slow tier and snapshots
+  the residual (`ServeEngine.preempt_lane`); resuming restores bit-exactly.
+
+Per-tenant telemetry rides the same `TierStats` schema the daemon uses:
+each step the scheduler looks the lanes' resident pages up in the KV
+placement map and meters fast/slow reads per tenant, so tenant isolation is
+observable in the same units as resource tiering (`benchmarks/
+traffic_bench.py` emits both).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve.engine import ServeEngine
+from repro.tiering.daemon import split_quota
+from repro.tiering.stats import TierStats
+
+
+@dataclasses.dataclass(frozen=True)
+class Tenant:
+    """One traffic source multiplexed onto the engine."""
+
+    name: str
+    weight: float = 1.0        # isolation weight in the lane/quota split
+
+
+@dataclasses.dataclass
+class SchedConfig:
+    preempt_patience: int = 16   # steps a lane-less tenant waits before
+    #                              its queue head may preempt someone
+    max_queue: int = 4096        # hard bound on queued requests
+
+
+@dataclasses.dataclass
+class Request:
+    """One request's lifecycle record (see module docstring)."""
+
+    rid: int
+    tenant: str
+    prompt: np.ndarray           # (P,) int32 prompt tokens
+    max_new: int                 # output tokens to generate
+    arrival_step: int = 0
+    state: str = "queued"        # queued | running | preempted | finished
+    lane: int = -1
+    segment: int = -1            # KV slow-store segment (kept while preempted)
+    pos: int = 0                 # tokens consumed so far (prompt + generated)
+    out: list = dataclasses.field(default_factory=list)
+    residual: dict | None = None  # preemption snapshot (engine residual)
+    queued_since: int = 0
+    admitted_step: int = -1
+    finished_step: int = -1
+    preemptions: int = 0
+    arrival_time: float = 0.0
+    token_times: list = dataclasses.field(default_factory=list)
+
+    @property
+    def n_prompt(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def prefilling(self) -> bool:
+        return self.pos < self.n_prompt
+
+
+class Scheduler:
+    """Multiplexes tenants' requests onto one ServeEngine/NeoMemDaemon."""
+
+    def __init__(self, engine: ServeEngine, tenants: list[Tenant],
+                 scfg: SchedConfig | None = None):
+        if not engine.lane_mode:
+            raise ValueError("Scheduler requires an engine with "
+                             "ServeConfig.lanes > 0")
+        if not tenants:
+            raise ValueError("at least one tenant required")
+        self.eng = engine
+        self.tenants = {t.name: t for t in tenants}
+        self.scfg = scfg or SchedConfig()
+        self.n_lanes = engine.scfg.lanes
+        n_seg = engine.scfg.kv_segments or self.n_lanes
+        self.free_segments = list(range(n_seg))
+        self.lanes: list[Request | None] = [None] * self.n_lanes
+        self.queue: list[Request] = []      # arrival order (incl. preempted)
+        self.finished: list[Request] = []
+        self.step_count = 0
+        self.preemptions = 0
+        self.queued_peak = 0
+        self._next_rid = 0
+        self.tenant_stats = {t: TierStats(name=t) for t in self.tenants}
+        if engine.cache is None:
+            engine.start_lanes()
+
+    # -- request intake -------------------------------------------------------
+    def submit(self, tenant: str, prompt: np.ndarray,
+               max_new: int) -> Request:
+        """Queue a request (the *arrive* stage).  Raises when the queue is
+        at its bound — backpressure belongs to the caller, not silent drop."""
+        if tenant not in self.tenants:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        if len(self.queue) >= self.scfg.max_queue:
+            raise RuntimeError(f"queue full ({self.scfg.max_queue})")
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if prompt.size == 0 or max_new < 1:
+            raise ValueError("need a non-empty prompt and max_new >= 1")
+        if prompt.size + max_new > self.eng.scfg.max_seq:
+            raise ValueError(
+                f"request length {prompt.size}+{max_new} exceeds the "
+                f"max_seq={self.eng.scfg.max_seq} KV segment")
+        req = Request(rid=self._next_rid, tenant=tenant, prompt=prompt,
+                      max_new=max_new, arrival_step=self.step_count,
+                      queued_since=self.step_count,
+                      arrival_time=time.perf_counter())
+        self._next_rid += 1
+        self.queue.append(req)
+        self.queued_peak = max(self.queued_peak, len(self.queue))
+        return req
+
+    # -- admission / preemption ----------------------------------------------
+    def _running_by_tenant(self) -> dict[str, int]:
+        counts = {t: 0 for t in self.tenants}
+        for r in self.lanes:
+            if r is not None:
+                counts[r.tenant] += 1
+        return counts
+
+    def _lane_shares(self) -> dict[str, int]:
+        """Target decode-lane allocation per tenant: the daemon's quota split
+        applied to lanes — demand = running + queued, weighted, clamped."""
+        running = self._running_by_tenant()
+        demands = {t: running[t] for t in self.tenants}
+        for r in self.queue:
+            demands[r.tenant] += 1
+        caps = {t: self.n_lanes for t in self.tenants}
+        weights = {t: self.tenants[t].weight for t in self.tenants}
+        return split_quota(self.n_lanes, demands, caps, weights)
+
+    def _admit(self) -> None:
+        if self.queue:
+            self._maybe_preempt()
+        free = [ln for ln, r in enumerate(self.lanes) if r is None]
+        while free and self.queue:
+            shares = self._lane_shares()
+            running = self._running_by_tenant()
+            heads: dict[str, Request] = {}
+            for r in self.queue:             # arrival order: first is head
+                heads.setdefault(r.tenant, r)
+            # the queued tenant with the largest share deficit wins the lane;
+            # deficit <= 0 everywhere falls back to FIFO (work-conserving)
+            pick = max(heads.values(),
+                       key=lambda r: (shares.get(r.tenant, 0)
+                                      - running[r.tenant],
+                                      -r.queued_since, -r.rid))
+            if shares.get(pick.tenant, 0) - running[pick.tenant] <= 0:
+                pick = self.queue[0]
+            if not self._install(pick, free[0]):
+                # no free KV segment for a fresh request — a preempted one
+                # (which kept its segment) can still take the lane
+                pre = next((r for r in self.queue
+                            if r.state == "preempted"), None)
+                if pre is None or not self._install(pre, free[0]):
+                    break
+            free.pop(0)
+
+    def _install(self, req: Request, lane: int) -> bool:
+        if req.state == "preempted":
+            self.eng.resume_lane(lane, req.residual)
+            req.residual = None
+        else:
+            if not self.free_segments:
+                return False
+            req.segment = self.free_segments.pop(0)
+            req.admitted_step = self.step_count
+            self.eng.reset_lane(lane)
+        req.state, req.lane = "running", lane
+        self.lanes[lane] = req
+        self.queue.remove(req)
+        return True
+
+    def _maybe_preempt(self) -> None:
+        """Starvation guard: one preemption per step, only for a tenant that
+        holds NO lane and whose queue head has out-waited the patience."""
+        if any(r is None for r in self.lanes):
+            return                            # a free lane serves them first
+        running = self._running_by_tenant()
+        starving = None
+        for r in self.queue:                  # arrival order
+            waited = self.step_count - r.queued_since
+            if running[r.tenant] == 0 and waited >= self.scfg.preempt_patience:
+                starving = r
+                break
+        if starving is None:
+            return
+        if starving.state == "queued" and not self.free_segments:
+            return                            # nowhere to hold its KV yet
+        # victim tenant: most over-served per unit weight; victim request:
+        # its youngest admission (least sunk work discarded)
+        cands = [t for t, n in running.items()
+                 if n > 0 and t != starving.tenant]
+        if not cands:
+            return
+        # a zero-weight tenant holding lanes is infinitely over-served
+        victim_t = max(cands,
+                       key=lambda t: running[t] / max(self.tenants[t].weight,
+                                                      1e-9))
+        victim = max((r for r in self.lanes
+                      if r is not None and r.tenant == victim_t),
+                     key=lambda r: r.admitted_step)
+        lane = victim.lane
+        self._preempt(victim)
+        # the freed lane goes to the starving head DIRECTLY — handing it to
+        # the weighted-fair pick would return it to the hog and thrash
+        self._install(starving, lane)
+
+    def _preempt(self, req: Request) -> None:
+        lane = req.lane
+        req.residual = self.eng.preempt_lane(lane)
+        self.lanes[lane] = None
+        req.state, req.lane = "preempted", -1
+        req.queued_since = self.step_count
+        req.preemptions += 1
+        self.preemptions += 1
+        self.queue.append(req)
+        self.queued_peak = max(self.queued_peak, len(self.queue))
+
+    def _finish(self, req: Request) -> None:
+        self.lanes[req.lane] = None
+        self.free_segments.append(req.segment)
+        req.state, req.lane = "finished", -1
+        req.finished_step = self.step_count
+        self.finished.append(req)
+
+    # -- the serving loop -----------------------------------------------------
+    def step(self) -> None:
+        """One scheduler iteration: admit, advance every lane one token,
+        sample/finish, meter per-tenant tier stats."""
+        self._admit()
+        tokens = np.zeros(self.n_lanes, np.int32)
+        active = np.zeros(self.n_lanes, bool)
+        segments = np.full(self.n_lanes, -1, np.int32)
+        for lane, req in enumerate(self.lanes):
+            if req is None:
+                continue
+            active[lane] = True
+            segments[lane] = req.segment
+            tokens[lane] = (req.prompt[req.pos] if req.prefilling
+                            else req.out[-1])
+        if active.any():
+            logits = self.eng.advance_lanes(tokens, active, segments)
+            now = time.perf_counter()
+            for lane, req in enumerate(list(self.lanes)):
+                if req is None:
+                    continue
+                req.pos += 1
+                if not req.prefilling:       # last prompt token or decoding
+                    req.out.append(int(np.argmax(logits[lane])))
+                    req.token_times.append(now)
+                    if len(req.out) >= req.max_new:
+                        self._finish(req)
+            self._meter_tenants()
+        self.step_count += 1
+
+    def run(self, max_steps: int = 10_000) -> None:
+        """Drain: run until every submitted request finished (or the bound)."""
+        while (self.queue or any(r is not None for r in self.lanes)):
+            if self.step_count >= max_steps:
+                raise RuntimeError(f"undrained after {max_steps} steps")
+            self.step()
+
+    # -- telemetry ------------------------------------------------------------
+    def _meter_tenants(self) -> None:
+        """Account each lane's resident KV pages against its tenant: a page
+        the placement map holds fast is a per-tenant fast read."""
+        if "kv" not in self.eng.daemon:
+            return
+        sv = self.eng._kv_lane_stream()
+        if sv is None:
+            return
+        _, gids = sv
+        h = self.eng.daemon["kv"]
+        _, hit = h.lookup(jnp.asarray(gids.reshape(-1), jnp.int32))
+        hit = np.asarray(hit).reshape(gids.shape)
+        valid = gids >= 0
+        for lane, req in enumerate(self.lanes):
+            if req is None:
+                continue
+            st = self.tenant_stats[req.tenant]
+            f = int(np.sum(hit[lane] & valid[lane]))
+            st.fast_reads += f
+            st.slow_reads += int(np.sum(valid[lane])) - f
+
+    @staticmethod
+    def _latency_row(reqs: list[Request]) -> dict:
+        """p50/p99/mean per-token latency (ms): gaps between a request's
+        consecutive emitted tokens, plus arrival -> first token."""
+        gaps = []
+        for r in reqs:
+            stamps = [r.arrival_time] + r.token_times
+            gaps.extend(np.diff(stamps))
+        if not gaps:
+            return {"p50": 0.0, "p99": 0.0, "mean": 0.0, "n": 0}
+        g = np.asarray(gaps) * 1e3
+        return {"p50": float(np.percentile(g, 50)),
+                "p99": float(np.percentile(g, 99)),
+                "mean": float(np.mean(g)), "n": int(g.size)}
+
+    def report(self) -> dict:
+        """The traffic-bench schema row for this run (BENCH_serve.json)."""
+        done = self.finished
+        tenants = {}
+        for name, ten in self.tenants.items():
+            reqs = [r for r in done if r.tenant == name]
+            st = self.tenant_stats[name]
+            total = st.fast_reads + st.slow_reads
+            tenants[name] = {
+                "weight": ten.weight,
+                "completed": len(reqs),
+                "tokens": sum(len(r.out) for r in reqs),
+                "kv_hit_rate": st.fast_reads / max(total, 1),
+                "latency_ms": self._latency_row(reqs),
+            }
+        return {
+            "steps": self.step_count,
+            "submitted": self._next_rid,
+            "completed": len(done),
+            "tokens": sum(len(r.out) for r in done),
+            "preemptions": self.preemptions,
+            "queued_peak": self.queued_peak,
+            "latency_ms": self._latency_row(done),
+            "tenants": tenants,
+            "resources": self.eng.tier_stats(),
+        }

@@ -21,6 +21,8 @@ bytes metered per resource (DESIGN.md §8).
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.tiering.memory import (DaemonParams, MigrationEvent, TieredMemory,
                                   TieredMemoryState, lookup)
@@ -29,35 +31,63 @@ from repro.tiering.stats import TierStats
 
 
 def split_quota(budget: int, demands: dict[str, int],
-                caps: dict[str, int] | None = None) -> dict[str, int]:
+                caps: dict[str, int] | None = None,
+                weights: dict[str, float] | None = None) -> dict[str, int]:
     """Largest-remainder proportional split of the shared migration budget.
 
     ``caps`` bounds each share by what that resource can actually promote in
     one batch (its static quota width) — un-servable backlog must not draw
     budget away from resources that could use it.
+
+    ``weights`` are isolation weights (default 1.0 each, DESIGN.md §9): when
+    the budget binds, shares are proportional to ``weight x servable demand``
+    and any share that would exceed its own demand is clamped there, with the
+    freed budget redistributed among the rest (weighted max-min).  An entry
+    with weight <= 0 is isolated out entirely under contention — it only
+    receives budget when the total demand fits.  The same split serves two
+    layers: the daemon's per-resource migration budget and the request
+    scheduler's per-tenant decode-lane allocation (serve/sched.py).
     """
     eff = {n: min(d, caps[n]) if caps else d for n, d in demands.items()}
     total = sum(eff.values())
     if total <= budget:
         return eff
-    exact = {n: budget * d / total for n, d in eff.items()}
-    shares = {n: int(e) for n, e in exact.items()}
-    leftover = budget - sum(shares.values())
-    for n in sorted(eff, key=lambda n: exact[n] - shares[n], reverse=True):
-        if leftover <= 0:
+    w = {n: 1.0 if weights is None else float(weights.get(n, 1.0))
+         for n in eff}
+    shares = {n: 0 for n in eff}
+    open_ = [n for n in eff if eff[n] > 0 and w[n] > 0]
+    remaining = budget
+    while open_ and remaining > 0:
+        tot = sum(w[n] * eff[n] for n in open_)
+        exact = {n: remaining * w[n] * eff[n] / tot for n in open_}
+        clamped = [n for n in open_ if exact[n] >= eff[n]]
+        if not clamped:
+            for n in open_:
+                shares[n] = int(exact[n])
+            leftover = remaining - sum(shares[n] for n in open_)
+            for n in sorted(open_, key=lambda n: exact[n] - shares[n],
+                            reverse=True):
+                if leftover <= 0:
+                    break
+                shares[n] += 1   # stays <= eff[n]: exact < eff, eff integral
+                leftover -= 1
             break
-        shares[n] += 1    # stays <= eff[n]: exact < eff and eff is integral
-        leftover -= 1
+        for n in clamped:            # demand-bound: give it all, redistribute
+            shares[n] = eff[n]
+            remaining -= eff[n]
+        open_ = [n for n in open_ if n not in clamped]
     return shares
 
 
 class ResourceHandle:
     """A registered resource's live view: state pytree + stats + encoder."""
 
-    def __init__(self, name: str, resource: TieredResource, mem: TieredMemory):
+    def __init__(self, name: str, resource: TieredResource, mem: TieredMemory,
+                 weight: float = 1.0):
         self.name = name
         self.resource = resource
         self.mem = mem
+        self.weight = weight          # isolation weight in the quota split
         self.state: TieredMemoryState = mem.init()
         self.stats = TierStats(name=name)
 
@@ -83,8 +113,18 @@ class ResourceHandle:
         self.stats.quota_bytes = self.mem.quota_bytes
 
     def read_rows(self, page_ids) -> jax.Array:
-        """Serve payload rows: fast-buffer copy on hit, slow-tier fallback."""
-        return self.mem.read_rows(self.state, page_ids)
+        """Serve payload rows: fast-buffer copy on hit, slow-tier fallback.
+
+        Served reads are metered into ``stats.fast_reads``/``slow_reads`` —
+        they are real tier accesses, exactly like the observation stream's
+        touch accounting (invalid ids < 0 are padding and not counted).
+        """
+        ids = jnp.asarray(page_ids, jnp.int32)
+        slots, _ = lookup(self.state, ids)        # the ONE placement lookup
+        hits = int(np.sum(np.asarray(slots) >= 0))
+        self.stats.fast_reads += hits
+        self.stats.slow_reads += int(np.sum(np.asarray(ids) >= 0)) - hits
+        return self.mem.read_rows(self.state, ids, slots=slots)
 
     def write_rows(self, page_ids, rows) -> None:
         """Owner payload refresh, both tiers kept coherent; bytes metered."""
@@ -96,6 +136,11 @@ class ResourceHandle:
 
     def snapshot(self) -> dict:
         row = self.stats.as_row()
+        # merge the not-yet-drained device-side period counters so the read
+        # counts are consistent with hit_rate() (which always merged them) —
+        # a row must never report 0 reads next to a nonzero hit rate
+        row["fast_reads"] += int(self.state.tier.fast_reads)
+        row["slow_reads"] += int(self.state.tier.slow_reads)
         row["hit_rate"] = self.hit_rate()
         return row
 
@@ -110,8 +155,14 @@ class NeoMemDaemon:
 
     # -- registration --------------------------------------------------------
     def register(self, resource: TieredResource, *,
-                 policy_params=None, fixed_theta=None) -> ResourceHandle:
-        """Register a resource; its ResourceSpec is the single sizing source."""
+                 policy_params=None, fixed_theta=None,
+                 weight: float = 1.0) -> ResourceHandle:
+        """Register a resource; its ResourceSpec is the single sizing source.
+
+        ``weight`` is the resource's isolation weight in the shared-budget
+        split (``split_quota``): under contention a resource's share is
+        proportional to ``weight x servable demand``.
+        """
         spec = resource.spec
         if spec.name in self.resources:
             raise ValueError(f"resource {spec.name!r} already registered")
@@ -122,7 +173,7 @@ class NeoMemDaemon:
                 clear_interval=self.dp.clear_interval,
                 quota_pages=spec.quota_pages),
             policy_params=policy_params, fixed_theta=fixed_theta)
-        handle = ResourceHandle(spec.name, resource, mem)
+        handle = ResourceHandle(spec.name, resource, mem, weight=weight)
         self.resources[spec.name] = handle
         return handle
 
@@ -154,7 +205,8 @@ class NeoMemDaemon:
             for name, h in self.resources.items():
                 h.state, demands[name] = h.mem.collect(h.state, h.stats)
             caps = {n: h.mem.quota for n, h in self.resources.items()}
-            shares = split_quota(self.budget, demands, caps)
+            weights = {n: h.weight for n, h in self.resources.items()}
+            shares = split_quota(self.budget, demands, caps, weights)
             for name, h in self.resources.items():
                 h.state, event = h.mem.migrate(h.state, h.stats,
                                                quota=shares.get(name, 0))
@@ -173,6 +225,46 @@ class NeoMemDaemon:
             for h in self.resources.values():
                 h.state = h.mem.clear(h.state)
         return events
+
+    # -- checkpointing (DESIGN.md §6) ----------------------------------------
+    def state_dict(self) -> dict[str, TieredMemoryState]:
+        """Every resource's TieredMemoryState, as ONE pure pytree.
+
+        The returned tree checkpoints directly through ``ckpt/manager.py``;
+        a restored server resumes with a warm placement map.  The host-side
+        pending FIFOs are best-effort (DESIGN.md §6) and not included — they
+        are re-derived from the next sketch epoch after restore.
+        """
+        return {n: h.state for n, h in self.resources.items()}
+
+    def load_state(self, states: dict[str, TieredMemoryState]) -> None:
+        """Restore a ``state_dict()`` pytree into the registered resources.
+
+        Structure and leaf shapes must match the registered geometry.  For
+        resources with bound payload buffers, the fast copies of every
+        resident page are re-gathered from the slow store, so the restored
+        placement map never serves a cold fast row.
+        """
+        for name, st in states.items():
+            if name not in self.resources:
+                raise KeyError(f"state for unregistered resource {name!r}")
+            h = self.resources[name]
+            if jax.tree.structure(st) != jax.tree.structure(h.state):
+                raise ValueError(
+                    f"{name}: checkpointed state structure does not match")
+            for cur, new in zip(jax.tree.leaves(h.state),
+                                jax.tree.leaves(st)):
+                if jnp.shape(cur) != jnp.shape(new):
+                    raise ValueError(
+                        f"{name}: leaf shape {jnp.shape(new)} != registered "
+                        f"geometry {jnp.shape(cur)}")
+            h.state = jax.tree.map(
+                lambda cur, new: jnp.asarray(new, jnp.asarray(cur).dtype), h.state, st)
+            # the pending backlog belongs to the PRE-restore stream — keeping
+            # it would promote stale pages into the restored placement map
+            h.mem.clear_pending()
+            h.stats.pending = 0
+            h.mem.refill_fast(h.state)
 
     # -- telemetry -----------------------------------------------------------
     def stats(self) -> dict[str, TierStats]:

@@ -195,18 +195,41 @@ class TieredMemory:
             stats.migration_epochs += 1
         return moved
 
-    def read_rows(self, state: TieredMemoryState, page_ids) -> jax.Array:
+    def refill_fast(self, state: TieredMemoryState) -> None:
+        """Re-gather the fast copy of every resident page from the slow store.
+
+        Used after restoring a checkpointed placement map (DESIGN.md §6):
+        the restored ``TierState`` says which pages are resident, but the
+        rebuilt fast buffer is cold — without the refill, ``read_rows``
+        would serve stale rows for pages the map calls hits.  A no-op when
+        no payload is bound.
+        """
+        if self.buffers is None:
+            return
+        slot_page = np.asarray(state.tier.slot_page)
+        occupied = np.flatnonzero(slot_page >= 0)
+        if occupied.size == 0:
+            return
+        fast = self.buffers.fast.at[occupied].set(
+            self.buffers.slow[slot_page[occupied]])
+        self.buffers = self.buffers._replace(fast=fast)
+
+    def read_rows(self, state: TieredMemoryState, page_ids,
+                  slots: jax.Array | None = None) -> jax.Array:
         """Serve page payloads: fast-tier copy on hit, slow-tier fallback.
 
         The gathers are partitioned host-side by the hit mask, so fast-tier
         hits never touch the slow store — on real hardware a 100% hit batch
         costs zero pinned-host bandwidth.  (:func:`migrate.read_rows` is the
-        fused single-gather variant for in-jit consumers.)
+        fused single-gather variant for in-jit consumers.)  ``slots`` lets a
+        caller that already looked the ids up (e.g. the daemon handle's read
+        metering) skip the second placement lookup.
         """
         if self.buffers is None:
             raise ValueError("no payload bound — call bind_data() first")
         page_ids = jnp.asarray(page_ids, jnp.int32)
-        slots, _ = lookup(state, page_ids)
+        if slots is None:
+            slots, _ = lookup(state, page_ids)
         slots_np = np.asarray(slots)
         ids_np = np.maximum(np.asarray(page_ids), 0)
         hit = slots_np >= 0
@@ -284,6 +307,11 @@ class TieredMemory:
         self.enqueue(hot)
         stats.pending = len(self._pending)
         return state._replace(prof=prof), len(self._pending)
+
+    def clear_pending(self) -> None:
+        """Drop the host-side overflow queue (e.g. on checkpoint restore:
+        the backlog belongs to the pre-restore stream, DESIGN.md §6)."""
+        self._pending = np.empty((0,), np.int64)
 
     def enqueue(self, pages) -> None:
         """Queue externally-detected hot pages (baseline profilers, tests)."""

@@ -61,12 +61,17 @@ class ExpertStreamResource(StreamResource):
         self.n_experts = n_experts
 
     def encode_stream(self, router_streams: jax.Array) -> jax.Array:
-        """(G, n_moe, ..., k) router expert indices -> flat page stream."""
+        """(G, n_moe, ..., k) router expert indices -> flat page stream.
+
+        Negative router entries are padding (e.g. inactive scheduler lanes
+        masked out of the stream) and stay -1 after encoding.
+        """
         g = router_streams.shape[0]
         group_ids = jnp.arange(g, dtype=jnp.int32).reshape(
             (g,) + (1,) * (router_streams.ndim - 1))
-        pages = (group_ids * self.n_experts
-                 + router_streams.astype(jnp.int32)).reshape(-1)
+        router = router_streams.astype(jnp.int32)
+        pages = jnp.where(router >= 0, group_ids * self.n_experts + router,
+                          -1).reshape(-1)
         return _subsample(pages, self.spec.stream_cap)
 
 

@@ -1,0 +1,10 @@
+"""repro.workloads — trace-driven multi-tenant workload generators.
+
+Seeded, replayable arrival traces (zipf-hot / diurnal-shift /
+scan-antagonist) for the continuous-batching scheduler; see
+:mod:`repro.workloads.traces` and DESIGN.md §9.
+"""
+from repro.workloads.traces import (  # noqa: F401
+    DEFAULT_TENANTS, TRACE_KINDS, Arrival, TenantProfile, Trace, make_trace,
+    play,
+)

@@ -1,0 +1,148 @@
+"""Trace-driven multi-tenant workloads: the traffic NeoMem's payoff needs.
+
+The paper evaluates adaptivity against *shifting* access patterns (dynamic
+hotspots, antagonist scans); HybridTier stresses workload drift, and the
+CXL-at-scale study shows contention tails are the metric that matters.  This
+module generates the request-level analogue: seeded, replayable arrival
+traces for the scheduler (`serve/sched.py`), where each tenant draws prompt
+CONTENT from a distribution the tiering daemon can (or cannot) exploit:
+
+  * ``zipf-hot``        — every tenant samples tokens from a static Zipf
+                          head: a stable hot set the sketch should find and
+                          pin (the daemon's best case).
+  * ``diurnal-shift``   — the Zipf head rotates through the vocab every
+                          ``shift_period`` scheduler steps: the hot set
+                          drifts and the placement map must follow
+                          (Fig. 16-style convergence, continuously).
+  * ``scan-antagonist`` — tenant 0 keeps its Zipf head while tenant 1 sweeps
+                          the vocab sequentially: the scan has no reusable
+                          hot set, thrashes promotions, and drags the
+                          steady-state hit rate below ``zipf-hot`` — the
+                          adaptivity gap the traffic benchmark asserts.
+
+Arrival PROCESSES are deliberately identical across kinds for the same seed
+(same per-step Bernoulli draws, same prompt/output lengths) — only token
+content differs, so hit-rate deltas between traces measure the access
+pattern, not accidental load differences.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+TRACE_KINDS = ("zipf-hot", "diurnal-shift", "scan-antagonist")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantProfile:
+    """One tenant's traffic shape (weights feed the scheduler's fair split)."""
+
+    name: str
+    weight: float = 1.0
+    rate: float = 0.2              # P(one arrival) per scheduler step
+    prompt_len: tuple[int, int] = (8, 17)    # [lo, hi) token range
+    out_len: tuple[int, int] = (4, 13)       # [lo, hi) output-token range
+
+
+@dataclasses.dataclass(frozen=True)
+class Arrival:
+    step: int                      # scheduler step the request arrives at
+    tenant: str
+    tokens: np.ndarray             # (P,) int32 prompt
+    max_new: int
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    kind: str
+    seed: int
+    vocab: int
+    n_steps: int
+    tenants: tuple[TenantProfile, ...]
+    arrivals: tuple[Arrival, ...]
+
+    def by_step(self) -> dict[int, list[Arrival]]:
+        out: dict[int, list[Arrival]] = {}
+        for a in self.arrivals:
+            out.setdefault(a.step, []).append(a)
+        return out
+
+
+DEFAULT_TENANTS = (
+    TenantProfile("interactive", weight=2.0, rate=0.22,
+                  prompt_len=(6, 13), out_len=(4, 9)),
+    TenantProfile("batch", weight=1.0, rate=0.12,
+                  prompt_len=(10, 21), out_len=(8, 17)),
+)
+
+
+@functools.lru_cache(maxsize=8)
+def _zipf_probs(vocab: int, a: float) -> np.ndarray:
+    p = 1.0 / np.arange(1, vocab + 1, dtype=np.float64) ** a
+    return p / p.sum()
+
+
+def _zipf_tokens(rng: np.random.Generator, n: int, vocab: int, a: float,
+                 phase: int) -> np.ndarray:
+    """Zipf-ranked tokens; ``phase`` rotates which ids form the hot head."""
+    ranks = rng.choice(vocab, size=n, p=_zipf_probs(vocab, a))
+    return ((ranks + phase) % vocab).astype(np.int32)
+
+
+def make_trace(kind: str, *, n_steps: int = 200, vocab: int = 256,
+               tenants: tuple[TenantProfile, ...] = DEFAULT_TENANTS,
+               seed: int = 0, zipf_a: float = 1.4,
+               shift_period: int = 64) -> Trace:
+    """Build one seeded, replayable arrival trace (see module docstring).
+
+    The structural draws (arrival steps, prompt/output lengths) come from a
+    dedicated RNG stream shared by every kind; token content comes from a
+    second stream — so for a fixed seed, traces of different kinds carry
+    the SAME load at the same steps and differ only in what they touch.
+    """
+    if kind not in TRACE_KINDS:
+        raise KeyError(f"unknown trace kind {kind!r}; known: {TRACE_KINDS}")
+    struct = np.random.default_rng(np.random.SeedSequence([seed, 0xA11]))
+    content = np.random.default_rng(np.random.SeedSequence([seed, 0xB22]))
+    scan_cursor = 0
+    arrivals: list[Arrival] = []
+    for step in range(n_steps):
+        for ti, t in enumerate(tenants):
+            if struct.random() >= t.rate:
+                continue
+            plen = int(struct.integers(*t.prompt_len))
+            n_out = int(struct.integers(*t.out_len))
+            if kind == "scan-antagonist" and ti == 1:
+                # the antagonist sweeps the vocab with no reuse
+                tokens = ((scan_cursor + np.arange(plen)) % vocab
+                          ).astype(np.int32)
+                scan_cursor = (scan_cursor + plen) % vocab
+            else:
+                phase = ((step // shift_period) * (vocab // 3)
+                         if kind == "diurnal-shift" else 0)
+                tokens = _zipf_tokens(content, plen, vocab, zipf_a, phase)
+            arrivals.append(Arrival(step=step, tenant=t.name, tokens=tokens,
+                                    max_new=n_out))
+    return Trace(kind=kind, seed=seed, vocab=vocab, n_steps=n_steps,
+                 tenants=tuple(tenants), arrivals=tuple(arrivals))
+
+
+def play(trace: Trace, sched, *, max_steps: int | None = None,
+         on_step=None) -> None:
+    """Replay a trace into a Scheduler: submit each step's arrivals, step
+    the engine, then drain until every request finished.  ``on_step`` (if
+    given) is called with the scheduler after every step — benchmark hooks
+    such as the steady-state counter snapshot."""
+    due = trace.by_step()
+    horizon = max_steps or max(2000, 50 * trace.n_steps)
+    while sched.step_count < trace.n_steps or sched.queue \
+            or any(r is not None for r in sched.lanes):
+        if sched.step_count >= horizon:
+            raise RuntimeError(f"trace undrained after {horizon} steps")
+        for a in due.get(sched.step_count, []):
+            sched.submit(a.tenant, a.tokens, a.max_new)
+        sched.step()
+        if on_step is not None:
+            on_step(sched)

@@ -4,6 +4,7 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.ckpt.manager import CheckpointManager
 
@@ -61,3 +62,111 @@ def test_elastic_restore_single_device(tmp_path):
     shardings = jax.tree.map(lambda _: sh, t)
     r = mgr.restore(5, jax.tree.map(jnp.zeros_like, t), shardings=shardings)
     np.testing.assert_allclose(np.asarray(r["a"]), np.asarray(t["a"]))
+
+
+# -- TieredMemoryState checkpointing (DESIGN.md §6, ROADMAP item) -------------
+
+def _warm_daemon(stream_seed=0):
+    """A small embeddings-tiered daemon with bound payload (the SAME table
+    every time — a restarted server rebinds identical params), warmed by a
+    seed-dependent skewed stream so the placement map holds promotions."""
+    import repro.tiering as tm
+    daemon = tm.NeoMemDaemon()
+    spec = tm.ResourceSpec("embeddings", n_pages=32, hot_slots=4,
+                           quota_pages=8, row_shape=(8, 16),
+                           row_dtype="float32")
+    h = daemon.register(tm.make_resource("embeddings", spec, rows_per_page=8))
+    table = jax.random.normal(jax.random.PRNGKey(0), (32, 8, 16))
+    h.bind_data(table)
+    rng = np.random.default_rng(stream_seed)
+    for _ in range(32):
+        toks = (rng.zipf(1.5, size=64) % 32) * 8   # hot head of row pages
+        h.observe(jnp.asarray(toks, jnp.int32))
+        daemon.tick()
+    return daemon, h, table
+
+
+def test_tiering_state_roundtrip(tmp_path):
+    """TieredMemoryState is a pure pytree: save through CheckpointManager,
+    restore into a FRESH daemon, and the placement map + profiling state
+    come back bit-exact, with fast buffers refilled for resident pages."""
+    daemon, h, table = _warm_daemon()
+    promoted = np.flatnonzero(np.asarray(h.state.tier.page_slot) >= 0)
+    assert promoted.size > 0                     # the warmup actually promoted
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, daemon.state_dict())
+
+    daemon2, h2, _ = _warm_daemon(stream_seed=99)   # differently-warmed server
+    daemon2.load_state(mgr.restore(3, daemon2.state_dict()))
+    for a, b in zip(jax.tree.leaves(daemon.state_dict()),
+                    jax.tree.leaves(daemon2.state_dict())):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # warm placement: the restored map serves promoted pages from the fast
+    # tier, and read_rows returns the right payload (refill_fast coherence)
+    ids = jnp.asarray(promoted[:4], jnp.int32)
+    _, hit = h2.lookup(ids)
+    assert bool(np.asarray(hit).all())
+    np.testing.assert_allclose(
+        np.asarray(h2.read_rows(ids)),
+        np.asarray(jnp.asarray(table, jnp.float32)[promoted[:4]]),
+        rtol=1e-6)
+
+
+def test_tiering_state_load_validates_geometry(tmp_path):
+    import repro.tiering as tm
+    daemon, _, _ = _warm_daemon()
+    with pytest.raises(KeyError):
+        daemon.load_state({"nope": daemon.state_dict()["embeddings"]})
+    other = tm.NeoMemDaemon()
+    spec = tm.ResourceSpec("embeddings", n_pages=16, hot_slots=2,
+                           quota_pages=4)
+    other.register(tm.make_resource("embeddings", spec))
+    with pytest.raises(ValueError):              # 16-page map into 32-page tier
+        daemon.load_state(other.state_dict())
+
+
+def test_serve_engine_warm_restart(tmp_path):
+    """A restarted ServeEngine resumes with the warm placement map: after
+    load_tiering, hit rates and read_rows match the pre-restart server."""
+    from repro.configs.registry import get_smoke_config
+    from repro.models import transformer as tr
+    from repro.serve.engine import ServeConfig, ServeEngine
+    cfg = get_smoke_config("llama3.2-3b")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_seq=32, resources=("embeddings",),
+                       embed_hot_slots=4, embed_rows_per_page=8,
+                       migration_interval=4)
+    eng = ServeEngine(cfg, params, scfg)
+    prompt = (np.arange(2 * 10).reshape(2, 10) * 3) % 64   # skewed vocab use
+    eng.generate(prompt, n_tokens=8)
+    mgr = CheckpointManager(str(tmp_path))
+    eng.save_tiering(mgr, step=1)
+
+    eng2 = ServeEngine(cfg, params, scfg)                  # the restart
+    h2 = eng2.daemon["embeddings"]
+    assert int(np.sum(np.asarray(h2.state.tier.page_slot) >= 0)) == 0
+    eng2.load_tiering(mgr, step=1)
+    h1 = eng.daemon["embeddings"]
+    np.testing.assert_array_equal(np.asarray(h1.state.tier.page_slot),
+                                  np.asarray(h2.state.tier.page_slot))
+    resident = np.flatnonzero(np.asarray(h2.state.tier.page_slot) >= 0)
+    assert resident.size > 0
+    ids = jnp.asarray(resident[:2], jnp.int32)
+    np.testing.assert_array_equal(np.asarray(eng.read_rows("embeddings", ids)),
+                                  np.asarray(eng2.read_rows("embeddings", ids)))
+
+
+def test_restore_clears_stale_pending(tmp_path):
+    """The pending FIFO belongs to the pre-restore stream: after
+    load_state, a tick with no new observations must not promote stale
+    backlog into the freshly restored placement map."""
+    daemon, h, _ = _warm_daemon()
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, daemon.state_dict())
+    daemon2, h2, _ = _warm_daemon(stream_seed=99)
+    h2.mem.enqueue(np.arange(20))                # pre-restore backlog
+    daemon2.load_state(mgr.restore(1, daemon2.state_dict()))
+    assert len(h2.mem._pending) == 0
+    before = np.asarray(h2.state.tier.page_slot).copy()
+    daemon2.tick()                               # no observations since restore
+    np.testing.assert_array_equal(before, np.asarray(h2.state.tier.page_slot))
