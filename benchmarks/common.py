@@ -24,6 +24,14 @@ def emit(name: str, us_per_call: float, derived: str) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
+def steady_start(n_steps: int) -> int:
+    """First scheduler step of the steady-state measurement window (the
+    second half of the arrival window).  ONE convention shared by
+    traffic_bench's adaptivity gate and serve_bench's mass-fidelity A/B —
+    the two gates must never measure different windows."""
+    return n_steps // 2
+
+
 def update_bench_json(path: str, **sections) -> None:
     """Read-modify-write BENCH_serve.json: replace the given top-level
     sections, preserving every other — the serve and traffic writers stay

@@ -5,7 +5,16 @@ rows, plus experts on the MoE arch) on smoke-scale models and records the
 perf trajectory into ``BENCH_serve.json`` — one row per served arch with
 throughput, the unified TierStats snapshot of every registered resource,
 and the migration data plane's measured traffic (payload bytes the daemon
-epochs physically moved, next to the hit rates they bought).
+epochs physically moved, next to the hit rates they bought).  The decode
+steps read embedding/expert rows in-jit through the tiered store and the
+"kv" resource profiles kernel-exported softmax mass (DESIGN.md §10).
+
+It also runs the hotness-fidelity A/B (the ``mass_ab`` section): the
+zipf-hot trace served twice, once with the old ``page_len`` fill proxy and
+once with the kernel-true mass stream — identical trace, identical model,
+only the profiling stream differs.  CI gates kernel >= fill on the
+steady-state KV hit rate (validate_bench.py): the paper's claim that
+proxy quality, not policy, limits tiering, measured in-repo.
 
 The emitted schema is documented key-by-key in benchmarks/README.md and
 validated in CI by benchmarks/validate_bench.py.
@@ -21,8 +30,10 @@ import numpy as np
 from repro.configs.registry import get_smoke_config
 from repro.models import transformer as tr
 from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.sched import SchedConfig, Scheduler, Tenant
+from repro.workloads import DEFAULT_TENANTS, make_trace, play
 
-from benchmarks.common import emit, update_bench_json
+from benchmarks.common import emit, steady_start, update_bench_json
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
@@ -35,6 +46,14 @@ CASES = [
                              resources=("experts", "embeddings"),
                              expert_hot_slots=2, embed_hot_slots=2), 2, 16),
 ]
+
+# The fidelity A/B: kv-only lane serving over the zipf-hot trace, fill proxy
+# vs kernel mass (ServeConfig.kv_mass_source) — everything else identical.
+AB_ARCH = "llama3.2-3b"
+AB_ARRIVAL = "mmpp"
+AB_KW = dict(max_seq=64, paged=True, page_t=4, hot_slots=6,
+             migration_interval=4, kv_quota=16, kv_tier_slots=12,
+             kv_mass_threshold=0.01, lanes=4, kv_segments=6)
 
 
 def _bench(arch: str, scfg_kw: dict, batch: int, prompt_len: int,
@@ -63,6 +82,58 @@ def _bench(arch: str, scfg_kw: dict, batch: int, prompt_len: int,
     }
 
 
+def _kv_counts(eng) -> tuple[int, int]:
+    row = eng.tier_stats()["kv"]
+    return row["fast_reads"], row["slow_reads"]
+
+
+def _mass_ab_run(source: str, n_steps: int) -> dict:
+    """One arm of the fidelity A/B: the zipf-hot trace through the lane
+    scheduler with the given "kv" mass source; the steady-state window is
+    ``common.steady_start`` — the same convention traffic_bench uses."""
+    cfg = get_smoke_config(AB_ARCH)
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params,
+                      ServeConfig(**AB_KW, kv_mass_source=source))
+    sched = Scheduler(eng, [Tenant(t.name, t.weight) for t in DEFAULT_TENANTS],
+                      SchedConfig(preempt_patience=24))
+    trace = make_trace("zipf-hot", n_steps=n_steps, vocab=cfg.vocab, seed=0,
+                       arrival=AB_ARRIVAL)
+    mid: list[tuple[int, int]] = []
+
+    def snap(s):
+        if not mid and s.step_count >= steady_start(trace.n_steps):
+            mid.append(_kv_counts(eng))
+
+    t0 = time.perf_counter()
+    play(trace, sched, on_step=snap)
+    wall = time.perf_counter() - t0
+    rep = sched.report()
+    f1, s1 = mid[0]
+    f2, s2 = _kv_counts(eng)
+    return {
+        "kv_mass_source": source,
+        "steps": rep["steps"],
+        "tokens": rep["tokens"],
+        "wall_s": wall,
+        "kv_hit": f2 / max(f2 + s2, 1),
+        "kv_hit_steady": (f2 - f1) / max((f2 + s2) - (f1 + s1), 1),
+        "kv_promoted": rep["resources"]["kv"]["promoted"],
+        "migration_bytes": rep["resources"]["kv"]["migration_bytes"],
+    }
+
+
+def _mass_ab(quick: bool) -> dict:
+    # even the quick arm needs enough steps for the placement map to
+    # converge past its cold start — the fidelity signal lives in the
+    # steady-state window, not the warmup
+    n_steps = 160 if quick else 320
+    rows = {src: _mass_ab_run(src, n_steps) for src in ("fill", "kernel")}
+    return {"arch": AB_ARCH, "trace": "zipf-hot", "arrival": AB_ARRIVAL,
+            "lanes": AB_KW["lanes"], "seed": 0, "trace_steps": n_steps,
+            "fill": rows["fill"], "kernel": rows["kernel"]}
+
+
 def run(quick: bool = False):
     n_tokens = 8 if quick else 32
     rows = [_bench(arch, kw, batch, plen, n_tokens)
@@ -73,7 +144,12 @@ def run(quick: bool = False):
         emit(f"serve_{r['arch']}", r["wall_s"] * 1e6 / (r['batch'] * n_tokens),
              f"tok_s={r['tokens_per_s']:.1f} "
              f"mig_B_s={r['migration_bytes_per_s']:.0f} {hits}")
-    update_bench_json(OUT_PATH, quick=quick, cases=rows)
+    ab = _mass_ab(quick)
+    emit("serve_mass_ab", 0.0,
+         f"kv_hit_steady kernel={ab['kernel']['kv_hit_steady']:.3f} "
+         f"fill={ab['fill']['kv_hit_steady']:.3f} "
+         f"gap={ab['kernel']['kv_hit_steady'] - ab['fill']['kv_hit_steady']:+.3f}")
+    update_bench_json(OUT_PATH, quick=quick, cases=rows, mass_ab=ab)
     emit("serve_bench_json", 0.0, os.path.normpath(OUT_PATH))
     return rows
 

@@ -14,6 +14,14 @@ token content differs (workloads/traces.py), so the zipf-hot trace must
 reach a HIGHER steady-state hit rate than scan-antagonist — a stable hot
 set the sketch can find and pin versus an antagonist scan thrashing it.
 
+Arrivals follow the bursty MMPP process (2-state modulated Bernoulli,
+workloads/traces.py): same mean offered load as plain Bernoulli, but the
+queueing/preemption pressure — and thus the p99 story — lives in the
+bursts, as in production serving traces.  The "kv" resource profiles the
+kernel-exported softmax mass (ServeConfig.kv_mass_source, DESIGN.md §10);
+the fill-vs-kernel fidelity A/B itself lives in serve_bench.py
+(``mass_ab``).
+
     PYTHONPATH=src:. python benchmarks/traffic_bench.py [--quick]
 """
 from __future__ import annotations
@@ -30,12 +38,13 @@ from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.sched import SchedConfig, Scheduler, Tenant
 from repro.workloads import DEFAULT_TENANTS, TRACE_KINDS, make_trace, play
 
-from benchmarks.common import emit, update_bench_json
+from benchmarks.common import emit, steady_start, update_bench_json
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 
 ARCH = "llama3.2-3b"
 LANES = 4
+ARRIVAL = "mmpp"
 SERVE_KW = dict(
     max_seq=64, paged=True, page_t=4, hot_slots=6, migration_interval=4,
     resources=("embeddings",), embed_hot_slots=6, embed_quota=8,
@@ -67,12 +76,14 @@ def _bench_trace(kind: str, params, n_steps: int, seed: int) -> dict:
     cfg = get_smoke_config(ARCH)
     eng = ServeEngine(cfg, params, ServeConfig(**SERVE_KW))
     tenants = [Tenant(t.name, t.weight) for t in DEFAULT_TENANTS]
-    sched = Scheduler(eng, tenants, SchedConfig(preempt_patience=24))
-    trace = make_trace(kind, n_steps=n_steps, vocab=cfg.vocab, seed=seed)
+    sched = Scheduler(eng, tenants, SchedConfig(preempt_patience=24,
+                                                seed=seed))
+    trace = make_trace(kind, n_steps=n_steps, vocab=cfg.vocab, seed=seed,
+                       arrival=ARRIVAL)
     mid_counts: list[dict] = []
 
     def snap_mid(s):                             # steady-state window start
-        if not mid_counts and s.step_count >= trace.n_steps // 2:
+        if not mid_counts and s.step_count >= steady_start(trace.n_steps):
             mid_counts.append(_read_counts(eng))
 
     t0 = time.perf_counter()
@@ -88,6 +99,8 @@ def _bench_trace(kind: str, params, n_steps: int, seed: int) -> dict:
     return {
         "trace": kind,
         "seed": trace.seed,
+        "arrival": trace.arrival,
+        "kv_mass_source": eng.scfg.kv_mass_source,
         "trace_steps": trace.n_steps,
         "steps": rep["steps"],
         "lanes": LANES,
@@ -134,6 +147,7 @@ def run(quick: bool = False):
         "quick": quick,
         "arch": ARCH,
         "lanes": LANES,
+        "arrival": ARRIVAL,
         "tenants": {t.name: t.weight for t in DEFAULT_TENANTS},
         "traces": rows,
     })

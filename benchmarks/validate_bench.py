@@ -7,7 +7,14 @@ quota.  When the ``traffic`` section is present (benchmarks/
 traffic_bench.py), additionally checks the multi-tenant trace schema — all
 three trace kinds, >= 2 tenants, latency percentiles, drained queues — and
 the NeoMem adaptivity signal: the zipf-hot trace's steady-state hit rate
-must exceed scan-antagonist's.  Run after ``make bench-serve`` /
+must exceed scan-antagonist's.
+
+The ``mass_ab`` section (written by serve_bench, so ``make bench-serve``
+runs the gate in the CI fast tier) carries the hotness-fidelity A/B:
+the zipf trace served with the kernel-exported softmax-mass stream vs the
+old page-fill proxy.  The gate asserts kernel >= fill on the steady-state
+KV hit rate — device-true hotness must never profile WORSE than the
+host proxy it replaced (DESIGN.md §10).  Run after ``make bench-serve`` /
 ``make bench-traffic``:
 
     PYTHONPATH=src:. python benchmarks/validate_bench.py [path]
@@ -28,15 +35,20 @@ RESOURCE_KEYS = {
     "migration_epochs", "flush_bytes",
 }
 TRACE_KEYS = {
-    "trace", "seed", "trace_steps", "steps", "lanes", "submitted",
-    "completed", "tokens", "wall_s", "tokens_per_s", "latency_ms",
-    "hit_rate", "hit_rate_steady", "resource_hit_steady", "migration_bytes",
-    "migration_bytes_per_s", "preemptions", "queued_peak", "tenants",
-    "resources",
+    "trace", "seed", "arrival", "kv_mass_source", "trace_steps", "steps",
+    "lanes", "submitted", "completed", "tokens", "wall_s", "tokens_per_s",
+    "latency_ms", "hit_rate", "hit_rate_steady", "resource_hit_steady",
+    "migration_bytes", "migration_bytes_per_s", "preemptions", "queued_peak",
+    "tenants", "resources",
 }
 TRACE_KINDS = {"zipf-hot", "diurnal-shift", "scan-antagonist"}
+ARRIVAL_KINDS = {"bernoulli", "mmpp"}
 TENANT_KEYS = {"weight", "completed", "tokens", "kv_hit_rate", "latency_ms"}
 LATENCY_KEYS = {"p50", "p99", "mean", "n"}
+MASS_AB_KEYS = {"arch", "trace", "arrival", "lanes", "seed", "trace_steps",
+                "fill", "kernel"}
+MASS_AB_ARM_KEYS = {"kv_mass_source", "steps", "tokens", "wall_s", "kv_hit",
+                    "kv_hit_steady", "kv_promoted", "migration_bytes"}
 
 
 def _check_resources(tag: str, resources: dict, errors: list[str]) -> None:
@@ -72,6 +84,8 @@ def _check_traffic(traffic: dict, errors: list[str]) -> None:
         if missing:
             errors.append(f"{tag}: missing keys {sorted(missing)}")
             continue
+        if r["arrival"] not in ARRIVAL_KINDS:
+            errors.append(f"{tag}: unknown arrival process {r['arrival']!r}")
         if len(r["tenants"]) < 2:
             errors.append(f"{tag}: fewer than 2 tenants")
         for tn, trow in r["tenants"].items():
@@ -102,14 +116,43 @@ def _check_traffic(traffic: dict, errors: list[str]) -> None:
                 f"rate {z:.3f} must exceed scan-antagonist {s:.3f}")
 
 
+def _check_mass_ab(ab: dict, errors: list[str]) -> None:
+    missing = MASS_AB_KEYS - set(ab)
+    if missing:
+        errors.append(f"mass_ab: missing keys {sorted(missing)}")
+        return
+    for arm in ("fill", "kernel"):
+        amissing = MASS_AB_ARM_KEYS - set(ab[arm])
+        if amissing:
+            errors.append(f"mass_ab/{arm}: missing {sorted(amissing)}")
+            return
+        if ab[arm]["kv_mass_source"] != arm:
+            errors.append(f"mass_ab/{arm}: arm records kv_mass_source "
+                          f"{ab[arm]['kv_mass_source']!r}")
+        for key in ("kv_hit", "kv_hit_steady"):
+            if not 0.0 <= ab[arm][key] <= 1.0:
+                errors.append(f"mass_ab/{arm}: {key} out of [0, 1]")
+    if ab["fill"]["steps"] != ab["kernel"]["steps"] or \
+            ab["fill"]["tokens"] != ab["kernel"]["tokens"]:
+        errors.append("mass_ab: arms served different load — the A/B must "
+                      "replay the identical trace")
+    k = ab["kernel"]["kv_hit_steady"]
+    f = ab["fill"]["kv_hit_steady"]
+    if not k >= f:
+        errors.append(
+            f"mass_ab: hotness-fidelity gate lost — kernel-mass steady KV "
+            f"hit rate {k:.3f} must be >= fill-proxy {f:.3f} "
+            "(device-true hotness profiling worse than the host proxy)")
+
+
 def validate(path: str) -> list[str]:
     with open(path) as f:
         doc = json.load(f)
     errors: list[str] = []
-    if not set(doc) <= {"quick", "cases", "traffic"} or \
+    if not set(doc) <= {"quick", "cases", "traffic", "mass_ab"} or \
             not {"quick", "cases"} <= set(doc):
         errors.append(f"top-level keys {sorted(doc)} not in expected "
-                      "['cases', 'quick'] (+ optional 'traffic')")
+                      "['cases', 'quick'] (+ optional 'traffic', 'mass_ab')")
         return errors
     if not doc["cases"] and "traffic" not in doc:
         errors.append("no benchmark cases recorded")
@@ -123,6 +166,11 @@ def validate(path: str) -> list[str]:
             errors.append(f"{arch}: migration_bytes must be nonzero — the "
                           "serve bench is expected to move real payload")
         _check_resources(arch, case["resources"], errors)
+    if doc["cases"] and "mass_ab" not in doc:
+        errors.append("mass_ab section missing — serve_bench runs the "
+                      "fill-vs-kernel fidelity A/B (DESIGN.md §10)")
+    if "mass_ab" in doc:
+        _check_mass_ab(doc["mass_ab"], errors)
     if "traffic" in doc:
         _check_traffic(doc["traffic"], errors)
     return errors
@@ -140,8 +188,11 @@ def main() -> int:
         doc = json.load(f)
     n = len(doc["cases"])
     t = len(doc.get("traffic", {}).get("traces", []))
-    print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces, "
-          "schema + quota + adaptivity checks pass")
+    ab = doc.get("mass_ab")
+    gap = (f", mass A/B gap {ab['kernel']['kv_hit_steady'] - ab['fill']['kv_hit_steady']:+.3f}"
+           if ab else "")
+    print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces{gap}, "
+          "schema + quota + adaptivity + fidelity checks pass")
     return 0
 
 

@@ -10,6 +10,15 @@ last axis, so read-modify-write accumulation is well-defined).
 Supports GQA (q heads grouped over kv heads), per-page token counts (partial
 last page), invalid-page masking (pages the tiering layer could not promote)
 and gemma2-style logit soft-capping.
+
+NeoProf mass export (DESIGN.md §10): with ``return_page_stats=True`` the
+kernel additionally writes per-page PER-HEAD softmax partials — the page's
+local score max ``page_m`` and local denominator ``page_l = Σ exp(s -
+page_m)`` — in the SAME VMEM pass that computes the output (the hardware
+analogue of NeoProf snooping access intensity at line rate: zero extra HBM
+reads).  Rescaled against the global (m, l) they yield each page's true
+share of the step's attention mass; that rescale lives in ``ops.page_mass``
+and, for the sharded path, ``ops.combine_stats``.
 """
 from __future__ import annotations
 
@@ -30,6 +39,8 @@ def _paged_attn_kernel(
     m_ref,        # (1, H, 1)  f32 running max
     l_ref,        # (1, H, 1)  f32 running denom
     acc_ref,      # (1, H, dh) f32 running numerator
+    pm_ref=None,  # (1, 1, H)  f32 page-local score max (page-stats mode)
+    pl_ref=None,  # (1, 1, H)  f32 page-local denom     (page-stats mode)
     *, scale: float, softcap: float, groups: int,
 ):
     p = pl.program_id(1)
@@ -58,8 +69,9 @@ def _paged_attn_kernel(
     tok = jax.lax.broadcasted_iota(jnp.int32, (h, t), 1)
     s = jnp.where(tok < n_valid, s, NEG_INF)
 
+    m_page = jnp.max(s, axis=1)                           # (H,) page-local max
     m_prev = m_ref[0, :, 0]                               # (H,)
-    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    m_cur = jnp.maximum(m_prev, m_page)
     # guard fully-masked pages: keep m finite math stable
     alpha = jnp.exp(jnp.minimum(m_prev - m_cur, 0.0))
     p_ij = jnp.exp(s - m_cur[:, None])
@@ -73,17 +85,32 @@ def _paged_attn_kernel(
     l_ref[0, :, 0] = l_cur
     acc_ref[0] = acc
 
+    if pm_ref is not None:
+        # page-local partials under the page's OWN max — rescaled to the
+        # global max outside the kernel (ops.page_mass / combine_stats), so
+        # this page's block never needs revisiting.
+        p_loc = jnp.where(tok < n_valid, jnp.exp(s - m_page[:, None]), 0.0)
+        pm_ref[0, 0] = m_page
+        pl_ref[0, 0] = jnp.sum(p_loc, axis=1)
 
-@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret"))
+
+@functools.partial(jax.jit, static_argnames=("scale", "softcap", "interpret",
+                                             "return_page_stats"))
 def paged_attention_raw(
     q: jax.Array,          # (B, H, dh)
     k_pages: jax.Array,    # (B, P, T, Hkv, dk)
     v_pages: jax.Array,    # (B, P, T, Hkv, dv)
     page_lengths: jax.Array,  # (B, P) int32 — 0 marks an invalid page
     *, scale: float | None = None, softcap: float = 0.0,
-    interpret: bool = True,
+    interpret: bool = True, return_page_stats: bool = False,
 ):
-    """Unnormalized flash-decode stats (m, l, acc) — for cross-shard combine."""
+    """Unnormalized flash-decode stats (m, l, acc) — for cross-shard combine.
+
+    With ``return_page_stats`` the result is (m, l, acc, page_m, page_l)
+    where ``page_m``/``page_l`` are the (B, P, H) page-local softmax
+    partials (see module docstring) — fully-masked pages report
+    ``page_m = NEG_INF, page_l = 0``.
+    """
     b, h, dh = q.shape
     _, p, t, hkv, _ = k_pages.shape
     dv = v_pages.shape[-1]
@@ -92,7 +119,23 @@ def paged_attention_raw(
     kern = functools.partial(
         _paged_attn_kernel, scale=scale, softcap=softcap, groups=groups)
 
-    m, l, acc = pl.pallas_call(
+    out_specs = [
+        pl.BlockSpec((1, h, 1), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, h, 1), lambda i, j: (i, 0, 0)),
+        pl.BlockSpec((1, h, dv), lambda i, j: (i, 0, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+        jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
+        jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
+    ]
+    if return_page_stats:
+        out_specs += [pl.BlockSpec((1, 1, h), lambda i, j: (i, j, 0)),
+                      pl.BlockSpec((1, 1, h), lambda i, j: (i, j, 0))]
+        out_shape += [jax.ShapeDtypeStruct((b, p, h), jnp.float32),
+                      jax.ShapeDtypeStruct((b, p, h), jnp.float32)]
+
+    outs = pl.pallas_call(
         kern,
         grid=(b, p),
         in_specs=[
@@ -101,25 +144,43 @@ def paged_attention_raw(
             pl.BlockSpec((1, 1, t, hkv, dv), lambda i, j: (i, j, 0, 0, 0)),
             pl.BlockSpec((1, 1), lambda i, j: (i, j)),
         ],
-        out_specs=[
-            pl.BlockSpec((1, h, 1), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((1, h, 1), lambda i, j: (i, 0, 0)),
-            pl.BlockSpec((1, h, dv), lambda i, j: (i, 0, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
-            jax.ShapeDtypeStruct((b, h, 1), jnp.float32),
-            jax.ShapeDtypeStruct((b, h, dv), jnp.float32),
-        ],
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
     )(q, k_pages, v_pages, page_lengths.astype(jnp.int32))
-    return m, l, acc
+    return tuple(outs)
 
 
 def paged_attention(q, k_pages, v_pages, page_lengths, *,
-                    scale=None, softcap: float = 0.0, interpret: bool = True):
-    m, l, acc = paged_attention_raw(
-        q, k_pages, v_pages, page_lengths,
-        scale=scale, softcap=softcap, interpret=interpret)
-    out = acc / jnp.maximum(l, 1e-30)
-    return out.astype(q.dtype)
+                    scale=None, softcap: float = 0.0, interpret: bool = True,
+                    return_mass: bool = False):
+    """Normalized paged decode attention.
+
+    ``return_mass=True`` additionally returns the (B, P) per-page share of
+    the step's softmax mass (head-averaged; masses of the valid pages sum
+    to 1) — the kernel-true hotness stream for the "kv" tiered resource
+    (DESIGN.md §10)."""
+    if not return_mass:
+        m, l, acc = paged_attention_raw(
+            q, k_pages, v_pages, page_lengths,
+            scale=scale, softcap=softcap, interpret=interpret)
+        return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    m, l, acc, page_m, page_l = paged_attention_raw(
+        q, k_pages, v_pages, page_lengths, scale=scale, softcap=softcap,
+        interpret=interpret, return_page_stats=True)
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    return out, page_mass(m, l, page_m, page_l)
+
+
+def page_mass(m: jax.Array, l: jax.Array,
+              page_m: jax.Array, page_l: jax.Array) -> jax.Array:
+    """Normalize page-local partials into per-page softmax mass.
+
+    ``m``/``l``: (B, H, 1) global running max/denominator; ``page_m``/
+    ``page_l``: (B, P, H) page-local partials.  Returns (B, P) f32 — each
+    page's head-averaged share of total attention mass (valid pages sum to
+    1; fully-masked pages contribute exactly 0)."""
+    m_glob = jnp.swapaxes(m, 1, 2)                        # (B, 1, H)
+    l_glob = jnp.swapaxes(l, 1, 2)
+    mass = page_l * jnp.exp(page_m - m_glob) / jnp.maximum(l_glob, 1e-30)
+    return jnp.mean(mass, axis=-1)

@@ -1,19 +1,15 @@
-"""Pure-jnp oracle for paged decode attention."""
+"""Pure-jnp oracle for paged decode attention (+ per-page softmax mass)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 
-def paged_attention_ref(q, k_pages, v_pages, page_lengths,
-                        scale=None, softcap: float = 0.0):
+def _scores(q, k_pages, page_lengths, scale, softcap):
     b, h, dk = q.shape
     _, p, t, hkv, _ = k_pages.shape
-    dv = v_pages.shape[-1]
     groups = h // hkv
     scale = (dk ** -0.5) if scale is None else scale
-
     k = jnp.repeat(k_pages, groups, axis=3).reshape(b, p * t, h, dk)
-    v = jnp.repeat(v_pages, groups, axis=3).reshape(b, p * t, h, dv)
     s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if softcap > 0.0:
@@ -21,9 +17,43 @@ def paged_attention_ref(q, k_pages, v_pages, page_lengths,
     tok = jnp.arange(p * t) % t
     page = jnp.arange(p * t) // t
     valid = tok[None, :] < page_lengths[:, page]            # (B, P*T)
-    s = jnp.where(valid[:, None, :], s, -1e30)
+    return jnp.where(valid[:, None, :], s, -1e30), valid
+
+
+def paged_attention_ref(q, k_pages, v_pages, page_lengths,
+                        scale=None, softcap: float = 0.0):
+    b, h, _ = q.shape
+    _, p, t, hkv, _ = k_pages.shape
+    dv = v_pages.shape[-1]
+    groups = h // hkv
+    v = jnp.repeat(v_pages, groups, axis=3).reshape(b, p * t, h, dv)
+    s, valid = _scores(q, k_pages, page_lengths, scale, softcap)
     w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
     w = jnp.where(valid[:, None, :], w, 0.0)
     out = jnp.einsum("bht,bthd->bhd", w, v.astype(jnp.float32))
     out = out / jnp.maximum(jnp.sum(w, axis=-1)[..., None], 1e-30)
     return out.astype(q.dtype)
+
+
+def softmax_denominator_ref(q, k_pages, page_lengths,
+                            scale=None, softcap: float = 0.0):
+    """(max (B,H), denom (B,H)): the flash-decode (m, l) ground truth —
+    global score max and Σ exp(s - m) over every valid token."""
+    s, valid = _scores(q, k_pages, page_lengths, scale, softcap)
+    m = jnp.max(s, axis=-1)                                 # (B, H)
+    w = jnp.where(valid[:, None, :], jnp.exp(s - m[..., None]), 0.0)
+    return m, jnp.sum(w, axis=-1)
+
+
+def page_mass_ref(q, k_pages, page_lengths,
+                  scale=None, softcap: float = 0.0):
+    """(B, P) per-page share of softmax mass, head-averaged (valid pages
+    sum to 1) — the oracle for the kernel's page-stats export."""
+    b, h, _ = q.shape
+    _, p, t, _, _ = k_pages.shape
+    s, valid = _scores(q, k_pages, page_lengths, scale, softcap)
+    w = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    w = jnp.where(valid[:, None, :], w, 0.0)                # (B, H, P*T)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+    per_page = jnp.sum(w.reshape(b, h, p, t), axis=-1)      # (B, H, P)
+    return jnp.mean(per_page, axis=1)

@@ -29,6 +29,7 @@ from repro.models import moe as moe_lib
 from repro.models import xlstm as xl
 from repro.models.layers import apply_norm, embed_apply, logits_apply, mlp_apply
 from repro.kernels.paged_attn import ops as pa_ops
+from repro.tiering.migrate import lookup_rows as _tier_lookup_rows
 
 
 # ---------------------------------------------------------------------------
@@ -41,6 +42,25 @@ def _pos_col(pos: jax.Array, b: int) -> jax.Array:
     (continuous batching — each lane advances independently, DESIGN.md §9)."""
     pos = jnp.asarray(pos)
     return jnp.broadcast_to(pos.reshape(-1, 1) if pos.ndim else pos, (b, 1))
+
+
+def _embed_tokens(params, token, tiered):
+    """Token embedding, served from the NeoMem tiered store when bound.
+
+    With a ``tiered["embeddings"]`` view ({"fast", "slow", "page_slot",
+    "rows_per_page"}), the row is gathered THROUGH the device-resident
+    placement table inside the caller's jit (DESIGN.md §10): fast-buffer
+    copy when the vocab row-block is promoted, slow-store fallback
+    otherwise — bit-exact either way (tiers are inclusive), so the tiered
+    read is a drop-in for the dense table gather."""
+    tv = (tiered or {}).get("embeddings")
+    if tv is None:
+        return embed_apply(params["embed"], token)
+    rpp = tv["rows_per_page"]
+    rows = _tier_lookup_rows(tv["fast"], tv["slow"], tv["page_slot"],
+                             token // rpp)          # (B, 1, rpp, d)
+    r = (token % rpp)[..., None, None]
+    return jnp.take_along_axis(rows, r, axis=-2)[..., 0, :]
 
 
 def _attn_cache(cfg, batch, smax, dtype):
@@ -141,7 +161,26 @@ def prefill(cfg: ArchConfig, params, tokens, *, aux_embeds=None, remat=True,
 # single-token decode over the full cache
 # ---------------------------------------------------------------------------
 
-def _decode_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes):
+def _moe_block(p, cfg, h2, aux, ep_axes, tiered_moe):
+    """The MoE position of a decode block: EP dispatch, or — when the serve
+    engine passes the expert tier view for this position — the NeoMem
+    EP-resident path: each selected expert's weight block is gathered
+    through the device-resident placement table inside the jitted step
+    (fast tier when promoted, slow store otherwise; DESIGN.md §10)."""
+    if tiered_moe is not None:
+        y, idx, _ = moe_lib.moe_apply_tiered(
+            p["ffn"], h2, cfg.moe.top_k, bias=p.get("router_bias"),
+            tier=tiered_moe["view"], group_id=tiered_moe["group_id"])
+    else:
+        y, idx, _ = moe_lib.moe_apply_ep(p["ffn"], h2, cfg.moe.top_k,
+                                         bias=p.get("router_bias"),
+                                         ep_axes=ep_axes)
+    aux.setdefault("router_streams", []).append(idx)
+    return y
+
+
+def _decode_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes,
+                       tiered_moe=None):
     h = apply_norm(cfg.norm, p["ln1"], x_t)
     window = cfg.window if kind == "attn_local" else 0
     if cfg.mla is not None:
@@ -168,10 +207,7 @@ def _decode_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes):
         x_t = x_t + xo
     h2 = apply_norm(cfg.norm, p["ln2"], x_t)
     if kind == "moe":
-        y, idx, _ = moe_lib.moe_apply_ep(p["ffn"], h2, cfg.moe.top_k,
-                                         bias=p.get("router_bias"),
-                                         ep_axes=ep_axes)
-        aux.setdefault("router_streams", []).append(idx)
+        y = _moe_block(p, cfg, h2, aux, ep_axes, tiered_moe)
     else:
         y = mlp_apply(p["ffn"], h2, cfg.mlp)
     if cfg.post_norm:
@@ -179,7 +215,8 @@ def _decode_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes):
     return x_t + y, cache
 
 
-def _decode_block(p, shared, cfg, kind, x_t, cache, pos, aux, ep_axes):
+def _decode_block(p, shared, cfg, kind, x_t, cache, pos, aux, ep_axes,
+                  tiered_moe=None):
     if kind == "mamba":
         s = cfg.ssm
         h = apply_norm(cfg.norm, p["ln"], x_t)
@@ -196,11 +233,24 @@ def _decode_block(p, shared, cfg, kind, x_t, cache, pos, aux, ep_axes):
         return x_t + o, cache
     if kind == "shared_attn":
         return _decode_attn_block(shared, cfg, "attn", x_t, cache, pos, aux, ep_axes)
-    return _decode_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes)
+    return _decode_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes,
+                              tiered_moe=tiered_moe)
+
+
+def _tiered_moe_for(cfg: ArchConfig, tiered, i: int, gi):
+    """Expert tier view for pattern position ``i`` (group index ``gi``), or
+    None.  Only the FIRST MoE position reads through the tiered store — its
+    weight blocks are the payload rows the serve engine bound (DESIGN.md
+    §8); later MoE positions keep their dense weights."""
+    if not tiered or "experts" not in tiered:
+        return None
+    if "moe" not in cfg.pattern or i != cfg.pattern.index("moe"):
+        return None
+    return {"view": tiered["experts"], "group_id": gi}
 
 
 def decode_step(cfg: ArchConfig, params, cache, token, *, aux_embeds=None,
-                ep_axes=None, return_streams: bool = False):
+                ep_axes=None, return_streams: bool = False, tiered=None):
     """token: (B,1) int32 -> (logits (B,1,V), new cache).
 
     For encoder-decoder configs (whisper) ``aux_embeds`` must be the
@@ -209,9 +259,15 @@ def decode_step(cfg: ArchConfig, params, cache, token, *, aux_embeds=None,
 
     With ``return_streams`` the result is (logits, cache, streams) where
     ``streams["router"]`` is the (G, n_moe, B, 1, k) token->expert stream —
-    the NeoMem profiling stream for the serve engine's expert resource."""
+    the NeoMem profiling stream for the serve engine's expert resource.
+
+    ``tiered`` binds reads in THIS jitted step to the NeoMem tiered store
+    (DESIGN.md §10): ``tiered["embeddings"]`` serves the token embedding
+    row through the device-resident placement table, ``tiered["experts"]``
+    serves the first MoE position's expert weight blocks the same way —
+    no host verb, no per-step round-trip."""
     pos = cache["pos"]
-    x = embed_apply(params["embed"], token)
+    x = _embed_tokens(params, token, tiered)
     if cfg.embed_scale:
         x = (x.astype(jnp.float32) * cfg.d_model ** 0.5).astype(x.dtype)
     aux: dict[str, Any] = {"aux_embeds": aux_embeds}
@@ -226,22 +282,25 @@ def decode_step(cfg: ArchConfig, params, cache, token, *, aux_embeds=None,
 
     shared = params.get("shared_attn")
 
-    def group_body(carry, gp_and_cache):
+    def group_body(carry, xs):
         x, = carry
-        gp, gc = gp_and_cache
+        gp, gc, gi = xs
         a_local = {"aux_embeds": aux.get("aux_embeds"),
                    "enc_out": aux.get("enc_out"), "router_streams": []}
         new_gc = []
         for i, kind in enumerate(cfg.pattern):
             x, c = _decode_block(gp[i], shared, cfg, kind, x, gc[i], pos,
-                                 a_local, ep_axes)
+                                 a_local, ep_axes,
+                                 tiered_moe=_tiered_moe_for(cfg, tiered, i, gi))
             new_gc.append(c)
         streams = a_local["router_streams"]
         out = jnp.stack(streams) if streams else jnp.zeros((0,), jnp.int32)
         return (x,), (new_gc, out)
 
-    (x,), (new_blocks, router) = jax.lax.scan(group_body, (x,),
-                                              (params["blocks"], cache["blocks"]))
+    g = cfg.n_groups
+    (x,), (new_blocks, router) = jax.lax.scan(
+        group_body, (x,),
+        (params["blocks"], cache["blocks"], jnp.arange(g, dtype=jnp.int32)))
     x = apply_norm(cfg.norm, params["final_norm"], x)
     logits = logits_apply(params["embed"], x, cfg.final_softcap)
     new_cache = {"blocks": new_blocks, "pos": pos + 1}
@@ -257,8 +316,13 @@ def decode_step(cfg: ArchConfig, params, cache, token, *, aux_embeds=None,
 # ---------------------------------------------------------------------------
 
 def _append_attend_local(kp, vp, plen, cur_slot, k_new, v_new, q_eff, *,
-                         scale, softcap, page_t):
-    """Single-shard page append + flash-decode attention."""
+                         scale, softcap, page_t, collect_mass):
+    """Single-shard page append + flash-decode attention.
+
+    With ``collect_mass`` the kernel additionally exports the (B, n_slots)
+    per-page softmax mass — the hotness stream the "kv" tiered resource
+    profiles (DESIGN.md §10); otherwise mass is None and the kernel runs
+    its plain 3-output form (fill-proxy engines pay nothing extra)."""
     b = q_eff.shape[0]
     bidx = jnp.arange(b)
     off = plen[bidx, cur_slot]
@@ -271,17 +335,24 @@ def _append_attend_local(kp, vp, plen, cur_slot, k_new, v_new, q_eff, *,
     plen = jnp.where(
         advanced[:, None] & (jnp.arange(kp.shape[1])[None] == new_slot[:, None]),
         0, plen)
-    o = pa_ops.paged_attention(q_eff, kp, vp, plen, scale=scale, softcap=softcap)
-    return o, kp, vp, plen, new_slot
+    if collect_mass:
+        o, mass = pa_ops.paged_attention(q_eff, kp, vp, plen, scale=scale,
+                                         softcap=softcap, return_mass=True)
+    else:
+        o, mass = pa_ops.paged_attention(q_eff, kp, vp, plen, scale=scale,
+                                         softcap=softcap), None
+    return o, kp, vp, plen, new_slot, mass
 
 
 def _append_attend_sharded(kp, vp, plen, cur_slot, k_new, v_new, q_eff, *,
-                           scale, softcap, page_t, smesh):
+                           scale, softcap, page_t, smesh, collect_mass):
     """Page slots sharded over ``smesh['axes']``; per-shard kernel + combine.
 
     Cross-device flash-decoding: each shard attends over its resident hot
     pages and the (m, l, acc) partials are merged with a pmax/psum pair —
-    the only per-step collective is O(B x H x dv)."""
+    the only per-step collective is O(B x H x dv).  The kernel's per-page
+    partials are normalized by the SAME pair, so the (B, n_slots) global
+    softmax-mass stream comes back shard-assembled for free."""
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     mesh, axes = smesh["mesh"], smesh["axes"]
@@ -314,25 +385,34 @@ def _append_attend_sharded(kp, vp, plen, cur_slot, k_new, v_new, q_eff, *,
         nown = (nls >= 0) & (nls < n_local) & full & (new_slot != cur_slot)
         plen = plen.at[bidx, jnp.clip(nls, 0, n_local - 1)].set(
             jnp.where(nown, 0, plen[bidx, jnp.clip(nls, 0, n_local - 1)]))
-        m, l, acc = pa_ops.paged_attention_local_stats(
-            q_eff, kp, vp, plen, scale=scale, softcap=softcap)
-        o = pa_ops.combine_stats(m, l, acc, axes)
+        stats = pa_ops.paged_attention_local_stats(
+            q_eff, kp, vp, plen, scale=scale, softcap=softcap,
+            return_page_stats=collect_mass)
+        if collect_mass:
+            m, l, acc, pg_m, pg_l = stats
+            o, mass = pa_ops.combine_stats(m, l, acc, axes,
+                                           page_m=pg_m, page_l=pg_l)
+            return o.astype(q_eff.dtype), kp, vp, plen, new_slot, mass
+        o = pa_ops.combine_stats(*stats, axes)
         return o.astype(q_eff.dtype), kp, vp, plen, new_slot
 
     pagespec = P(None, axes, None, None, None)
     rep = P(*([None] * 3))
+    out_specs = (rep, pagespec, pagespec, P(None, axes), P(None))
+    if collect_mass:
+        out_specs += (P(None, axes),)
     out = shard_map(
         body, mesh=mesh,
         in_specs=(pagespec, pagespec, P(None, axes), P(None),
                   rep, rep, rep),
-        out_specs=(rep, pagespec, pagespec, P(None, axes), P(None)),
+        out_specs=out_specs,
         check_rep=False,
     )(kp, vp, plen, cur_slot, k_new, v_new, q_eff)
-    return out
+    return out if collect_mass else out + (None,)
 
 
 def _paged_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes, page_t,
-                      smesh=None):
+                      smesh=None, tiered_moe=None, collect_mass=False):
     h = apply_norm(cfg.norm, p["ln1"], x_t)
     b = x_t.shape[0]
     if cfg.mla is not None:
@@ -375,10 +455,15 @@ def _paged_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes, page_t,
         k_new_p, v_new_p = k_new, v_new                        # (B,Hkv,dh)
     fn = _append_attend_local if smesh is None else functools.partial(
         _append_attend_sharded, smesh=smesh)
-    o, kp, vp, plen, new_slot = fn(
+    o, kp, vp, plen, new_slot, mass = fn(
         cache["k_pages"], cache["v_pages"], cache["page_len"],
         cache["cur_slot"], k_new_p, v_new_p, q_eff.astype(jnp.float32),
-        scale=scale, softcap=cfg.attn_softcap, page_t=page_t)  # o: (B,H,dv)
+        scale=scale, softcap=cfg.attn_softcap, page_t=page_t,
+        collect_mass=collect_mass)                             # o: (B,H,dv)
+    if mass is not None:
+        # the kernel-true per-page softmax mass (B, n_slots) — the "kv"
+        # resource's NeoProf stream (DESIGN.md §10)
+        aux.setdefault("kv_mass_streams", []).append(mass)
     if cfg.mla is not None:
         wkv_b = p["attn"]["wkv_b"].reshape(m.kv_lora, cfg.n_heads, m.d_nope + m.d_v)
         w_v = wkv_b[..., m.d_nope:]
@@ -393,10 +478,7 @@ def _paged_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes, page_t,
 
     h2 = apply_norm(cfg.norm, p["ln2"], x_t)
     if kind == "moe":
-        y, idx, _ = moe_lib.moe_apply_ep(p["ffn"], h2, cfg.moe.top_k,
-                                         bias=p.get("router_bias"),
-                                         ep_axes=ep_axes)
-        aux.setdefault("router_streams", []).append(idx)
+        y = _moe_block(p, cfg, h2, aux, ep_axes, tiered_moe)
     else:
         y = mlp_apply(p["ffn"], h2, cfg.mlp)
     if cfg.post_norm:
@@ -407,16 +489,27 @@ def _paged_attn_block(p, cfg, kind, x_t, cache, pos, aux, ep_axes, page_t,
 
 
 def decode_step_paged(cfg: ArchConfig, params, cache, token, *, page_t: int,
-                      ep_axes=None, smesh=None, return_streams: bool = False):
+                      ep_axes=None, smesh=None, return_streams: bool = False,
+                      tiered=None, collect_mass: bool | None = None):
     """Long-context decode over the NeoMem fast tier (hot pages only).
 
     ``cache["pos"]`` may be the scalar lockstep counter or a (B,) vector of
     per-lane positions (continuous batching, see :func:`init_paged_cache`).
     ``smesh``: {"mesh": Mesh, "axes": (...)} shards page slots across devices
     with cross-device flash-decode combining (production path).
-    ``return_streams`` as in :func:`decode_step`."""
+    ``tiered`` as in :func:`decode_step` (in-jit embedding/expert reads).
+
+    With ``return_streams`` the streams dict additionally carries
+    ``streams["kv_mass"]``: the (G, n_attn, B, n_slots) kernel-exported
+    per-page softmax mass of every paged-attention position — the
+    hotness-true "kv" profiling stream (DESIGN.md §10), replacing the
+    host-computed page-fill proxy.  Works for both the scalar-pos and the
+    per-lane-pos (continuous-batching) cache variants.  ``collect_mass``
+    (default: follow ``return_streams``) gates the kernel's page-stats
+    export, so fill-proxy consumers run the plain 3-output kernel."""
+    collect_mass = return_streams if collect_mass is None else collect_mass
     pos = cache["pos"]
-    x = embed_apply(params["embed"], token)
+    x = _embed_tokens(params, token, tiered)
     if cfg.embed_scale:
         x = (x.astype(jnp.float32) * cfg.d_model ** 0.5).astype(x.dtype)
     aux: dict[str, Any] = {}
@@ -429,33 +522,88 @@ def decode_step_paged(cfg: ArchConfig, params, cache, token, *, page_t: int,
 
     shared = params.get("shared_attn")
 
-    def group_body(carry, gp_and_cache):
+    def group_body(carry, xs):
         x, = carry
-        gp, gc = gp_and_cache
-        a_local: dict[str, Any] = {"router_streams": []}
+        gp, gc, gi = xs
+        a_local: dict[str, Any] = {"router_streams": [],
+                                   "kv_mass_streams": []}
         new_gc = []
         for i, kind in enumerate(cfg.pattern):
+            tm = _tiered_moe_for(cfg, tiered, i, gi)
             if kind in ("mamba", "mlstm", "slstm"):
                 x, c = _decode_block(gp[i], shared, cfg, kind, x, gc[i], pos,
                                      a_local, ep_axes)
             elif kind == "shared_attn":
                 x, c = _paged_attn_block(shared, cfg, "attn", x, gc[i], pos,
-                                         a_local, ep_axes, page_t, smesh)
+                                         a_local, ep_axes, page_t, smesh,
+                                         collect_mass=collect_mass)
             else:
                 x, c = _paged_attn_block(gp[i], cfg, kind, x, gc[i], pos,
-                                         a_local, ep_axes, page_t, smesh)
+                                         a_local, ep_axes, page_t, smesh,
+                                         tiered_moe=tm,
+                                         collect_mass=collect_mass)
             new_gc.append(c)
         streams = a_local["router_streams"]
         out = jnp.stack(streams) if streams else jnp.zeros((0,), jnp.int32)
-        return (x,), (new_gc, out)
+        masses = a_local["kv_mass_streams"]
+        kv_mass = (jnp.stack(masses) if masses
+                   else jnp.zeros((0,), jnp.float32))
+        return (x,), (new_gc, out, kv_mass)
 
-    (x,), (new_blocks, router) = jax.lax.scan(group_body, (x,),
-                                              (params["blocks"], cache["blocks"]))
+    g = cfg.n_groups
+    (x,), (new_blocks, router, kv_mass) = jax.lax.scan(
+        group_body, (x,),
+        (params["blocks"], cache["blocks"], jnp.arange(g, dtype=jnp.int32)))
     x = apply_norm(cfg.norm, params["final_norm"], x)
     logits = logits_apply(params["embed"], x, cfg.final_softcap)
     new_cache = {"blocks": new_blocks, "pos": pos + 1}
     if new_pro:
         new_cache["prologue"] = new_pro
     if return_streams:
-        return logits, new_cache, {"router": router if router.size else None}
+        return logits, new_cache, {
+            "router": router if router.size else None,
+            "kv_mass": kv_mass if kv_mass.size else None,
+        }
     return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sampling — temperature / nucleus over the lane substrate (DESIGN.md §9)
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def fold_lane_keys(keys: jax.Array, idx: jax.Array) -> jax.Array:
+    """Vectorized per-lane key derivation: fold each lane's (2,) uint32
+    request-identity key with its emitted-token index — ONE dispatch for
+    the whole lane batch (the per-token scheduler hot path)."""
+    return jax.vmap(jax.random.fold_in)(keys, idx)
+
+
+@functools.partial(jax.jit, static_argnames=("temperature", "top_p"))
+def sample_tokens(logits: jax.Array, keys: jax.Array, *,
+                  temperature: float = 0.0, top_p: float = 1.0) -> jax.Array:
+    """Per-lane token sampling: (L, V) logits + (L, 2) uint32 PRNG keys.
+
+    ``temperature <= 0`` is exact argmax (the keys are ignored), so greedy
+    callers pay nothing.  Otherwise logits are temperature-scaled and,
+    with ``top_p < 1``, nucleus-filtered: the smallest prefix of
+    descending-probability tokens whose mass reaches ``top_p`` stays (the
+    top-1 token always survives), everything else is masked to -inf.
+
+    One key per lane: the scheduler derives it from (trace seed, request
+    id, position), so a lane's draw depends only on the REQUEST's identity
+    and progress — replays, preemptions, and lane reassignment cannot
+    change a trace's sampled tokens.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits.astype(jnp.float32) / temperature
+    if top_p < 1.0:
+        desc = jnp.sort(scaled, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(desc, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        keep = cum - probs < top_p          # mass BEFORE this token < top_p
+        cutoff = jnp.min(jnp.where(keep, desc, jnp.inf), axis=-1,
+                         keepdims=True)
+        scaled = jnp.where(scaled >= cutoff, scaled, -jnp.inf)
+    return jax.vmap(jax.random.categorical)(keys, scaled).astype(jnp.int32)

@@ -337,6 +337,47 @@ def moe_apply_ep(p, x, k: int, *, bias=None, ep_axes: EPContext | None = None):
     return y, idx, None
 
 
+def moe_apply_tiered(p, x, k: int, *, bias=None, tier, group_id):
+    """NeoMem EP-resident dispatch: expert weights served from the tiered
+    store INSIDE the jitted step (DESIGN.md §10).
+
+    Instead of touching the dense (E, D, F) weight tensors, each selected
+    expert's flattened [w_gate | w_in | w_out] payload row is gathered
+    through the device-resident placement table
+    (:func:`repro.tiering.migrate.lookup_rows`): promoted experts come from
+    the HBM fast buffer, cold experts stream from the slow store in the
+    same fused gather — the serving analogue of a CXL slow-tier load, a
+    miss is only slower, never an error.  ``tier`` is the resource's
+    ``{"fast", "slow", "page_slot"}`` view; ``group_id`` the layer-group
+    index (page_id = group * n_experts + expert).  Gathered compute is
+    per-token (B, S, k) einsums — at decode shapes (S=1, small k) this
+    touches k weight blocks per token instead of all E.
+
+    Single-device (replicated) path only: the buffers and placement table
+    are unsharded, so an EP-configured engine must NOT route here — EP
+    meshes keep `moe_apply_ep`'s shard_map dispatch, whose "residency"
+    params are the EP-sharded form of the same tiering (the serve engine
+    gates on ``ep_axes`` accordingly).
+    """
+    from repro.tiering.migrate import lookup_rows
+
+    e = p["router"].shape[1]
+    gate, idx, probs = router_topk(p, x, k, bias=bias)
+    _, d, f = p["w_gate"].shape
+    rows = lookup_rows(tier["fast"], tier["slow"], tier["page_slot"],
+                       group_id * e + idx)              # (B, S, k, 3*d*f)
+    rows = rows.astype(p["w_gate"].dtype)
+    wg = rows[..., : d * f].reshape(idx.shape + (d, f))
+    wi = rows[..., d * f: 2 * d * f].reshape(idx.shape + (d, f))
+    wo = rows[..., 2 * d * f:].reshape(idx.shape + (f, d))
+    h = jax.nn.silu(jnp.einsum("bsd,bskdf->bskf", x, wg)) \
+        * jnp.einsum("bsd,bskdf->bskf", x, wi)
+    y = jnp.einsum("bskf,bskfd->bskd", h, wo)
+    out = jnp.einsum("bskd,bsk->bsd", y.astype(jnp.float32),
+                     gate).astype(x.dtype)
+    return out + _shared_expert(p, x), idx, probs
+
+
 def _shared_expert(p, x):
     if "sh_in" not in p:
         return jnp.zeros_like(x)

@@ -25,7 +25,16 @@ models.decode steps:
 Access streams fed per decode step (DESIGN.md §3): the token column
 (embedding rows), the router's token->expert ids surfaced by
 ``decode_step(..., return_streams=True)`` (experts), and the resident
-paged-KV window weighted by per-page fill (KV pages).
+paged-KV window weighted by the KERNEL-exported per-page softmax mass
+(``streams["kv_mass"]``, DESIGN.md §10; ``ServeConfig.kv_mass_source=
+"fill"`` keeps the old page-fill proxy as the A/B baseline).
+
+In-jit tiered reads (DESIGN.md §10): the jitted decode step itself reads
+embedding rows and the first MoE position's expert weight blocks THROUGH
+the device-resident placement tables (``tiering.migrate.lookup_rows``) —
+fast-buffer gather on residency, slow-store fallback in the same fused
+gather, no host verb on the hot path.  The tier views are passed as jit
+ARGUMENTS each step, so daemon epochs swap buffers without retracing.
 
 Two serving modes share the machinery:
 
@@ -79,6 +88,13 @@ class ServeConfig:
     lanes: int = 0                  # decode lanes (0 = single-request mode)
     kv_segments: int = 0            # slow-store KV segments (0 -> lanes)
     kv_tier_slots: int = 0          # kv fast-tier slots (0 -> hot_slots)
+    # "kv" hotness stream source (DESIGN.md §10): "kernel" feeds the
+    # flash-decode kernel's per-page softmax mass; "fill" keeps the old
+    # host-computed page_len proxy (the A/B baseline for the fidelity gate).
+    kv_mass_source: str = "kernel"
+    # Bind embedding/expert reads of the jitted decode step to the tiered
+    # store (in-jit lookup_rows; off = dense params, reads stay host-only).
+    jit_tier_reads: bool = True
 
 
 class ServeEngine:
@@ -90,13 +106,21 @@ class ServeEngine:
         self.ep = ep_axes
         if scfg.lanes and not scfg.paged:
             raise ValueError("lane mode (ServeConfig.lanes) requires paged=True")
+        if scfg.kv_mass_source not in ("kernel", "fill"):
+            raise ValueError(
+                f"kv_mass_source must be 'kernel' or 'fill', "
+                f"got {scfg.kv_mass_source!r}")
         self.daemon = tm.NeoMemDaemon()
+        self._embed_rpp = scfg.embed_rows_per_page or tm.EMBED_ROWS_PER_PAGE
         self._register_resources()
-        self._want_streams = "experts" in self.daemon
+        self._kernel_mass = scfg.paged and scfg.kv_mass_source == "kernel"
+        self._want_streams = "experts" in self.daemon or \
+            ("kv" in self.daemon and self._kernel_mass)
         self._decode = jax.jit(self._decode_fn)
         self._decode_paged = jax.jit(self._decode_paged_fn)
         self.cache = None
         self.step_count = 0
+        self._last_kv_mass = None       # (B, n_slots) kernel mass, post-step
         # (lane, slot) -> (page id, fill) change tracking for the KV flush
         # (single-request mode uses lane 0)
         self._kv_flushed: dict[tuple[int, int], tuple[int, int]] = {}
@@ -140,7 +164,7 @@ class ServeEngine:
                 res = tm.make_resource("experts", spec,
                                        n_experts=cfg.moe.n_experts)
             elif kind == "embeddings":
-                rows = scfg.embed_rows_per_page or tm.EMBED_ROWS_PER_PAGE
+                rows = self._embed_rpp
                 payload = self._embed_payload(rows)
                 spec = tm.ResourceSpec(
                     "embeddings", n_pages=(cfg.vocab + rows - 1) // rows,
@@ -193,15 +217,42 @@ class ServeEngine:
         return table.reshape(n_pages, rows_per_page, d)
 
     # -- jitted step bodies -------------------------------------------------
-    def _decode_fn(self, params, cache, token, aux):
+    def _decode_fn(self, params, cache, token, aux, tiered):
         return dec.decode_step(self.cfg, params, cache, token,
                                aux_embeds=aux, ep_axes=self.ep,
-                               return_streams=self._want_streams)
+                               return_streams=self._want_streams,
+                               tiered=tiered)
 
-    def _decode_paged_fn(self, params, cache, token):
+    def _decode_paged_fn(self, params, cache, token, tiered):
         return dec.decode_step_paged(self.cfg, params, cache, token,
                                      page_t=self.scfg.page_t, ep_axes=self.ep,
-                                     return_streams=self._want_streams)
+                                     return_streams=self._want_streams,
+                                     tiered=tiered,
+                                     collect_mass=self._kernel_mass)
+
+    def _tier_reads(self) -> dict:
+        """Tier views for the in-jit read path (DESIGN.md §10): device-array
+        ``{"fast", "slow", "page_slot"}`` triples per resource, rebuilt each
+        step so migration epochs are picked up as fresh jit arguments (same
+        pytree structure — no retrace).  Empty when ``jit_tier_reads`` is
+        off; the KV ring needs no view (it IS the fast tier, in-cache)."""
+        out: dict = {}
+        if not self.scfg.jit_tier_reads:
+            return out
+        if "embeddings" in self.daemon:
+            h = self.daemon["embeddings"]
+            if h.mem.buffers is not None:
+                view = h.tier_view()
+                view["rows_per_page"] = self._embed_rpp
+                out["embeddings"] = view
+        # EP-sharded serving keeps the shard_map dispatch (moe_apply_ep's
+        # "residency" path shards hot experts over the EP axis); the
+        # replicated per-token row gather is the single-device tiered path
+        if "experts" in self.daemon and self.ep is None:
+            h = self.daemon["experts"]
+            if h.mem.buffers is not None:
+                out["experts"] = h.tier_view()
+        return out
 
     # -- public API -----------------------------------------------------------
     def prefill(self, tokens: np.ndarray, aux_embeds=None):
@@ -288,11 +339,13 @@ class ServeEngine:
         self._lane_segments = np.asarray(segments, np.int32).copy()
         tokens = np.asarray(tokens, np.int32)
         tok = jnp.asarray(tokens)[:, None]
-        out = self._decode_paged(self.params, self.cache, tok)
+        out = self._decode_paged(self.params, self.cache, tok,
+                                 self._tier_reads())
         if self._want_streams:
             logits, self.cache, streams = out
         else:
             (logits, self.cache), streams = out, {}
+        self._set_kv_mass(streams)
         self._observe_lanes(tokens, streams)
         self._maybe_tick()
         return np.asarray(logits[:, -1])
@@ -311,6 +364,11 @@ class ServeEngine:
             sv = self._kv_lane_stream()
             if sv is not None:
                 mass, gids = sv
+                if self._kernel_mass and self._last_kv_mass is not None:
+                    # per-lane kernel mass, masked to the live lanes'
+                    # segment-mapped pages (same mask the gids carry)
+                    km = np.asarray(self._last_kv_mass, np.float32)
+                    mass = np.where(gids >= 0, km, 0.0)
                 self.daemon.observe("kv", jnp.asarray(mass.reshape(-1)),
                                     jnp.asarray(gids.reshape(-1), jnp.int32))
 
@@ -429,16 +487,28 @@ class ServeEngine:
         """One decode step: run the jitted body, feed the tiering streams,
         tick the multiplexed daemon on its cadence."""
         if self.scfg.paged:
-            out = self._decode_paged(self.params, self.cache, tok)
+            out = self._decode_paged(self.params, self.cache, tok,
+                                     self._tier_reads())
         else:
-            out = self._decode(self.params, self.cache, tok, self.aux)
+            out = self._decode(self.params, self.cache, tok, self.aux,
+                               self._tier_reads())
         if self._want_streams:
             logits, self.cache, streams = out
         else:
             (logits, self.cache), streams = out, {}
+        self._set_kv_mass(streams)
         self._observe(tok, streams)
         self._maybe_tick()
         return logits
+
+    def _set_kv_mass(self, streams: dict) -> None:
+        """Hold the step's kernel-exported (B, n_slots) page mass: the
+        per-position (G, n_attn, B, S) stream head-averaged over layer
+        groups and attention positions — the aggregate line-rate view one
+        NeoProf device would see across the chip (DESIGN.md §10)."""
+        km = streams.get("kv_mass")
+        self._last_kv_mass = (jnp.mean(km, axis=(0, 1))
+                              if km is not None else None)
 
     def _observe(self, tok: jax.Array, streams: dict) -> None:
         if "embeddings" in self.daemon:
@@ -447,6 +517,11 @@ class ServeEngine:
             self.daemon.observe("experts", streams["router"])
         if "kv" in self.daemon:
             mass, ids = self._kv_page_stream()
+            if self._kernel_mass and self._last_kv_mass is not None:
+                # kernel-true hotness: batch rows advance in lockstep over
+                # the same page ids, so the row-mean is the device's
+                # aggregate view of the step's attention mass
+                mass = jnp.mean(self._last_kv_mass, axis=0)
             if ids.size:
                 self.daemon.observe("kv", mass, ids)
 
@@ -485,12 +560,13 @@ class ServeEngine:
         return np.where((plen > 0) & (ids >= 0), ids, -1)
 
     def _kv_page_stream(self) -> tuple[jax.Array, jax.Array]:
-        """Resident paged-KV window as (per-page mass, logical page ids).
+        """Resident paged-KV window as (per-page fill, logical page ids).
 
-        Single-request mode: per-page fill (page_len) stands in for
-        attention mass — full pages carry proportionally more softmax mass
-        on average.  Batch row 0 is representative: all rows advance in
-        lockstep."""
+        The fill (page_len) is the PROXY mass (``kv_mass_source="fill"``,
+        and the change-tracking key for the slow-store flush); with the
+        default kernel source the observer overrides it with the decode
+        kernel's true per-page softmax mass (DESIGN.md §10).  Batch row 0
+        is representative: all rows advance in lockstep."""
         view = self._ring_view()
         if view is None:
             return jnp.zeros((0,), jnp.float32), jnp.zeros((0,), jnp.int32)

@@ -40,9 +40,11 @@ from __future__ import annotations
 import dataclasses
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import decode as dec
 from repro.serve.engine import ServeEngine
 from repro.tiering.daemon import split_quota
 from repro.tiering.stats import TierStats
@@ -61,6 +63,14 @@ class SchedConfig:
     preempt_patience: int = 16   # steps a lane-less tenant waits before
     #                              its queue head may preempt someone
     max_queue: int = 4096        # hard bound on queued requests
+    # Sampling (models/decode.py::sample_tokens): temperature <= 0 is exact
+    # argmax (the default — zero overhead); with temperature > 0 each
+    # emitted token is drawn with a per-request PRNG key folded from
+    # (seed, request id, tokens emitted), so a trace replays bit-identically
+    # regardless of lane assignment, admission order, or preemptions.
+    temperature: float = 0.0
+    top_p: float = 1.0
+    seed: int = 0                # sampling seed (seeded per trace)
 
 
 @dataclasses.dataclass
@@ -84,6 +94,7 @@ class Request:
     preemptions: int = 0
     arrival_time: float = 0.0
     token_times: list = dataclasses.field(default_factory=list)
+    key: np.ndarray | None = None  # per-request PRNG key (sampling mode)
 
     @property
     def n_prompt(self) -> int:
@@ -118,6 +129,7 @@ class Scheduler:
         self.queued_peak = 0
         self._next_rid = 0
         self.tenant_stats = {t: TierStats(name=t) for t in self.tenants}
+        self._sample_master = jax.random.PRNGKey(self.scfg.seed)
         if engine.cache is None:
             engine.start_lanes()
 
@@ -141,6 +153,10 @@ class Scheduler:
                       max_new=max_new, arrival_step=self.step_count,
                       queued_since=self.step_count,
                       arrival_time=time.perf_counter())
+        if self.scfg.temperature > 0.0:
+            # identity-derived key: (seed, rid) — lane/preemption-invariant
+            req.key = np.asarray(
+                jax.random.fold_in(self._sample_master, req.rid))
         self._next_rid += 1
         self.queue.append(req)
         self.queued_peak = max(self.queued_peak, len(self.queue))
@@ -278,17 +294,45 @@ class Scheduler:
         if active.any():
             logits = self.eng.advance_lanes(tokens, active, segments)
             now = time.perf_counter()
+            sampled = self._sample(logits)
             for lane, req in enumerate(list(self.lanes)):
                 if req is None:
                     continue
                 req.pos += 1
                 if not req.prefilling:       # last prompt token or decoding
-                    req.out.append(int(np.argmax(logits[lane])))
+                    tok = (int(sampled[lane]) if sampled is not None
+                           else int(np.argmax(logits[lane])))
+                    req.out.append(tok)
                     req.token_times.append(now)
                     if len(req.out) >= req.max_new:
                         self._finish(req)
             self._meter_tenants()
         self.step_count += 1
+
+    def _sample(self, logits: np.ndarray) -> np.ndarray | None:
+        """Batched lane sampling (None in greedy mode -> argmax fallback).
+
+        One jitted :func:`models.decode.sample_tokens` call covers every
+        lane that emits this step; each lane's key is its request's
+        identity key folded with the emitted-token index, so the draw
+        stream is a pure function of (seed, rid, token index)."""
+        if self.scfg.temperature <= 0.0:
+            return None
+        keys = np.zeros((self.n_lanes, 2), np.uint32)
+        idx = np.zeros(self.n_lanes, np.uint32)
+        emitting = False
+        for lane, req in enumerate(self.lanes):
+            if req is None or req.pos + 1 < req.n_prompt:
+                continue                      # still prefilling after +1
+            keys[lane] = req.key
+            idx[lane] = len(req.out)
+            emitting = True
+        if not emitting:
+            return None
+        folded = dec.fold_lane_keys(jnp.asarray(keys), jnp.asarray(idx))
+        return np.asarray(dec.sample_tokens(
+            jnp.asarray(logits), folded,
+            temperature=self.scfg.temperature, top_p=self.scfg.top_p))
 
     def run(self, max_steps: int = 10_000) -> None:
         """Drain: run until every submitted request finished (or the bound)."""

@@ -112,6 +112,18 @@ class ResourceHandle:
         self.mem.bind_data(slow_data)
         self.stats.quota_bytes = self.mem.quota_bytes
 
+    def tier_view(self) -> dict[str, jax.Array]:
+        """Device-array view for in-jit reads: ``{"fast", "slow",
+        "page_slot"}``, to be threaded as jit arguments into a step that
+        calls :func:`repro.tiering.migrate.lookup_rows` (DESIGN.md §10).
+        Reads served this way are metered by the observation stream's touch
+        accounting, not the host ``read_rows`` counters."""
+        return self.mem.tier_view(self.state)
+
+    def lookup_rows(self, page_ids) -> jax.Array:
+        """Pure jittable read (no host metering): see ``TieredMemory.lookup_rows``."""
+        return self.mem.lookup_rows(self.state, page_ids)
+
     def read_rows(self, page_ids) -> jax.Array:
         """Serve payload rows: fast-buffer copy on hit, slow-tier fallback.
 

@@ -214,6 +214,27 @@ class TieredMemory:
             self.buffers.slow[slot_page[occupied]])
         self.buffers = self.buffers._replace(fast=fast)
 
+    def lookup_rows(self, state: TieredMemoryState, page_ids) -> jax.Array:
+        """Pure, jittable read path: placement-table gather over the bound
+        buffers with in-trace slow fallback (:func:`migrate.lookup_rows`).
+        Safe to call INSIDE a jitted step — the placement map
+        (``state.tier.page_slot``) and both buffers are device arrays, so
+        the read costs one fused gather and no host round-trip.  For a
+        jit-compatible argument pytree, see :meth:`tier_view`."""
+        if self.buffers is None:
+            raise ValueError("no payload bound — call bind_data() first")
+        return migrate_lib.lookup_rows(self.buffers.fast, self.buffers.slow,
+                                       state.tier.page_slot, page_ids)
+
+    def tier_view(self, state: TieredMemoryState) -> dict[str, jax.Array]:
+        """The device-array triple an in-jit consumer threads into its step:
+        ``{"fast", "slow", "page_slot"}`` — pass these as jit ARGUMENTS (not
+        closure constants) so daemon epochs swap buffers without retracing."""
+        if self.buffers is None:
+            raise ValueError("no payload bound — call bind_data() first")
+        return {"fast": self.buffers.fast, "slow": self.buffers.slow,
+                "page_slot": state.tier.page_slot}
+
     def read_rows(self, state: TieredMemoryState, page_ids,
                   slots: jax.Array | None = None) -> jax.Array:
         """Serve page payloads: fast-tier copy on hit, slow-tier fallback.

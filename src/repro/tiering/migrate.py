@@ -122,6 +122,27 @@ def read_rows(fast: jax.Array, slow: jax.Array, slots: jax.Array,
     return jnp.where(mask, fast[jnp.where(hit, slots, 0)], slow[safe_page])
 
 
+def lookup_rows(fast: jax.Array, slow: jax.Array, page_slot: jax.Array,
+                page_ids: jax.Array) -> jax.Array:
+    """The in-jit tiered read fast path (DESIGN.md §10): placement lookup +
+    fused dual-tier gather, entirely inside the caller's jit.
+
+    ``page_slot`` is the device-resident placement table
+    (``TierState.page_slot``); ``page_ids`` may have ANY leading shape —
+    the result has ``page_ids.shape + row_shape``.  Fast-buffer rows are
+    gathered for resident pages, with the slow store as the in-trace
+    fallback (bit-exact either way; tiers are inclusive).  This is what the
+    jitted decode step binds embedding/expert reads to — no host verb, no
+    per-step round-trip; ``TieredMemory.read_rows`` remains the host-side
+    verb whose hit-partitioned gather spares pinned-host bandwidth.
+    Rows for invalid page ids (< 0) read slow page 0 — callers mask them.
+    """
+    page_ids = jnp.asarray(page_ids, jnp.int32)
+    slots = jnp.where(page_ids >= 0,
+                      page_slot[jnp.maximum(page_ids, 0)], -1)
+    return read_rows(fast, slow, slots, page_ids)
+
+
 def _write_rows_impl(fast, slow, page_ids, slots, rows):
     rows = rows.astype(slow.dtype)
     slow_idx = jnp.where(page_ids >= 0, page_ids, slow.shape[0])

@@ -36,7 +36,12 @@ class KVPagesResource(StreamResource):
 
     The access stream is the set of page ids whose content contributed
     non-trivial softmax mass at a decode step — the analogue of LLC misses
-    to CXL memory: pages the model actually pulled from.
+    to CXL memory: pages the model actually pulled from.  The mass is the
+    KERNEL-exported per-page softmax share (`kernels/paged_attn` page
+    stats, DESIGN.md §10) — true access intensity measured where the
+    access happens, as NeoProf snoops the bus; the serve engine's old
+    `page_len` fill proxy survives only as the A/B baseline
+    (``ServeConfig.kv_mass_source="fill"``).
     """
 
     def __init__(self, spec: ResourceSpec, mass_threshold: float = 0.02,

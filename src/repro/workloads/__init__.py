@@ -5,6 +5,6 @@ scan-antagonist) for the continuous-batching scheduler; see
 :mod:`repro.workloads.traces` and DESIGN.md §9.
 """
 from repro.workloads.traces import (  # noqa: F401
-    DEFAULT_TENANTS, TRACE_KINDS, Arrival, TenantProfile, Trace, make_trace,
-    play,
+    ARRIVAL_KINDS, DEFAULT_TENANTS, TRACE_KINDS, Arrival, TenantProfile,
+    Trace, make_trace, play,
 )

@@ -20,10 +20,24 @@ CONTENT from a distribution the tiering daemon can (or cannot) exploit:
                           steady-state hit rate below ``zipf-hot`` — the
                           adaptivity gap the traffic benchmark asserts.
 
-Arrival PROCESSES are deliberately identical across kinds for the same seed
-(same per-step Bernoulli draws, same prompt/output lengths) — only token
-content differs, so hit-rate deltas between traces measure the access
-pattern, not accidental load differences.
+Arrival PROCESSES are deliberately identical across kinds for the same
+(seed, arrival) pair (same per-step draws, same prompt/output lengths) —
+only token content differs, so hit-rate deltas between traces measure the
+access pattern, not accidental load differences.
+
+Two arrival processes (the CXL-at-scale study's point: tails live in the
+bursts, not the means):
+
+  * ``bernoulli`` — independent P(arrival)=rate per tenant per step (the
+    original process; the default).
+  * ``mmpp``      — a 2-state Markov-modulated Bernoulli process: one
+    hidden calm/burst chain (drawn from the shared STRUCTURAL stream, so
+    every kind sees the same bursts) scales all tenants' rates by
+    ``calm_scale``/``burst_scale``.  The stationary mean rate equals the
+    Bernoulli process's, so MMPP changes burstiness — queueing, p99,
+    preemption pressure — with the same offered load.  (Mean parity
+    requires ``rate * MMPP_BURST_SCALE <= 1``; a hotter tenant saturates
+    at probability 1 during bursts and ``make_trace`` warns.)
 """
 from __future__ import annotations
 
@@ -33,6 +47,15 @@ import functools
 import numpy as np
 
 TRACE_KINDS = ("zipf-hot", "diurnal-shift", "scan-antagonist")
+ARRIVAL_KINDS = ("bernoulli", "mmpp")
+
+# MMPP defaults: calm->burst 0.05, burst->calm 0.25 => stationary burst
+# share 1/6; burst triples the rate and calm_scale is solved so the
+# stationary mean equals the plain Bernoulli rate.
+MMPP_P01, MMPP_P10 = 0.05, 0.25
+MMPP_BURST_SCALE = 3.0
+_PI_B = MMPP_P01 / (MMPP_P01 + MMPP_P10)
+MMPP_CALM_SCALE = (1.0 - _PI_B * MMPP_BURST_SCALE) / (1.0 - _PI_B)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +85,7 @@ class Trace:
     n_steps: int
     tenants: tuple[TenantProfile, ...]
     arrivals: tuple[Arrival, ...]
+    arrival: str = "bernoulli"     # arrival process (see module docstring)
 
     def by_step(self) -> dict[int, list[Arrival]]:
         out: dict[int, list[Arrival]] = {}
@@ -94,23 +118,44 @@ def _zipf_tokens(rng: np.random.Generator, n: int, vocab: int, a: float,
 def make_trace(kind: str, *, n_steps: int = 200, vocab: int = 256,
                tenants: tuple[TenantProfile, ...] = DEFAULT_TENANTS,
                seed: int = 0, zipf_a: float = 1.4,
-               shift_period: int = 64) -> Trace:
+               shift_period: int = 64, arrival: str = "bernoulli") -> Trace:
     """Build one seeded, replayable arrival trace (see module docstring).
 
-    The structural draws (arrival steps, prompt/output lengths) come from a
-    dedicated RNG stream shared by every kind; token content comes from a
-    second stream — so for a fixed seed, traces of different kinds carry
-    the SAME load at the same steps and differ only in what they touch.
+    The structural draws (the MMPP modulation chain, arrival steps,
+    prompt/output lengths) come from a dedicated RNG stream shared by every
+    kind; token content comes from a second stream — so for a fixed
+    (seed, arrival) pair, traces of different kinds carry the SAME load at
+    the same steps and differ only in what they touch.
     """
     if kind not in TRACE_KINDS:
         raise KeyError(f"unknown trace kind {kind!r}; known: {TRACE_KINDS}")
+    if arrival not in ARRIVAL_KINDS:
+        raise KeyError(
+            f"unknown arrival process {arrival!r}; known: {ARRIVAL_KINDS}")
     struct = np.random.default_rng(np.random.SeedSequence([seed, 0xA11]))
     content = np.random.default_rng(np.random.SeedSequence([seed, 0xB22]))
+    # The MMPP calm/burst chain is drawn FIRST, from the structural stream:
+    # identical modulation (and identical subsequent draws) for every kind.
+    rate_scale = np.ones(n_steps)
+    if arrival == "mmpp":
+        hot = [t.name for t in tenants if t.rate * MMPP_BURST_SCALE > 1.0]
+        if hot:
+            import warnings
+            warnings.warn(
+                f"MMPP burst rate saturates at 1 for tenants {hot} "
+                f"(rate > {1.0 / MMPP_BURST_SCALE:.3f}): the stationary "
+                "mean will fall below the Bernoulli process's",
+                stacklevel=2)
+        state = 0                               # start calm (stationary mode)
+        for step in range(n_steps):
+            flip = struct.random()
+            state = (1 - state) if flip < (MMPP_P01, MMPP_P10)[state] else state
+            rate_scale[step] = (MMPP_CALM_SCALE, MMPP_BURST_SCALE)[state]
     scan_cursor = 0
     arrivals: list[Arrival] = []
     for step in range(n_steps):
         for ti, t in enumerate(tenants):
-            if struct.random() >= t.rate:
+            if struct.random() >= min(1.0, t.rate * rate_scale[step]):
                 continue
             plen = int(struct.integers(*t.prompt_len))
             n_out = int(struct.integers(*t.out_len))
@@ -126,7 +171,8 @@ def make_trace(kind: str, *, n_steps: int = 200, vocab: int = 256,
             arrivals.append(Arrival(step=step, tenant=t.name, tokens=tokens,
                                     max_new=n_out))
     return Trace(kind=kind, seed=seed, vocab=vocab, n_steps=n_steps,
-                 tenants=tuple(tenants), arrivals=tuple(arrivals))
+                 tenants=tuple(tenants), arrivals=tuple(arrivals),
+                 arrival=arrival)
 
 
 def play(trace: Trace, sched, *, max_steps: int | None = None,

@@ -184,6 +184,92 @@ def test_sharded_flash_decode_combine():
     assert "OK" in out
 
 
+@pytest.mark.slow
+def test_sharded_flash_decode_page_mass_combine():
+    """Kernel page-stats combine across 8 shards: the shard-assembled
+    per-page softmax mass equals the unsharded kernel export AND the dense
+    reference (the global pmax/psum normalizers are the output combine's
+    own pair — DESIGN.md §10)."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.kernels.paged_attn import ops as pa
+        from repro.kernels.paged_attn.ref import page_mass_ref
+        mesh = jax.make_mesh((8,), ('s',))
+        b, h, hkv, d, pg, t = 2, 4, 2, 32, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (b, h, d), jnp.float32)
+        kp = jax.random.normal(ks[1], (b, pg, t, hkv, d), jnp.float32)
+        vp = jax.random.normal(ks[2], (b, pg, t, hkv, d), jnp.float32)
+        lens = jax.random.randint(ks[3], (b, pg), 0, t + 1)
+        o_ref, mass_ref = pa.paged_attention(q, kp, vp, lens, interpret=True,
+                                             return_mass=True)
+
+        def body(q, kp, vp, lens):
+            m, l, acc, pm, pl = pa.paged_attention_local_stats(
+                q, kp, vp, lens, interpret=True, return_page_stats=True)
+            o, mass = pa.combine_stats(m, l, acc, ('s',),
+                                       page_m=pm, page_l=pl)
+            return o.astype(q.dtype), mass
+
+        with mesh:
+            o, mass = jax.jit(shard_map(body, mesh=mesh,
+                in_specs=(P(), P(None, 's'), P(None, 's'), P(None, 's')),
+                out_specs=(P(), P(None, 's')), check_rep=False))(q, kp, vp, lens)
+        err_o = float(jnp.max(jnp.abs(o - o_ref)))
+        err_m = float(jnp.max(jnp.abs(mass - mass_ref)))
+        err_r = float(jnp.max(jnp.abs(mass - page_mass_ref(q, kp, lens))))
+        assert err_o < 1e-4, err_o
+        assert err_m < 1e-5, err_m
+        assert err_r < 1e-5, err_r
+        sums = np.asarray(mass).sum(-1)
+        assert np.allclose(sums, 1.0, rtol=1e-4), sums
+        print('OK', err_m, err_r)
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_sharded_paged_decode_mass_stream():
+    """decode_step_paged over an 8-way slot-sharded mesh: both collect_mass
+    branches lower, logits match the single-device path, and the shard-
+    assembled kv_mass stream equals the local kernel export."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_smoke_config
+        from repro.models import transformer as tr, decode as dec
+        cfg = get_smoke_config('llama3.2-3b')
+        params = tr.init_params(cfg, jax.random.PRNGKey(0))
+        mesh = jax.make_mesh((8,), ('s',))
+        smesh = {'mesh': mesh, 'axes': ('s',)}
+        tok = jnp.zeros((2, 1), jnp.int32)
+        cl = dec.init_paged_cache(cfg, 2, 8, 4)
+        logits_l, _, streams_l = dec.decode_step_paged(
+            cfg, params, cl, tok, page_t=4, return_streams=True)
+        with mesh:
+            cs = dec.init_paged_cache(cfg, 2, 8, 4)
+            logits_s, _, streams_s = jax.jit(
+                lambda p, c, t: dec.decode_step_paged(
+                    cfg, p, c, t, page_t=4, smesh=smesh,
+                    return_streams=True))(params, cs, tok)
+            logits_s0, _ = jax.jit(
+                lambda p, c, t: dec.decode_step_paged(
+                    cfg, p, c, t, page_t=4, smesh=smesh))(params, cs, tok)
+        np.testing.assert_allclose(np.asarray(logits_s),
+                                   np.asarray(logits_l),
+                                   rtol=2e-4, atol=2e-4)
+        np.testing.assert_allclose(np.asarray(logits_s0),
+                                   np.asarray(logits_s),
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(streams_s['kv_mass']),
+                                   np.asarray(streams_l['kv_mass']),
+                                   rtol=1e-4, atol=1e-5)
+        print('OK')
+    """)
+    assert "OK" in out
+
+
 def test_host_offload_fallback():
     """CPU backend: slow-tier placement degrades to logical separation."""
     import jax

@@ -232,7 +232,15 @@ def _bench_doc(tmp_path, mutate=None):
     case = {"arch": "a", "batch": 2, "prompt_len": 8, "n_tokens": 4,
             "tokens_per_s": 1.0, "wall_s": 8.0, "migration_bytes": 1024,
             "migration_bytes_per_s": 128.0, "resources": {"embeddings": row}}
-    doc = {"quick": True, "cases": [case]}
+
+    def ab_arm(source, steady):
+        return {"kv_mass_source": source, "steps": 100, "tokens": 50,
+                "wall_s": 4.0, "kv_hit": steady, "kv_hit_steady": steady,
+                "kv_promoted": 8, "migration_bytes": 2048}
+    mass_ab = {"arch": "a", "trace": "zipf-hot", "arrival": "mmpp",
+               "lanes": 4, "seed": 0, "trace_steps": 100,
+               "fill": ab_arm("fill", 0.4), "kernel": ab_arm("kernel", 0.45)}
+    doc = {"quick": True, "cases": [case], "mass_ab": mass_ab}
     if mutate:
         mutate(doc)
     p = tmp_path / "BENCH_serve.json"
@@ -261,6 +269,21 @@ def test_validate_bench_rejects_violations(tmp_path):
         del doc["cases"][0]["resources"]["embeddings"]["quota_bytes"]
     assert any("missing keys" in e
                for e in validate(_bench_doc(tmp_path, missing_key)))
+
+    def no_mass_ab(doc):
+        del doc["mass_ab"]
+    assert any("mass_ab" in e for e in validate(_bench_doc(tmp_path,
+                                                           no_mass_ab)))
+
+    def fidelity_lost(doc):
+        doc["mass_ab"]["kernel"]["kv_hit_steady"] = 0.30
+    assert any("fidelity gate" in e
+               for e in validate(_bench_doc(tmp_path, fidelity_lost)))
+
+    def uneven_load(doc):
+        doc["mass_ab"]["kernel"]["tokens"] = 49
+    assert any("identical trace" in e
+               for e in validate(_bench_doc(tmp_path, uneven_load)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,5 +1,6 @@
 """Workload traces: seeded replayability, structural-load parity across
-kinds, and the access-pattern contrasts the traffic benchmark relies on."""
+kinds, the access-pattern contrasts the traffic benchmark relies on, and
+the bursty MMPP arrival process."""
 import numpy as np
 import pytest
 
@@ -84,3 +85,53 @@ def test_diurnal_hot_set_drifts():
     top_early = set(np.argsort(early)[::-1][:8])
     top_late = set(np.argsort(late)[::-1][:8])
     assert top_early != top_late             # the head rotated
+
+
+# -- MMPP arrivals ------------------------------------------------------------
+
+def test_mmpp_structural_load_identical_across_kinds():
+    """The modulation chain comes from the shared structural stream, so the
+    per-seed load guarantee holds under MMPP exactly as under Bernoulli."""
+    keys = {kind: [_arrival_key(a)
+                   for a in make_trace(kind, n_steps=120, seed=13,
+                                       arrival="mmpp").arrivals]
+            for kind in TRACE_KINDS}
+    assert keys["zipf-hot"] == keys["diurnal-shift"] == keys["scan-antagonist"]
+    assert all(make_trace(k, n_steps=20, seed=0, arrival="mmpp").arrival
+               == "mmpp" for k in TRACE_KINDS)
+
+
+def test_mmpp_burstier_same_mean():
+    """MMPP preserves the mean offered load but concentrates it in bursts:
+    windowed arrival counts are over-dispersed (Fano factor well above the
+    Bernoulli baseline) while total arrivals stay within a few percent."""
+    def fano(trace, w=20):
+        c = np.zeros(trace.n_steps)
+        for a in trace.arrivals:
+            c[a.step] += 1
+        wins = c[: trace.n_steps // w * w].reshape(-1, w).sum(1)
+        return wins.var() / max(wins.mean(), 1e-9)
+
+    seeds = range(5)
+    bern = [make_trace("zipf-hot", n_steps=1000, seed=s) for s in seeds]
+    mmpp = [make_trace("zipf-hot", n_steps=1000, seed=s, arrival="mmpp")
+            for s in seeds]
+    f_b = np.mean([fano(t) for t in bern])
+    f_m = np.mean([fano(t) for t in mmpp])
+    assert f_m > 1.3 * f_b, (f_b, f_m)
+    n_b = np.mean([len(t.arrivals) for t in bern])
+    n_m = np.mean([len(t.arrivals) for t in mmpp])
+    assert abs(n_m - n_b) / n_b < 0.15, (n_b, n_m)
+
+
+def test_mmpp_replayable_and_validated():
+    t1 = make_trace("zipf-hot", n_steps=80, seed=7, arrival="mmpp")
+    t2 = make_trace("zipf-hot", n_steps=80, seed=7, arrival="mmpp")
+    assert [_arrival_key(a) for a in t1.arrivals] \
+        == [_arrival_key(a) for a in t2.arrivals]
+    # a different process is a different trace (same seed)
+    t3 = make_trace("zipf-hot", n_steps=80, seed=7)
+    assert [_arrival_key(a) for a in t1.arrivals] \
+        != [_arrival_key(a) for a in t3.arrivals]
+    with pytest.raises(KeyError):
+        make_trace("zipf-hot", arrival="poisson")
