@@ -22,6 +22,20 @@ kernel-exported softmax mass (ServeConfig.kv_mass_source, DESIGN.md §10);
 the fill-vs-kernel fidelity A/B itself lives in serve_bench.py
 (``mass_ab``).
 
+Latency is reported SPLIT (DESIGN.md §11): ``ttft_ms`` (arrival -> first
+token) and ``tpot_ms`` (inter-token decode gaps) are different
+distributions; the deprecated combined ``latency_ms`` row survives one
+release.  Every trace gets an untimed per-case warmup that traces+compiles
+the engine's jitted bodies first, recorded as ``compile_s``, so wall_s /
+tokens_per_s / migration_bytes_per_s are steady-state numbers, not XLA.
+
+The ``prefill`` section is the chunked-prefill TTFT A/B (DESIGN.md §11):
+one 512-token prompt served twice through the Scheduler on the same seed —
+token-at-a-time streaming (prefill_chunk=0) vs the chunked scan
+(prefill_chunk=64 >= page_t) — each arm warmed by an untimed full request
+first.  CI gates chunked TTFT <= 1/4 of streaming with bit-exact output
+tokens (validate_bench.py): the prompt-length tail latency fix, measured.
+
     PYTHONPATH=src:. python benchmarks/traffic_bench.py [--quick]
 """
 from __future__ import annotations
@@ -31,6 +45,8 @@ import os
 import time
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.registry import get_smoke_config
 from repro.models import transformer as tr
@@ -52,6 +68,41 @@ SERVE_KW = dict(
     kv_quota=16, kv_tier_slots=12, kv_mass_threshold=0.01,
     lanes=LANES, kv_segments=LANES + 2,
 )
+
+# The chunked-prefill TTFT A/B (DESIGN.md §11): a >= 512-token prompt, chunk
+# >= page_t, chunk <= the ring-wrap cap (hot_slots-1)*page_t = 80.
+PREFILL_KW = dict(
+    max_seq=640, paged=True, page_t=16, hot_slots=6, migration_interval=8,
+    kv_quota=16, kv_tier_slots=12, kv_mass_threshold=0.01,
+    lanes=2, kv_segments=2,
+)
+PREFILL_PROMPT = 512
+PREFILL_CHUNK = 64
+PREFILL_NEW = 4
+
+
+def _warm_engine(eng, chunk: int = 0) -> float:
+    """Untimed per-case warmup: trace+compile the engine's jitted bodies by
+    calling the jit wrappers directly on the live lane shapes with every
+    lane masked inactive — pure calls, outputs discarded, no daemon or
+    cache state touched.  Returns the trace+compile wall (``compile_s``)
+    so the timed window that follows is steady-state execution."""
+    t0 = time.perf_counter()
+    if eng.cache is None:
+        eng.start_lanes()
+    lanes = eng.scfg.lanes
+    idle = jnp.zeros(lanes, bool)
+    out = eng._decode_paged(eng.params, eng.cache,
+                            jnp.zeros((lanes, 1), jnp.int32),
+                            eng._tier_reads(), idle)
+    jax.block_until_ready(out[0])
+    if chunk > 0:
+        out = eng._prefill_paged_jit(eng.params, eng.cache,
+                                     jnp.zeros((lanes, chunk), jnp.int32),
+                                     jnp.zeros((lanes, chunk), bool), idle,
+                                     eng._tier_reads())
+        jax.block_until_ready(out[0])
+    return time.perf_counter() - t0
 
 
 def _read_counts(eng) -> dict[str, tuple[int, int]]:
@@ -75,6 +126,7 @@ def _window_rate(before: dict, after: dict) -> tuple[float, dict[str, float]]:
 def _bench_trace(kind: str, params, n_steps: int, seed: int) -> dict:
     cfg = get_smoke_config(ARCH)
     eng = ServeEngine(cfg, params, ServeConfig(**SERVE_KW))
+    compile_s = _warm_engine(eng)
     tenants = [Tenant(t.name, t.weight) for t in DEFAULT_TENANTS]
     sched = Scheduler(eng, tenants, SchedConfig(preempt_patience=24,
                                                 seed=seed))
@@ -107,9 +159,12 @@ def _bench_trace(kind: str, params, n_steps: int, seed: int) -> dict:
         "submitted": rep["submitted"],
         "completed": rep["completed"],
         "tokens": rep["tokens"],
+        "compile_s": compile_s,
         "wall_s": wall,
         "tokens_per_s": rep["tokens"] / wall,
-        "latency_ms": rep["latency_ms"],
+        "ttft_ms": rep["ttft_ms"],
+        "tpot_ms": rep["tpot_ms"],
+        "latency_ms": rep["latency_ms"],     # deprecated combined row
         "hit_rate": fast / max(reads, 1),
         "hit_rate_steady": steady,
         "resource_hit_steady": steady_per,
@@ -119,6 +174,67 @@ def _bench_trace(kind: str, params, n_steps: int, seed: int) -> dict:
         "queued_peak": rep["queued_peak"],
         "tenants": rep["tenants"],
         "resources": resources,
+    }
+
+
+def _prefill_arm(params, chunk: int) -> dict:
+    """One arm of the chunked-prefill TTFT A/B: a fresh engine + scheduler,
+    one UNTIMED warmup request that traces+compiles the arm's whole path
+    (streaming decode step or chunk scan, plus the flush scatter), then the
+    measured request — its TTFT is steady-state arrival -> first-token
+    wall, not XLA compile.  The warmup wall is recorded as ``compile_s``."""
+    cfg = get_smoke_config(ARCH)
+    eng = ServeEngine(cfg, params, ServeConfig(**PREFILL_KW))
+    sched = Scheduler(eng, [Tenant("a")],
+                      SchedConfig(prefill_chunk=chunk, seed=0))
+    rng = np.random.default_rng(11)
+    warm = rng.integers(0, cfg.vocab, PREFILL_PROMPT).astype(np.int32)
+    prompt = rng.integers(0, cfg.vocab, PREFILL_PROMPT).astype(np.int32)
+    t0 = time.perf_counter()
+    sched.submit("a", warm, max_new=PREFILL_NEW)
+    sched.run(max_steps=4 * PREFILL_PROMPT)
+    compile_s = time.perf_counter() - t0
+    req = sched.submit("a", prompt, max_new=PREFILL_NEW)
+    sched.run(max_steps=8 * PREFILL_PROMPT)
+    rows = Scheduler._latency_rows([req])
+    return {
+        "chunk": chunk,
+        "compile_s": compile_s,
+        "steps": sched.step_count,
+        "ttft_ms": rows["ttft_ms"]["mean"],        # one request: exact
+        "tpot_ms": rows["tpot_ms"],
+        "tokens": [int(t) for t in req.out],
+    }
+
+
+def _bench_prefill(params) -> dict:
+    """The prompt-length tail-latency A/B (DESIGN.md §11): the identical
+    512-token request served token-at-a-time (prefill_chunk=0) and through
+    the chunked scan (prefill_chunk=64 >= page_t), same seed, greedy
+    sampling — chunked must land the first token in <= 1/4 the time with
+    bit-exact output tokens (gated in validate_bench.py)."""
+    token = _prefill_arm(params, chunk=0)
+    chunked = _prefill_arm(params, chunk=PREFILL_CHUNK)
+    match = token["tokens"] == chunked["tokens"]
+    ratio = chunked["ttft_ms"] / max(token["ttft_ms"], 1e-9)
+    assert match, (
+        "chunked prefill diverged from token-at-a-time streaming: "
+        f"{chunked['tokens']} != {token['tokens']}")
+    assert ratio <= 0.25, (
+        f"chunked TTFT {chunked['ttft_ms']:.1f}ms not <= 1/4 of "
+        f"token-at-a-time {token['ttft_ms']:.1f}ms (ratio {ratio:.3f})")
+    return {
+        "arch": ARCH,
+        "prompt_len": PREFILL_PROMPT,
+        "max_new": PREFILL_NEW,
+        "page_t": PREFILL_KW["page_t"],
+        "chunk": PREFILL_CHUNK,
+        "lanes": PREFILL_KW["lanes"],
+        "seed": 0,
+        "tokens_match": bool(match),
+        "ttft_ratio": ratio,
+        "token": token,
+        "chunked": chunked,
     }
 
 
@@ -136,13 +252,20 @@ def run(quick: bool = False):
         f"{by_kind['scan-antagonist']['hit_rate_steady']:.3f}")
     for r in rows:
         emit(f"traffic_{r['trace']}",
-             r["latency_ms"]["p50"] * 1e3,
-             f"tok_s={r['tokens_per_s']:.1f} p99={r['latency_ms']['p99']:.1f}ms "
+             r["tpot_ms"]["p50"] * 1e3,
+             f"tok_s={r['tokens_per_s']:.1f} "
+             f"ttft_p99={r['ttft_ms']['p99']:.1f}ms "
+             f"tpot_p99={r['tpot_ms']['p99']:.1f}ms "
              f"hit={r['hit_rate']:.3f} steady={r['hit_rate_steady']:.3f} "
              f"mig_B_s={r['migration_bytes_per_s']:.0f} "
              f"preempt={r['preemptions']}")
     emit("traffic_adaptivity_gap", 0.0,
          f"zipf-scan steady hit gap={gap:+.3f}")
+    pf = _bench_prefill(params)
+    emit("traffic_prefill", pf["chunked"]["ttft_ms"] * 1e3,
+         f"ttft chunked={pf['chunked']['ttft_ms']:.1f}ms "
+         f"token={pf['token']['ttft_ms']:.1f}ms "
+         f"ratio={pf['ttft_ratio']:.3f} match={pf['tokens_match']}")
     update_bench_json(OUT_PATH, traffic={
         "quick": quick,
         "arch": ARCH,
@@ -150,7 +273,7 @@ def run(quick: bool = False):
         "arrival": ARRIVAL,
         "tenants": {t.name: t.weight for t in DEFAULT_TENANTS},
         "traces": rows,
-    })
+    }, prefill=pf)
     emit("traffic_bench_json", 0.0, os.path.normpath(OUT_PATH))
     return rows
 

@@ -14,7 +14,16 @@ runs the gate in the CI fast tier) carries the hotness-fidelity A/B:
 the zipf trace served with the kernel-exported softmax-mass stream vs the
 old page-fill proxy.  The gate asserts kernel >= fill on the steady-state
 KV hit rate — device-true hotness must never profile WORSE than the
-host proxy it replaced (DESIGN.md §10).  Run after ``make bench-serve`` /
+host proxy it replaced (DESIGN.md §10).
+
+The ``prefill`` section (written by traffic_bench, so ``make
+bench-traffic`` runs the gate in CI) carries the chunked-prefill TTFT A/B
+(DESIGN.md §11): one >= 512-token prompt served token-at-a-time vs through
+the chunked scan on the same seed.  The gate asserts chunked TTFT <= 1/4
+of streaming with bit-exact output tokens and a nonzero TPOT row — the
+prompt-length tail-latency fix must not regress, and the split ttft_ms /
+tpot_ms schema (latency_ms stays one release, deprecated) must be present
+on every trace and tenant row.  Run after ``make bench-serve`` /
 ``make bench-traffic``:
 
     PYTHONPATH=src:. python benchmarks/validate_bench.py [path]
@@ -26,8 +35,8 @@ import os
 import sys
 
 CASE_KEYS = {
-    "arch", "batch", "prompt_len", "n_tokens", "tokens_per_s", "wall_s",
-    "migration_bytes", "migration_bytes_per_s", "resources",
+    "arch", "batch", "prompt_len", "n_tokens", "compile_s", "tokens_per_s",
+    "wall_s", "migration_bytes", "migration_bytes_per_s", "resources",
 }
 RESOURCE_KEYS = {
     "name", "fast_reads", "slow_reads", "hit_rate", "promoted", "demoted",
@@ -36,15 +45,24 @@ RESOURCE_KEYS = {
 }
 TRACE_KEYS = {
     "trace", "seed", "arrival", "kv_mass_source", "trace_steps", "steps",
-    "lanes", "submitted", "completed", "tokens", "wall_s", "tokens_per_s",
-    "latency_ms", "hit_rate", "hit_rate_steady", "resource_hit_steady",
-    "migration_bytes", "migration_bytes_per_s", "preemptions", "queued_peak",
+    "lanes", "submitted", "completed", "tokens", "compile_s", "wall_s",
+    "tokens_per_s", "ttft_ms", "tpot_ms", "latency_ms", "hit_rate",
+    "hit_rate_steady", "resource_hit_steady", "migration_bytes",
+    "migration_bytes_per_s", "preemptions", "queued_peak",
     "tenants", "resources",
 }
 TRACE_KINDS = {"zipf-hot", "diurnal-shift", "scan-antagonist"}
 ARRIVAL_KINDS = {"bernoulli", "mmpp"}
-TENANT_KEYS = {"weight", "completed", "tokens", "kv_hit_rate", "latency_ms"}
+TENANT_KEYS = {"weight", "completed", "tokens", "kv_hit_rate", "ttft_ms",
+               "tpot_ms", "latency_ms"}
 LATENCY_KEYS = {"p50", "p99", "mean", "n"}
+# latency_ms is the DEPRECATED combined row (one release, benchmarks/
+# README.md); ttft_ms and tpot_ms are the split that replaces it
+LATENCY_ROWS = ("ttft_ms", "tpot_ms", "latency_ms")
+PREFILL_KEYS = {"arch", "prompt_len", "max_new", "page_t", "chunk", "lanes",
+                "seed", "tokens_match", "ttft_ratio", "token", "chunked"}
+PREFILL_ARM_KEYS = {"chunk", "compile_s", "steps", "ttft_ms", "tpot_ms",
+                    "tokens"}
 MASS_AB_KEYS = {"arch", "trace", "arrival", "lanes", "seed", "trace_steps",
                 "fill", "kernel"}
 MASS_AB_ARM_KEYS = {"kv_mass_source", "steps", "tokens", "wall_s", "kv_hit",
@@ -92,10 +110,13 @@ def _check_traffic(traffic: dict, errors: list[str]) -> None:
             tmissing = TENANT_KEYS - set(trow)
             if tmissing:
                 errors.append(f"{tag}/{tn}: missing {sorted(tmissing)}")
-            elif LATENCY_KEYS - set(trow["latency_ms"]):
-                errors.append(f"{tag}/{tn}: incomplete latency row")
-        if LATENCY_KEYS - set(r["latency_ms"]):
-            errors.append(f"{tag}: incomplete latency_ms row")
+                continue
+            for row in LATENCY_ROWS:
+                if LATENCY_KEYS - set(trow[row]):
+                    errors.append(f"{tag}/{tn}: incomplete {row} row")
+        for row in LATENCY_ROWS:
+            if LATENCY_KEYS - set(r[row]):
+                errors.append(f"{tag}: incomplete {row} row")
         if r["completed"] != r["submitted"]:
             errors.append(f"{tag}: {r['submitted'] - r['completed']} "
                           "requests never finished (undrained queue)")
@@ -145,14 +166,50 @@ def _check_mass_ab(ab: dict, errors: list[str]) -> None:
             "(device-true hotness profiling worse than the host proxy)")
 
 
+def _check_prefill(p: dict, errors: list[str]) -> None:
+    """The chunked-prefill TTFT gate (DESIGN.md §11): a >= 512-token prompt
+    served through the Scheduler must reach its first token in <= 1/4 the
+    token-at-a-time wall when chunked (chunk >= page_t), with bit-exact
+    output tokens — the prompt-length tail-latency fix, enforced in CI."""
+    missing = PREFILL_KEYS - set(p)
+    if missing:
+        errors.append(f"prefill: missing keys {sorted(missing)}")
+        return
+    for arm in ("token", "chunked"):
+        amissing = PREFILL_ARM_KEYS - set(p[arm])
+        if amissing:
+            errors.append(f"prefill/{arm}: missing {sorted(amissing)}")
+            return
+        if LATENCY_KEYS - set(p[arm]["tpot_ms"]):
+            errors.append(f"prefill/{arm}: incomplete tpot_ms row")
+        elif not p[arm]["tpot_ms"]["p50"] > 0:
+            errors.append(f"prefill/{arm}: tpot_ms p50 must be > 0 — "
+                          "decode gaps were never measured")
+    if p["prompt_len"] < 512:
+        errors.append(f"prefill: prompt_len {p['prompt_len']} < 512 — the "
+                      "A/B must measure a long prompt")
+    if p["chunk"] < p["page_t"]:
+        errors.append(f"prefill: chunk {p['chunk']} < page_t {p['page_t']}")
+    if not p["tokens_match"] or p["token"]["tokens"] != p["chunked"]["tokens"]:
+        errors.append("prefill: chunked output tokens diverge from "
+                      "token-at-a-time streaming — bit-exactness gate lost")
+    t, c = p["token"]["ttft_ms"], p["chunked"]["ttft_ms"]
+    if not c <= 0.25 * t:
+        errors.append(
+            f"prefill: chunked TTFT {c:.1f}ms must be <= 1/4 of "
+            f"token-at-a-time {t:.1f}ms (ratio {c / max(t, 1e-9):.3f}) — "
+            "the prompt-length tail-latency fix regressed")
+
+
 def validate(path: str) -> list[str]:
     with open(path) as f:
         doc = json.load(f)
     errors: list[str] = []
-    if not set(doc) <= {"quick", "cases", "traffic", "mass_ab"} or \
+    if not set(doc) <= {"quick", "cases", "traffic", "mass_ab", "prefill"} or \
             not {"quick", "cases"} <= set(doc):
         errors.append(f"top-level keys {sorted(doc)} not in expected "
-                      "['cases', 'quick'] (+ optional 'traffic', 'mass_ab')")
+                      "['cases', 'quick'] (+ optional 'traffic', 'mass_ab', "
+                      "'prefill')")
         return errors
     if not doc["cases"] and "traffic" not in doc:
         errors.append("no benchmark cases recorded")
@@ -173,6 +230,11 @@ def validate(path: str) -> list[str]:
         _check_mass_ab(doc["mass_ab"], errors)
     if "traffic" in doc:
         _check_traffic(doc["traffic"], errors)
+        if "prefill" not in doc:
+            errors.append("prefill section missing — traffic_bench runs the "
+                          "chunked-prefill TTFT A/B (DESIGN.md §11)")
+    if "prefill" in doc:
+        _check_prefill(doc["prefill"], errors)
     return errors
 
 
@@ -191,8 +253,10 @@ def main() -> int:
     ab = doc.get("mass_ab")
     gap = (f", mass A/B gap {ab['kernel']['kv_hit_steady'] - ab['fill']['kv_hit_steady']:+.3f}"
            if ab else "")
-    print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces{gap}, "
-          "schema + quota + adaptivity + fidelity checks pass")
+    pf = doc.get("prefill")
+    ttft = f", prefill TTFT ratio {pf['ttft_ratio']:.3f}" if pf else ""
+    print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces{gap}{ttft}, "
+          "schema + quota + adaptivity + fidelity + prefill checks pass")
     return 0
 
 

@@ -142,11 +142,11 @@ def init_paged_cache(cfg: ArchConfig, batch: int, n_slots: int, page_t: int,
 
 def prefill(cfg: ArchConfig, params, tokens, *, aux_embeds=None, remat=True,
             ep_axes=None):
-    """Returns (last-token logits, dense cache).
+    """Returns (last-token logits, forward aux) — the dry-run lowering path.
 
-    Implemented as forward + per-block KV projection replay: attention blocks
-    recompute K/V from the pre-attention normed hidden states (cheap relative
-    to the full forward, keeps the code single-sourced).
+    Uses the training forward for the full-sequence pass; it does NOT build
+    a decode cache (the serve engine uses :func:`prefill_dense` /
+    :func:`prefill_paged`, which fill the cache in the same pass).
     """
     from repro.models.transformer import forward
     x, aux = forward(cfg, params, tokens, aux_embeds=aux_embeds, remat=remat,
@@ -155,6 +155,117 @@ def prefill(cfg: ArchConfig, params, tokens, *, aux_embeds=None, remat=True,
     # NOTE: the dry-run prefill cost is dominated by forward(); cache
     # materialization is modeled by re-projecting K/V in the serve adapter.
     return logits, aux
+
+
+def merge_cache(old, new, active):
+    """Commit a decode-step cache update only for ``active`` lanes.
+
+    ``active`` is a (B,) bool mask over the batch (lane) axis; inactive
+    lanes keep their OLD cache leaves — position, ring bookkeeping, page
+    payloads and O(1) recurrent states all stay frozen, so a lane can sit
+    out an engine step (or a chunked-prefill scan step) without drifting.
+    Blocks leaves are group-stacked (G, B, ...); prologue leaves are
+    (B, ...); ``pos`` must be the per-lane (B,) vector.
+    """
+    def mask(o, n, baxis):
+        act = active.reshape((1,) * baxis + active.shape
+                             + (1,) * (n.ndim - baxis - 1))
+        return jnp.where(act, n, o)
+    out = {"blocks": jax.tree.map(lambda o, n: mask(o, n, 1),
+                                  old["blocks"], new["blocks"])}
+    if jnp.ndim(new["pos"]) == 0:
+        raise ValueError("merge_cache needs per-lane positions "
+                         "(init_paged_cache(per_lane_pos=True))")
+    out["pos"] = jnp.where(active, new["pos"], old["pos"])
+    if "prologue" in old:
+        out["prologue"] = jax.tree.map(lambda o, n: mask(o, n, 0),
+                                       old["prologue"], new["prologue"])
+    return out
+
+
+def prefill_dense(cfg: ArchConfig, params, cache, tokens, *, aux_embeds=None,
+                  ep_axes=None, tiered=None):
+    """Single-pass dense prefill: ONE jitted scan of the decode-step body
+    over the prompt, filling the cache and producing the last-token logits
+    together (the prompt is never run twice).
+
+    Returns ``(last-token logits (B, V), cache, streams)`` where
+    ``streams["router"]`` stacks the per-step (G, n_moe, B, 1, k) expert
+    stream on a leading prompt axis (None for dense-FFN archs) — one
+    observation batch for the tiering daemon instead of S engine steps.
+    """
+    def body(cache, tok):
+        logits, nc, streams = decode_step(
+            cfg, params, cache, tok[:, None], aux_embeds=aux_embeds,
+            ep_axes=ep_axes, return_streams=True, tiered=tiered)
+        r = streams["router"]
+        return nc, (logits[:, -1],
+                    r if r is not None else jnp.zeros((0,), jnp.int32))
+    cache, (logits_seq, router) = jax.lax.scan(
+        body, cache, jnp.moveaxis(jnp.asarray(tokens, jnp.int32), 0, 1))
+    return logits_seq[-1], cache, {
+        "router": router if router.size else None}
+
+
+def prefill_paged(cfg: ArchConfig, params, cache, tokens, *, page_t: int,
+                  valid=None, active=None, ep_axes=None, smesh=None,
+                  tiered=None, collect_mass: bool = False):
+    """Chunked prefill through the paged ring: one jitted scan of the
+    per-token paged decode body over a (B, C) prompt chunk.
+
+    Each scan step IS :func:`decode_step_paged` on one token column, so the
+    ring state after the chunk — page payloads, ``page_len``/``cur_slot``
+    bookkeeping, per-lane positions — and the final logits are bit-exact
+    with C token-at-a-time streaming calls; what the chunk removes is the
+    per-token dispatch, host observation and daemon bookkeeping cost.
+
+    ``valid`` (B, C) bool marks real tokens (False = ragged-tail padding: a
+    padded step is a complete no-op for that lane, and the logits carried
+    out are the last VALID step's).  ``active`` (B,) bool masks whole lanes
+    — inactive lanes' cache leaves never change, so the serve engine can
+    chunk-prefill one lane while other lanes' decode state sits untouched
+    between their own steps (requires per-lane positions).
+
+    Returns ``(last-valid logits (B, V) f32, cache, streams)``; streams
+    stacks the per-step ``router`` / ``kv_mass`` streams on a leading chunk
+    axis ((C, G, n_moe, B, 1, k) / (C, G, n_attn, B, S), or None).
+    """
+    tokens = jnp.asarray(tokens, jnp.int32)
+    b, _ = tokens.shape
+    lane_act = None if active is None else jnp.asarray(active, bool)
+    if valid is None and lane_act is None:
+        step_act = None                      # every step fully live: no merge
+    else:
+        v = jnp.ones(tokens.shape, bool) if valid is None \
+            else jnp.asarray(valid, bool)
+        step_act = v if lane_act is None else v & lane_act[:, None]
+
+    def body(carry, xs):
+        cache, last = carry
+        tok, act = xs
+        logits, nc, streams = decode_step_paged(
+            cfg, params, cache, tok[:, None], page_t=page_t, ep_axes=ep_axes,
+            smesh=smesh, return_streams=True, tiered=tiered,
+            collect_mass=collect_mass)
+        step = logits[:, -1].astype(jnp.float32)
+        if act is None:
+            nc, last = nc, step
+        else:
+            nc = merge_cache(cache, nc, act)
+            last = jnp.where(act[:, None], step, last)
+        r, km = streams["router"], streams["kv_mass"]
+        outs = (r if r is not None else jnp.zeros((0,), jnp.int32),
+                km if km is not None else jnp.zeros((0,), jnp.float32))
+        return (nc, last), outs
+
+    xs = (jnp.moveaxis(tokens, 0, 1),
+          None if step_act is None else jnp.moveaxis(step_act, 0, 1))
+    last0 = jnp.zeros((b, cfg.vocab), jnp.float32)
+    (cache, last), (router, kv_mass) = jax.lax.scan(body, (cache, last0), xs)
+    return last, cache, {
+        "router": router if router.size else None,
+        "kv_mass": kv_mass if kv_mass.size else None,
+    }
 
 
 # ---------------------------------------------------------------------------

@@ -118,6 +118,8 @@ class ServeEngine:
             ("kv" in self.daemon and self._kernel_mass)
         self._decode = jax.jit(self._decode_fn)
         self._decode_paged = jax.jit(self._decode_paged_fn)
+        self._prefill_dense_jit = jax.jit(self._prefill_dense_fn)
+        self._prefill_paged_jit = jax.jit(self._prefill_paged_fn)
         self.cache = None
         self.step_count = 0
         self._last_kv_mass = None       # (B, n_slots) kernel mass, post-step
@@ -223,12 +225,32 @@ class ServeEngine:
                                return_streams=self._want_streams,
                                tiered=tiered)
 
-    def _decode_paged_fn(self, params, cache, token, tiered):
-        return dec.decode_step_paged(self.cfg, params, cache, token,
-                                     page_t=self.scfg.page_t, ep_axes=self.ep,
-                                     return_streams=self._want_streams,
-                                     tiered=tiered,
-                                     collect_mass=self._kernel_mass)
+    def _decode_paged_fn(self, params, cache, token, tiered, active):
+        out = dec.decode_step_paged(self.cfg, params, cache, token,
+                                    page_t=self.scfg.page_t, ep_axes=self.ep,
+                                    return_streams=self._want_streams,
+                                    tiered=tiered,
+                                    collect_mass=self._kernel_mass)
+        if active is None:
+            return out
+        # lane mode: inactive lanes' cache leaves stay frozen — their
+        # positions/rings must not drift while another lane chunk-prefills
+        if self._want_streams:
+            logits, new_cache, streams = out
+            return logits, dec.merge_cache(cache, new_cache, active), streams
+        logits, new_cache = out
+        return logits, dec.merge_cache(cache, new_cache, active)
+
+    def _prefill_dense_fn(self, params, cache, tokens, aux, tiered):
+        return dec.prefill_dense(self.cfg, params, cache, tokens,
+                                 aux_embeds=aux, ep_axes=self.ep,
+                                 tiered=tiered)
+
+    def _prefill_paged_fn(self, params, cache, tokens, valid, active, tiered):
+        return dec.prefill_paged(self.cfg, params, cache, tokens,
+                                 page_t=self.scfg.page_t, valid=valid,
+                                 active=active, ep_axes=self.ep, tiered=tiered,
+                                 collect_mass=self._kernel_mass)
 
     def _tier_reads(self) -> dict:
         """Tier views for the in-jit read path (DESIGN.md §10): device-array
@@ -255,10 +277,18 @@ class ServeEngine:
         return out
 
     # -- public API -----------------------------------------------------------
+    @property
+    def _chunk_cap(self) -> int:
+        """Ring-wrap safety bound on one prefill chunk: a chunk scan must
+        never overwrite a page that has not been flushed to the slow store,
+        so it spans at most the ring minus the slot it may be mid-filling."""
+        return max((self.scfg.hot_slots - 1) * self.scfg.page_t, 1)
+
     def prefill(self, tokens: np.ndarray, aux_embeds=None):
         if self.lane_mode:
-            raise ValueError("lane mode serves through advance_lanes (the "
-                             "request scheduler), not prefill/generate")
+            raise ValueError("lane mode serves through prefill_lane/"
+                             "advance_lanes (the request scheduler), not "
+                             "prefill/generate")
         b, s = tokens.shape
         self.aux = aux_embeds
         if self.cfg.encoder_layers and aux_embeds is not None:
@@ -267,19 +297,56 @@ class ServeEngine:
             self.cache = dec.init_paged_cache(
                 self.cfg, b, self.scfg.hot_slots, self.scfg.page_t)
             self._kv_flushed.clear()         # fresh ring: re-flush everything
-            # seed by streaming the prompt through paged decode (keeps one
-            # code path; production would bulk-write pages from prefill)
+            # chunked prefill: scan the paged decode body over the prompt in
+            # ring-capacity chunks (bit-exact with token-at-a-time streaming;
+            # dec.prefill_paged), flushing each chunk's pages down before the
+            # ring can wrap over them
+            cap = self._chunk_cap
             logits = None
-            for t in range(s):
-                logits = self._advance(jnp.asarray(tokens[:, t:t + 1]))
-            return np.asarray(jnp.argmax(logits[:, -1], -1))
+            for off in range(0, s, cap):
+                logits = self._prefill_chunk(jnp.asarray(tokens[:, off:off + cap]))
+            return np.asarray(jnp.argmax(logits, -1))
+        # dense path: ONE scan fills the cache and yields the last-token
+        # logits together — the prompt runs exactly once, and the tiering
+        # streams are replayed as one masked observation batch
         self.cache = dec.init_cache(self.cfg, b, self.scfg.max_seq)
-        logits, _ = dec.prefill(self.cfg, self.params, jnp.asarray(tokens),
-                                aux_embeds=aux_embeds, ep_axes=self.ep)
-        # replay tokens into the cache (single-sourced decode path)
-        for t in range(s):
-            self._advance(jnp.asarray(tokens[:, t:t + 1]))
-        return np.asarray(jnp.argmax(logits[:, -1], -1))
+        logits, self.cache, streams = self._prefill_dense_jit(
+            self.params, self.cache, jnp.asarray(tokens), self.aux,
+            self._tier_reads())
+        self._observe_prefill(tokens, streams)
+        self._maybe_tick(s)
+        return np.asarray(jnp.argmax(logits, -1))
+
+    def _prefill_chunk(self, tok: jax.Array):
+        """One single-request paged prefill chunk: scan-advance the cache,
+        observe the chunk's streams once, flush its pages, tick the daemon
+        for the chunk's worth of steps.  Returns (B, V) last logits."""
+        n = tok.shape[1]
+        logits, self.cache, streams = self._prefill_paged_jit(
+            self.params, self.cache, tok, None, None, self._tier_reads())
+        self._observe_prefill(np.asarray(tok), streams)
+        if "kv" in self.daemon:
+            mass, ids = self._kv_page_stream()
+            km = streams.get("kv_mass")
+            if self._kernel_mass and km is not None:
+                # chunk-summed kernel mass over the post-chunk window: the
+                # (C, G, n_attn, B, S) stream head-averaged over groups,
+                # positions and lockstep batch rows, summed over the chunk —
+                # the aggregate of the per-step NeoProf streams (DESIGN.md §10)
+                mass = jnp.sum(jnp.mean(km, axis=(1, 2, 3)), axis=0)
+            if ids.size:
+                self.daemon.observe("kv", mass, ids)
+        self._flush_kv_slow()
+        self._maybe_tick(n)
+        return logits
+
+    def _observe_prefill(self, tokens: np.ndarray, streams: dict) -> None:
+        """Replay a prefilled chunk's embedding/expert streams as ONE
+        observation batch each (not one per prompt token)."""
+        if "embeddings" in self.daemon:
+            self.daemon.observe("embeddings", jnp.asarray(tokens, jnp.int32))
+        if "experts" in self.daemon and streams.get("router") is not None:
+            self.daemon.observe("experts", streams["router"])
 
     def step(self, token: np.ndarray) -> np.ndarray:
         logits = self._advance(jnp.asarray(token)[:, None])
@@ -340,7 +407,8 @@ class ServeEngine:
         tokens = np.asarray(tokens, np.int32)
         tok = jnp.asarray(tokens)[:, None]
         out = self._decode_paged(self.params, self.cache, tok,
-                                 self._tier_reads())
+                                 self._tier_reads(),
+                                 jnp.asarray(self._lane_active))
         if self._want_streams:
             logits, self.cache, streams = out
         else:
@@ -349,6 +417,89 @@ class ServeEngine:
         self._observe_lanes(tokens, streams)
         self._maybe_tick()
         return np.asarray(logits[:, -1])
+
+    def prefill_lane(self, lane: int, tokens, segment: int,
+                     chunk: int | None = None) -> np.ndarray:
+        """Chunked prefill of ONE lane's prompt through the paged ring
+        (DESIGN.md §11): the prompt is consumed ``chunk`` tokens at a time
+        by a single jitted scan of the paged decode body (bit-exact with
+        token-at-a-time streaming), every other lane's decode state frozen
+        by the active-lane mask — so the scheduler can interleave chunk
+        writes with other lanes' decode steps, no stop-the-world.
+
+        Per chunk the engine bulk-flushes the lane's freshly-filled ring
+        pages down to its slow-store ``segment`` (one donated scatter,
+        ``tiering.migrate.write_pages``), feeds the KV observation stream
+        with the chunk's resident page ids so the daemon profiles prefilled
+        pages immediately, and advances the daemon cadence by the chunk
+        length.  Lane-addressed on purpose: this is the hand-off verb a
+        disaggregated prefill tier would call against the shared slow
+        store.  Returns the last prompt position's logits (vocab,) f32.
+        """
+        if not self.lane_mode:
+            raise ValueError("prefill_lane requires ServeConfig.lanes > 0")
+        if self.cache is None:
+            self.start_lanes()
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.size == 0:
+            raise ValueError("prefill_lane needs at least one token")
+        chunk = min(chunk or tokens.size, self._chunk_cap)
+        self._lane_segments[lane] = segment
+        active = np.zeros(self.scfg.lanes, bool)
+        active[lane] = True
+        logits = None
+        for off in range(0, tokens.size, chunk):
+            logits = self._prefill_lane_chunk(lane, tokens[off:off + chunk],
+                                              chunk, active)
+        return logits
+
+    def _prefill_lane_chunk(self, lane: int, piece: np.ndarray, chunk: int,
+                            active: np.ndarray) -> np.ndarray:
+        """One lane-chunk scan: ragged pieces are padded to the fixed chunk
+        width with valid=False no-op steps (one traced shape per chunk
+        size), so a prompt tail never retraces the scan."""
+        n = piece.size
+        tok = np.zeros((self.scfg.lanes, chunk), np.int32)
+        tok[lane, :n] = piece
+        valid = np.zeros((self.scfg.lanes, chunk), bool)
+        valid[lane, :n] = True
+        logits, self.cache, streams = self._prefill_paged_jit(
+            self.params, self.cache, jnp.asarray(tok), jnp.asarray(valid),
+            jnp.asarray(active), self._tier_reads())
+        self._lane_active = active.copy()
+        self._observe_lane_chunk(lane, tok, valid, streams, active)
+        self._flush_kv_lanes(lanes=[lane])
+        self._maybe_tick(n)
+        return np.asarray(logits[lane])
+
+    def _observe_lane_chunk(self, lane: int, tok: np.ndarray,
+                            valid: np.ndarray, streams: dict,
+                            active: np.ndarray) -> None:
+        """Feed one chunk's tiering streams in ONE observation batch per
+        resource, other lanes (and tail padding) masked to -1."""
+        if "embeddings" in self.daemon:
+            self.daemon.observe(
+                "embeddings", jnp.asarray(np.where(valid, tok, -1), jnp.int32))
+        if "experts" in self.daemon and streams.get("router") is not None:
+            router = streams["router"]      # (C, G, n_moe, L, 1, k)
+            mask = jnp.asarray(valid.T)[:, None, None, :, None, None]
+            self.daemon.observe("experts", jnp.where(mask, router, -1))
+        if "kv" in self.daemon:
+            sv = self._kv_lane_stream(active=active)
+            if sv is None:
+                return
+            mass, gids = sv                 # (L, S) post-chunk window
+            km = streams.get("kv_mass")
+            if self._kernel_mass and km is not None:
+                # per-step (C, G, n_attn, L, S) kernel mass: head-averaged,
+                # summed over the chunk's valid steps — the bulk analogue of
+                # the one-step stream advance_lanes feeds
+                per_step = jnp.mean(km, axis=(1, 2))          # (C, L, S)
+                agg = jnp.sum(per_step * jnp.asarray(valid.T)[:, :, None],
+                              axis=0)                         # (L, S)
+                mass = np.where(gids >= 0, np.asarray(agg, np.float32), 0.0)
+            self.daemon.observe("kv", jnp.asarray(mass.reshape(-1)),
+                                jnp.asarray(gids.reshape(-1), jnp.int32))
 
     def _observe_lanes(self, tokens: np.ndarray, streams: dict) -> None:
         """Feed the tiering streams with inactive lanes masked to -1 pads."""
@@ -488,7 +639,7 @@ class ServeEngine:
         tick the multiplexed daemon on its cadence."""
         if self.scfg.paged:
             out = self._decode_paged(self.params, self.cache, tok,
-                                     self._tier_reads())
+                                     self._tier_reads(), None)
         else:
             out = self._decode(self.params, self.cache, tok, self.aux,
                                self._tier_reads())
@@ -620,10 +771,9 @@ class ServeEngine:
         ids = np.where(changed, ids, -1)             # -1 lanes are dropped
         if not (ids >= 0).any():
             return
-        # (G, n_slots, T, hkv, dk+dv) -> slot-major rows for write_rows
-        pages = jnp.concatenate(
-            [entry["k_pages"][:, 0], entry["v_pages"][:, 0]], axis=-1)
-        h.write_rows(ids, jnp.moveaxis(pages, 1, 0))
+        # batch row 0 is the representative payload; the [K|V] concat +
+        # slot-major transpose + dual-tier scatter fuse in ONE donated op
+        h.write_pages(ids, entry["k_pages"][:, :1], entry["v_pages"][:, :1])
         for slot in np.flatnonzero(ids >= 0):
             self._kv_flushed[(0, slot)] = (int(ids[slot]), int(fill[slot]))
 
@@ -658,11 +808,9 @@ class ServeEngine:
                 ids[lane, slot] = -1
         if not (ids >= 0).any():
             return
-        # (G, L, S, T, hkv, dk+dv) -> (L*S, G, T, hkv, dk+dv) rows
-        pages = jnp.concatenate([entry["k_pages"], entry["v_pages"]], axis=-1)
-        rows = jnp.moveaxis(pages, 0, 2)             # (L, S, G, T, hkv, dk+dv)
-        rows = rows.reshape((-1,) + rows.shape[2:])  # (L*S, G, T, hkv, dk+dv)
-        h.write_rows(jnp.asarray(ids.reshape(-1), jnp.int32), rows)
+        # bulk page-write verb: the (G, L, S, T, hkv, d) ring views go down
+        # as ONE donated fused [K|V]-concat + transpose + dual-tier scatter
+        h.write_pages(ids.reshape(-1), entry["k_pages"], entry["v_pages"])
         for lane, slot in np.argwhere(ids >= 0):
             self._kv_flushed[(int(lane), int(slot))] = (
                 int(gids[lane, slot]), int(fill[lane, slot]))
@@ -672,10 +820,16 @@ class ServeEngine:
         is resident, slow-tier fallback otherwise (bit-exact either way)."""
         return self.daemon[name].read_rows(page_ids)
 
-    def _maybe_tick(self) -> None:
-        self.step_count += 1
-        if self.daemon.resources \
-                and self.step_count % self.scfg.migration_interval == 0:
+    def _maybe_tick(self, n: int = 1) -> None:
+        """Advance the engine step counter by ``n`` (1 for a decode step, the
+        chunk length for a prefill chunk) and run one daemon tick per
+        migration-interval boundary crossed, flushing the KV ring first."""
+        interval = self.scfg.migration_interval
+        ticks = (self.step_count + n) // interval - self.step_count // interval
+        self.step_count += n
+        if not self.daemon.resources:
+            return
+        for _ in range(ticks):
             if "kv" in self.daemon:
                 if self.lane_mode:
                     self._flush_kv_lanes()

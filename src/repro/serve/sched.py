@@ -63,6 +63,13 @@ class SchedConfig:
     preempt_patience: int = 16   # steps a lane-less tenant waits before
     #                              its queue head may preempt someone
     max_queue: int = 4096        # hard bound on queued requests
+    # Chunked prefill (DESIGN.md §11): a prefilling lane consumes up to
+    # `prefill_chunk` prompt tokens per scheduler step through ONE jitted
+    # scan (`ServeEngine.prefill_lane`) instead of one engine step per
+    # token; decode lanes keep stepping between chunks.  0 = legacy
+    # token-at-a-time streaming; prompts no longer than the chunk also
+    # fall back to the streaming loop (bit-exact either way).
+    prefill_chunk: int = 0
     # Sampling (models/decode.py::sample_tokens): temperature <= 0 is exact
     # argmax (the default — zero overhead); with temperature > 0 each
     # emitted token is drawn with a per-request PRNG key folded from
@@ -278,52 +285,87 @@ class Scheduler:
 
     # -- the serving loop -----------------------------------------------------
     def step(self) -> None:
-        """One scheduler iteration: admit, advance every lane one token,
-        sample/finish, meter per-tenant tier stats."""
+        """One scheduler iteration: admit, advance every lane (one decode
+        token, or one prefill CHUNK for long-prompt admissions), sample/
+        finish, meter per-tenant tier stats.
+
+        With ``SchedConfig.prefill_chunk > 0`` a prefilling request whose
+        prompt is longer than one chunk goes through the chunked path: its
+        lane consumes up to ``prefill_chunk`` prompt tokens via
+        ``ServeEngine.prefill_lane`` while the other lanes take their normal
+        decode step — no stop-the-world.  The first output token is emitted
+        (and its TTFT stamped) the step the LAST chunk lands, from the same
+        last-prompt-position logits the streaming path would produce."""
         self._admit()
+        chunk = self.scfg.prefill_chunk
         tokens = np.zeros(self.n_lanes, np.int32)
         active = np.zeros(self.n_lanes, bool)
         segments = np.full(self.n_lanes, -1, np.int32)
+        consumed = np.zeros(self.n_lanes, np.int32)
+        chunk_logits: dict[int, np.ndarray] = {}
         for lane, req in enumerate(self.lanes):
             if req is None:
                 continue
-            active[lane] = True
             segments[lane] = req.segment
+            if chunk > 0 and req.prefilling and req.n_prompt > chunk:
+                piece = req.prompt[req.pos:req.pos + chunk]
+                chunk_logits[lane] = self.eng.prefill_lane(
+                    lane, piece, req.segment, chunk=chunk)
+                consumed[lane] = piece.size
+                continue
+            active[lane] = True
+            consumed[lane] = 1
             tokens[lane] = (req.prompt[req.pos] if req.prefilling
                             else req.out[-1])
-        if active.any():
-            logits = self.eng.advance_lanes(tokens, active, segments)
-            now = time.perf_counter()
-            sampled = self._sample(logits)
-            for lane, req in enumerate(list(self.lanes)):
-                if req is None:
-                    continue
-                req.pos += 1
-                if not req.prefilling:       # last prompt token or decoding
-                    tok = (int(sampled[lane]) if sampled is not None
-                           else int(np.argmax(logits[lane])))
-                    req.out.append(tok)
-                    req.token_times.append(now)
-                    if len(req.out) >= req.max_new:
-                        self._finish(req)
-            self._meter_tenants()
+        if not (active.any() or chunk_logits):
+            self.step_count += 1
+            return
+        logits = (self.eng.advance_lanes(tokens, active, segments)
+                  if active.any() else None)
+        if logits is None:
+            logits = np.zeros(
+                (self.n_lanes, next(iter(chunk_logits.values())).shape[-1]),
+                np.float32)
+        else:
+            logits = np.asarray(logits).astype(np.float32)
+        for lane, row in chunk_logits.items():
+            logits[lane] = row
+        # meter BEFORE the finish sweep (each request's final step of
+        # resident-page reads must still be charged to its tenant)
+        self._meter_tenants()
+        now = time.perf_counter()
+        sampled = self._sample(logits, consumed)
+        for lane, req in enumerate(list(self.lanes)):
+            if req is None or consumed[lane] == 0:
+                continue
+            req.pos += int(consumed[lane])
+            if not req.prefilling:           # last prompt token or decoding
+                tok = (int(sampled[lane]) if sampled is not None
+                       else int(np.argmax(logits[lane])))
+                req.out.append(tok)
+                req.token_times.append(now)
+                if len(req.out) >= req.max_new:
+                    self._finish(req)
         self.step_count += 1
 
-    def _sample(self, logits: np.ndarray) -> np.ndarray | None:
+    def _sample(self, logits: np.ndarray,
+                consumed: np.ndarray) -> np.ndarray | None:
         """Batched lane sampling (None in greedy mode -> argmax fallback).
 
         One jitted :func:`models.decode.sample_tokens` call covers every
         lane that emits this step; each lane's key is its request's
         identity key folded with the emitted-token index, so the draw
-        stream is a pure function of (seed, rid, token index)."""
+        stream is a pure function of (seed, rid, token index) — chunked
+        and streamed prefill sample identically."""
         if self.scfg.temperature <= 0.0:
             return None
         keys = np.zeros((self.n_lanes, 2), np.uint32)
         idx = np.zeros(self.n_lanes, np.uint32)
         emitting = False
         for lane, req in enumerate(self.lanes):
-            if req is None or req.pos + 1 < req.n_prompt:
-                continue                      # still prefilling after +1
+            if req is None or consumed[lane] == 0 \
+                    or req.pos + consumed[lane] < req.n_prompt:
+                continue                      # still prefilling this step
             keys[lane] = req.key
             idx[lane] = len(req.out)
             emitting = True
@@ -344,10 +386,14 @@ class Scheduler:
     # -- telemetry ------------------------------------------------------------
     def _meter_tenants(self) -> None:
         """Account each lane's resident KV pages against its tenant: a page
-        the placement map holds fast is a per-tenant fast read."""
+        the placement map holds fast is a per-tenant fast read.  Runs BEFORE
+        the finish sweep over the explicit occupancy mask, so a finishing
+        request's final step — and a chunk-prefilling lane the engine's own
+        active mask no longer carries — is still charged."""
         if "kv" not in self.eng.daemon:
             return
-        sv = self.eng._kv_lane_stream()
+        occupied = np.array([r is not None for r in self.lanes], bool)
+        sv = self.eng._kv_lane_stream(active=occupied)
         if sv is None:
             return
         _, gids = sv
@@ -364,19 +410,30 @@ class Scheduler:
             st.slow_reads += int(np.sum(valid[lane])) - f
 
     @staticmethod
-    def _latency_row(reqs: list[Request]) -> dict:
-        """p50/p99/mean per-token latency (ms): gaps between a request's
-        consecutive emitted tokens, plus arrival -> first token."""
-        gaps = []
-        for r in reqs:
-            stamps = [r.arrival_time] + r.token_times
-            gaps.extend(np.diff(stamps))
-        if not gaps:
+    def _pct_row(gaps) -> dict:
+        if not len(gaps):
             return {"p50": 0.0, "p99": 0.0, "mean": 0.0, "n": 0}
         g = np.asarray(gaps) * 1e3
         return {"p50": float(np.percentile(g, 50)),
                 "p99": float(np.percentile(g, 99)),
                 "mean": float(np.mean(g)), "n": int(g.size)}
+
+    @classmethod
+    def _latency_rows(cls, reqs: list[Request]) -> dict:
+        """Split latency schema: ``ttft_ms`` (arrival -> first emitted token)
+        and ``tpot_ms`` (gaps between a request's consecutive output tokens)
+        are DIFFERENT distributions — folding them together makes the
+        "per-token p99" just TTFT in disguise.  ``latency_ms`` keeps the old
+        combined row, deprecated for one release (benchmarks/README.md)."""
+        ttft, tpot, combined = [], [], []
+        for r in reqs:
+            if r.token_times:
+                ttft.append(r.token_times[0] - r.arrival_time)
+                tpot.extend(np.diff(r.token_times))
+            combined.extend(np.diff([r.arrival_time] + r.token_times))
+        return {"ttft_ms": cls._pct_row(ttft),
+                "tpot_ms": cls._pct_row(tpot),
+                "latency_ms": cls._pct_row(combined)}
 
     def report(self) -> dict:
         """The traffic-bench schema row for this run (BENCH_serve.json)."""
@@ -391,7 +448,7 @@ class Scheduler:
                 "completed": len(reqs),
                 "tokens": sum(len(r.out) for r in reqs),
                 "kv_hit_rate": st.fast_reads / max(total, 1),
-                "latency_ms": self._latency_row(reqs),
+                **self._latency_rows(reqs),
             }
         return {
             "steps": self.step_count,
@@ -400,7 +457,7 @@ class Scheduler:
             "tokens": sum(len(r.out) for r in done),
             "preemptions": self.preemptions,
             "queued_peak": self.queued_peak,
-            "latency_ms": self._latency_row(done),
+            **self._latency_rows(done),
             "tenants": tenants,
             "resources": self.eng.tier_stats(),
         }

@@ -143,6 +143,11 @@ class ResourceHandle:
         n = self.mem.write_rows(self.state, page_ids, rows)
         self.stats.flush_bytes += n * self.mem.row_bytes
 
+    def write_pages(self, page_ids, k_pages, v_pages) -> None:
+        """Bulk KV ring-page flush (one donated fused op); bytes metered."""
+        n = self.mem.write_pages(self.state, page_ids, k_pages, v_pages)
+        self.stats.flush_bytes += n * self.mem.row_bytes
+
     def hit_rate(self) -> float:
         return self.mem.hit_rate(self.state, self.stats)
 

@@ -277,6 +277,21 @@ class TieredMemory:
                                               rows)
         return int(np.sum(np.asarray(page_ids) >= 0))
 
+    def write_pages(self, state: TieredMemoryState, page_ids, k_pages,
+                    v_pages) -> int:
+        """Bulk KV ring-page flush (:func:`migrate.write_pages`): the [K|V]
+        concat, slot-major transpose and dual-tier scatter fuse in one
+        donated jit — the chunked-prefill data-plane verb.  ``k_pages`` /
+        ``v_pages`` are (G, L, S, T, hkv, d) ring views; ``page_ids`` the
+        (L*S,) slot map (-1 = dropped).  Returns the pages written."""
+        if self.buffers is None:
+            raise ValueError("no payload bound — call bind_data() first")
+        page_ids = jnp.asarray(page_ids, jnp.int32)
+        slots, _ = lookup(state, page_ids)
+        self.buffers = migrate_lib.write_pages(self.buffers, page_ids, slots,
+                                               k_pages, v_pages)
+        return int(np.sum(np.asarray(page_ids) >= 0))
+
     # -- state ---------------------------------------------------------------
     def init(self, key: jax.Array | None = None) -> TieredMemoryState:
         prof = neoprof_init(self.pp, key)

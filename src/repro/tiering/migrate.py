@@ -175,3 +175,35 @@ def write_rows(buffers: TierBuffers, page_ids: jax.Array, slots: jax.Array,
         buffers.fast, buffers.slow, jnp.asarray(page_ids, jnp.int32),
         jnp.asarray(slots, jnp.int32), rows)
     return TierBuffers(fast=fast, slow=slow)
+
+
+def _write_pages_impl(fast, slow, page_ids, slots, k_pages, v_pages):
+    # ring layout (G, L, S, T, hkv, d) -> page-row layout (L*S, G, T, hkv, d)
+    rows = jnp.concatenate([k_pages, v_pages], axis=-1)
+    rows = jnp.moveaxis(rows, 0, 2)
+    rows = rows.reshape((-1,) + rows.shape[2:])
+    return _write_rows_impl(fast, slow, page_ids, slots, rows)
+
+
+@functools.lru_cache(maxsize=None)
+def _write_pages_jit():
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(_write_pages_impl, donate_argnums=donate)
+
+
+def write_pages(buffers: TierBuffers, page_ids: jax.Array, slots: jax.Array,
+                k_pages: jax.Array, v_pages: jax.Array) -> TierBuffers:
+    """Bulk KV-page write: flush paged-ring slots into the tier store as ONE
+    donated fused op (the chunked-prefill / lane-flush data-plane verb).
+
+    ``k_pages`` / ``v_pages`` are ring views shaped (G, L, S, T, hkv, dk|dv)
+    — layer groups x lanes x ring slots; ``page_ids`` is the (L*S,) slot ->
+    logical-page map (-1 = unchanged/dropped slot) and ``slots`` its
+    placement lookup.  The [K | V] concat, slot-major transpose and
+    dual-tier scatter all fuse inside one jit, so a chunk flush costs one
+    dispatch instead of the host-side reshape pipeline + scatter.
+    """
+    fast, slow = _write_pages_jit()(
+        buffers.fast, buffers.slow, jnp.asarray(page_ids, jnp.int32),
+        jnp.asarray(slots, jnp.int32), k_pages, v_pages)
+    return TierBuffers(fast=fast, slow=slow)

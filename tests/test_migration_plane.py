@@ -180,6 +180,35 @@ def test_write_rows_refreshes_both_tiers_and_meters():
         np.full(3, 9.0))
 
 
+def test_write_pages_matches_write_rows():
+    """The fused bulk page-write verb (the chunked-prefill flush,
+    DESIGN.md §11) lands byte-identical rows to the per-page write_rows
+    path it batches: same [K|V] concat, -1 ids dropped, same metering."""
+    G, L, S, T, H, D = 2, 2, 3, 4, 1, 3
+    kw = dict(name="kv-pages", n_pages=16, row_shape=(G, T, H, 2 * D))
+    rng = np.random.default_rng(0)
+    k = jnp.asarray(rng.normal(size=(G, L, S, T, H, D)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(G, L, S, T, H, D)), jnp.float32)
+    ids = np.array([3, -1, 7, 0, 12, -1], np.int32)      # (L*S,) slot map
+
+    a = tm.NeoMemDaemon().register(tm.make_resource("embeddings", _spec(**kw)))
+    a.bind_data(jnp.zeros((16, G, T, H, 2 * D), jnp.float32))
+    a.write_pages(ids, k, v)
+
+    b = tm.NeoMemDaemon().register(tm.make_resource("embeddings", _spec(**kw)))
+    b.bind_data(jnp.zeros((16, G, T, H, 2 * D), jnp.float32))
+    rows = np.moveaxis(np.asarray(jnp.concatenate([k, v], axis=-1)), 0, 2)
+    b.write_rows(ids, jnp.asarray(rows.reshape((L * S,) + rows.shape[2:])))
+
+    np.testing.assert_array_equal(np.asarray(a.mem.buffers.slow),
+                                  np.asarray(b.mem.buffers.slow))
+    assert a.stats.flush_bytes == b.stats.flush_bytes > 0
+    # page 7 sits at (lane 0, slot 2): it round-trips bit-exactly
+    got = np.asarray(a.read_rows(np.array([7])))[0]
+    np.testing.assert_array_equal(
+        got, np.asarray(jnp.concatenate([k, v], axis=-1))[:, 0, 2])
+
+
 # ---------------------------------------------------------------------------
 # legacy shims: forwarding + deprecation
 # ---------------------------------------------------------------------------
@@ -230,8 +259,9 @@ def _bench_doc(tmp_path, mutate=None):
            "migration_bytes": 1024, "last_epoch_bytes": 256,
            "quota_bytes": 512, "migration_epochs": 4, "flush_bytes": 0}
     case = {"arch": "a", "batch": 2, "prompt_len": 8, "n_tokens": 4,
-            "tokens_per_s": 1.0, "wall_s": 8.0, "migration_bytes": 1024,
-            "migration_bytes_per_s": 128.0, "resources": {"embeddings": row}}
+            "compile_s": 0.5, "tokens_per_s": 1.0, "wall_s": 8.0,
+            "migration_bytes": 1024, "migration_bytes_per_s": 128.0,
+            "resources": {"embeddings": row}}
 
     def ab_arm(source, steady):
         return {"kv_mass_source": source, "steps": 100, "tokens": 50,
@@ -240,7 +270,18 @@ def _bench_doc(tmp_path, mutate=None):
     mass_ab = {"arch": "a", "trace": "zipf-hot", "arrival": "mmpp",
                "lanes": 4, "seed": 0, "trace_steps": 100,
                "fill": ab_arm("fill", 0.4), "kernel": ab_arm("kernel", 0.45)}
-    doc = {"quick": True, "cases": [case], "mass_ab": mass_ab}
+
+    def pf_arm(chunk, ttft):
+        return {"chunk": chunk, "compile_s": 2.0, "steps": 600,
+                "ttft_ms": ttft,
+                "tpot_ms": {"p50": 5.0, "p99": 6.0, "mean": 5.2, "n": 3},
+                "tokens": [1, 2, 3, 4]}
+    prefill = {"arch": "a", "prompt_len": 512, "max_new": 4, "page_t": 16,
+               "chunk": 64, "lanes": 2, "seed": 0, "tokens_match": True,
+               "ttft_ratio": 0.05, "token": pf_arm(0, 4000.0),
+               "chunked": pf_arm(64, 200.0)}
+    doc = {"quick": True, "cases": [case], "mass_ab": mass_ab,
+           "prefill": prefill}
     if mutate:
         mutate(doc)
     p = tmp_path / "BENCH_serve.json"
@@ -284,6 +325,26 @@ def test_validate_bench_rejects_violations(tmp_path):
         doc["mass_ab"]["kernel"]["tokens"] = 49
     assert any("identical trace" in e
                for e in validate(_bench_doc(tmp_path, uneven_load)))
+
+    def slow_chunked(doc):
+        doc["prefill"]["chunked"]["ttft_ms"] = 3000.0
+    assert any("1/4" in e for e in validate(_bench_doc(tmp_path,
+                                                       slow_chunked)))
+
+    def tokens_diverge(doc):
+        doc["prefill"]["chunked"]["tokens"] = [9, 9, 9, 9]
+    assert any("bit-exactness" in e
+               for e in validate(_bench_doc(tmp_path, tokens_diverge)))
+
+    def tpot_hidden(doc):
+        doc["prefill"]["token"]["tpot_ms"]["p50"] = 0.0
+    assert any("tpot_ms p50" in e
+               for e in validate(_bench_doc(tmp_path, tpot_hidden)))
+
+    def short_prompt(doc):
+        doc["prefill"]["prompt_len"] = 64
+    assert any("512" in e for e in validate(_bench_doc(tmp_path,
+                                                       short_prompt)))
 
 
 # ---------------------------------------------------------------------------

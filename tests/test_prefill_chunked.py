@@ -1,0 +1,230 @@
+"""Chunked prefill (DESIGN.md §11): bit-exactness vs token-at-a-time
+streaming (logits AND slow-segment bytes), decode-lane isolation while
+another lane chunk-prefills, the TTFT/TPOT latency split, and the
+single-pass dense prefill regression."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models import transformer as tr
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.sched import Request, SchedConfig, Scheduler, Tenant
+
+ARCH = "llama3.2-3b"
+PAGE_T = 4
+LANE_KW = dict(max_seq=48, paged=True, page_t=PAGE_T, hot_slots=8,
+               migration_interval=4, resources=("embeddings",),
+               embed_hot_slots=4, embed_rows_per_page=8, lanes=2,
+               kv_segments=2)
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config(ARCH)
+    return cfg, tr.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _engine(cfg_params, **kw):
+    cfg, params = cfg_params
+    return ServeEngine(cfg, params, ServeConfig(**{**LANE_KW, **kw}))
+
+
+def _prompt(seed, n):
+    vocab = get_smoke_config(ARCH).vocab
+    return (np.random.default_rng(seed).integers(0, vocab, n)
+            .astype(np.int32))
+
+
+def _stream_lane(eng, lane, tokens, segment):
+    """Token-at-a-time reference: one advance_lanes call per prompt token,
+    only ``lane`` active — the legacy prefill loop."""
+    eng.start_lanes()
+    active = np.zeros(eng.scfg.lanes, bool)
+    active[lane] = True
+    segs = np.full(eng.scfg.lanes, -1, np.int32)
+    segs[lane] = segment
+    toks = np.zeros(eng.scfg.lanes, np.int32)
+    logits = None
+    for t in tokens:
+        toks[lane] = t
+        logits = eng.advance_lanes(toks, active, segs)
+    return logits[lane].astype(np.float32)
+
+
+def _segment_bytes(eng, lane, segment):
+    """The lane's slow-store segment contents after a full forced flush."""
+    eng._flush_kv_lanes(lanes=[lane], force=True)
+    buf = eng.daemon["kv"].mem.buffers
+    pps = eng.pages_per_seq
+    return np.asarray(buf.slow[segment * pps:(segment + 1) * pps]
+                      .astype(jnp.float32))
+
+
+# -- bit-exactness: chunked vs token-at-a-time --------------------------------
+
+@pytest.mark.parametrize("chunk", [1, PAGE_T, 4 * PAGE_T, 7])
+def test_prefill_lane_bit_exact_vs_streaming(cfg_params, chunk):
+    """prefill_lane(chunk) reproduces the streaming loop bit-for-bit: the
+    last prompt position's logits AND the slow-segment page bytes, for
+    chunk in {1, page_t, 4*page_t, a ragged tail}."""
+    prompt = _prompt(3, 18)      # 18 tokens: ragged against chunk=7 and 16
+    ref = _engine(cfg_params)
+    ref_logits = _stream_lane(ref, 0, prompt, segment=1)
+    ref_bytes = _segment_bytes(ref, 0, segment=1)
+
+    eng = _engine(cfg_params)
+    eng.start_lanes()
+    logits = eng.prefill_lane(0, prompt, segment=1, chunk=chunk)
+    np.testing.assert_array_equal(logits.astype(np.float32), ref_logits)
+    np.testing.assert_array_equal(_segment_bytes(eng, 0, segment=1),
+                                  ref_bytes)
+    # per-lane position advanced by the full prompt, other lane frozen
+    np.testing.assert_array_equal(np.asarray(eng.cache["pos"]),
+                                  [len(prompt), 0])
+
+
+def test_chunked_prefill_does_not_perturb_decode_lane(cfg_params):
+    """Interleaving another lane's chunk writes between decode steps leaves
+    the decoding lane's output stream untouched (no stop-the-world, no
+    cross-lane contamination)."""
+    prompt_a = _prompt(5, 6)
+    long_b = _prompt(6, 20)
+
+    def run(interleave):
+        eng = _engine(cfg_params)
+        eng.start_lanes()
+        # lane 0: stream its prompt, then decode greedily
+        active = np.array([True, False])
+        segs = np.array([0, -1], np.int32)
+        toks = np.zeros(2, np.int32)
+        logits = None
+        for t in prompt_a:
+            toks[0] = t
+            logits = eng.advance_lanes(toks, active, segs)
+        out = []
+        for i in range(6):
+            if interleave and i == 2:       # chunk-prefill lane 1 mid-decode
+                eng.prefill_lane(1, long_b, segment=1, chunk=8)
+            toks[0] = int(np.argmax(logits[0]))
+            out.append(toks[0])
+            logits = eng.advance_lanes(toks, active, segs)
+        return out
+
+    assert run(interleave=True) == run(interleave=False)
+
+
+def test_scheduler_chunked_matches_streaming(cfg_params):
+    """End-to-end through the Scheduler: chunked admission emits the same
+    tokens as token-at-a-time, in fewer engine steps, and stamps TTFT when
+    the last chunk lands."""
+    def run(chunk):
+        eng = _engine(cfg_params)
+        sched = Scheduler(eng, [Tenant("a"), Tenant("b")],
+                          SchedConfig(prefill_chunk=chunk))
+        ra = sched.submit("a", _prompt(7, 20), max_new=6)
+        rb = sched.submit("b", _prompt(8, 5), max_new=8)
+        sched.run(max_steps=200)
+        return ra, rb, sched
+
+    ra_s, rb_s, sched_s = run(chunk=0)
+    ra_c, rb_c, sched_c = run(chunk=8)
+    assert ra_c.out == ra_s.out
+    assert rb_c.out == rb_s.out             # short prompt: streaming fallback
+    assert sched_c.step_count < sched_s.step_count
+    assert len(ra_c.token_times) == 6 and ra_c.token_times[0] > 0
+    # the long prompt consumed 20 tokens in ceil(20/8)=3 scheduler steps
+    assert ra_c.out and ra_s.out
+
+
+def test_prefill_lane_validation(cfg_params):
+    eng = _engine(cfg_params)
+    eng.start_lanes()
+    with pytest.raises(ValueError):
+        eng.prefill_lane(0, np.zeros(0, np.int32), segment=0)
+    cfg, params = cfg_params
+    dense = ServeEngine(cfg, params, ServeConfig(max_seq=32))
+    with pytest.raises(ValueError):
+        dense.prefill_lane(0, _prompt(0, 4), segment=0)
+
+
+# -- TTFT / TPOT split --------------------------------------------------------
+
+def test_latency_split_synthetic_timestamps():
+    """ttft_ms is arrival->first-token, tpot_ms is inter-token gaps — with
+    synthetic stamps the two distributions are recovered exactly, and the
+    deprecated combined row still mixes them (old schema, one release)."""
+    r1 = Request(rid=0, tenant="a", prompt=np.zeros(4, np.int32), max_new=3,
+                 arrival_time=10.0, token_times=[10.5, 10.52, 10.54])
+    r2 = Request(rid=1, tenant="a", prompt=np.zeros(4, np.int32), max_new=2,
+                 arrival_time=20.0, token_times=[20.1, 20.14])
+    rows = Scheduler._latency_rows([r1, r2])
+    np.testing.assert_allclose(rows["ttft_ms"]["p50"], 300.0, atol=1e-6)
+    np.testing.assert_allclose(rows["ttft_ms"]["mean"], 300.0, atol=1e-6)
+    assert rows["ttft_ms"]["n"] == 2
+    np.testing.assert_allclose(rows["tpot_ms"]["mean"],
+                               (20 + 20 + 40) / 3, atol=1e-6)
+    assert rows["tpot_ms"]["n"] == 3
+    # deprecated combined row: 5 gaps, TTFT outliers drag its p99 up
+    assert rows["latency_ms"]["n"] == 5
+    assert rows["latency_ms"]["p99"] > rows["tpot_ms"]["p99"]
+    empty = Scheduler._latency_rows([])
+    assert empty["ttft_ms"]["n"] == empty["tpot_ms"]["n"] == 0
+
+
+def test_report_carries_split_and_deprecated_rows(cfg_params):
+    eng = _engine(cfg_params)
+    sched = Scheduler(eng, [Tenant("a")], SchedConfig(prefill_chunk=8))
+    sched.submit("a", _prompt(9, 12), max_new=4)
+    sched.run(max_steps=100)
+    rep = sched.report()
+    for row in [rep, rep["tenants"]["a"]]:
+        assert row["ttft_ms"]["n"] == 1
+        assert row["tpot_ms"]["n"] == 3
+        assert row["latency_ms"]["n"] == 4          # deprecated, still there
+        assert row["tpot_ms"]["p99"] > 0
+
+
+# -- dense prefill: single pass ----------------------------------------------
+
+def test_dense_prefill_runs_prompt_exactly_once(cfg_params):
+    """The dense path must NOT re-run the prompt through per-token decode
+    steps after the prefill scan (the old double-run), and must feed each
+    observation stream exactly one batch for the whole prompt."""
+    cfg, params = cfg_params
+    eng = ServeEngine(cfg, params, ServeConfig(
+        max_seq=32, resources=("embeddings",), embed_hot_slots=4,
+        embed_rows_per_page=8))
+    step_calls = []
+    orig = eng._decode
+    eng._decode = lambda *a: (step_calls.append(1), orig(*a))[1]
+    observed = []
+    h = eng.daemon["embeddings"]
+    orig_obs = h.observe
+    h.observe = lambda *a, **k: (observed.append(a), orig_obs(*a, **k))[1]
+
+    prompt = (np.arange(2 * 10).reshape(2, 10) * 3 % cfg.vocab).astype(np.int32)
+    first = eng.prefill(prompt)
+    assert not step_calls                   # no per-token decode replay
+    assert len(observed) == 1               # one masked observation batch
+    assert int(np.asarray(eng.cache["pos"])) == 10
+    assert eng.step_count == 10             # daemon cadence still advanced
+    # the cache is genuinely filled: decode continues coherently
+    nxt = eng.step(first)
+    assert nxt.shape == (2,)
+    assert len(step_calls) == 1
+
+
+def test_dense_prefill_matches_paged(cfg_params):
+    """Single-pass dense prefill + decode still reproduces the paged engine
+    (the long-standing parity gate, now with no prompt double-run)."""
+    cfg, params = cfg_params
+    prompt = (np.arange(2 * 12).reshape(2, 12) * 7 % cfg.vocab).astype(np.int32)
+    dense = ServeEngine(cfg, params, ServeConfig(max_seq=64))
+    paged = ServeEngine(cfg, params, ServeConfig(
+        max_seq=64, paged=True, page_t=4, hot_slots=16, migration_interval=4))
+    np.testing.assert_array_equal(dense.generate(prompt, n_tokens=8),
+                                  paged.generate(prompt, n_tokens=8))
