@@ -1,6 +1,7 @@
 PYTEST ?= python -m pytest
 
-.PHONY: test test-fast test-dist dryrun bench-serve bench-traffic validate-bench
+.PHONY: test test-fast test-dist dryrun bench-serve bench-traffic \
+	bench-reuse validate-bench
 
 # full tier-1 suite (includes slow 8-host-device subprocess parity tests)
 test:
@@ -29,6 +30,13 @@ bench-serve:
 # the "traffic" section to BENCH_serve.json
 bench-traffic:
 	PYTHONPATH=src:. python benchmarks/run.py --quick --only traffic_bench
+
+# cross-request KV reuse A/B (DESIGN.md §12): the agentic multi-turn trace
+# served with the content-addressed page store off / prefix / substring —
+# writes the "kv_reuse" section of BENCH_serve.json (bit-exactness,
+# prefill-tokens-saved, and substring-vs-prefix hit-rate gates)
+bench-reuse:
+	PYTHONPATH=src:. python benchmarks/traffic_bench.py --quick --reuse
 
 # check BENCH_serve.json against the schema documented in benchmarks/README.md
 validate-bench:

@@ -24,8 +24,9 @@ the fill-vs-kernel fidelity A/B itself lives in serve_bench.py
 
 Latency is reported SPLIT (DESIGN.md §11): ``ttft_ms`` (arrival -> first
 token) and ``tpot_ms`` (inter-token decode gaps) are different
-distributions; the deprecated combined ``latency_ms`` row survives one
-release.  Every trace gets an untimed per-case warmup that traces+compiles
+distributions (the old combined ``latency_ms`` row served its one-release
+deprecation window and is gone).  Every trace gets an untimed per-case
+warmup that traces+compiles
 the engine's jitted bodies first, recorded as ``compile_s``, so wall_s /
 tokens_per_s / migration_bytes_per_s are steady-state numbers, not XLA.
 
@@ -36,7 +37,16 @@ token-at-a-time streaming (prefill_chunk=0) vs the chunked scan
 first.  CI gates chunked TTFT <= 1/4 of streaming with bit-exact output
 tokens (validate_bench.py): the prompt-length tail latency fix, measured.
 
-    PYTHONPATH=src:. python benchmarks/traffic_bench.py [--quick]
+The ``kv_reuse`` section (DESIGN.md §12) replays the SAME agentic
+multi-turn trace through three arms — reuse off, prefix matching, and
+substring matching over the content-addressed KV page store
+(``ServeConfig.reuse_pages``) — greedy, same seed.  CI gates: bit-exact
+outputs across all three arms (reuse must never change tokens), substring
+prefill-tokens-saved > 0, substring page-hit rate > prefix (hole-skipping
+over evicted / unflushed front-of-history pages is the point), and the
+substring arm's steady-state KV hit rate no worse than reuse-off.
+
+    PYTHONPATH=src:. python benchmarks/traffic_bench.py [--quick] [--reuse]
 """
 from __future__ import annotations
 
@@ -52,11 +62,18 @@ from repro.configs.registry import get_smoke_config
 from repro.models import transformer as tr
 from repro.serve.engine import ServeConfig, ServeEngine
 from repro.serve.sched import SchedConfig, Scheduler, Tenant
-from repro.workloads import DEFAULT_TENANTS, TRACE_KINDS, make_trace, play
+from repro.workloads import (DEFAULT_TENANTS, TenantProfile, make_trace,
+                             play)
 
 from benchmarks.common import emit, steady_start, update_bench_json
 
 OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+
+# The traffic section runs the three CONTENT kinds (identical arrival load,
+# only token content differs — the adaptivity-gap premise); the agentic
+# kind has its own session-structured arrivals and is the kv_reuse A/B's
+# workload below.
+CONTENT_KINDS = ("zipf-hot", "diurnal-shift", "scan-antagonist")
 
 ARCH = "llama3.2-3b"
 LANES = 4
@@ -164,7 +181,6 @@ def _bench_trace(kind: str, params, n_steps: int, seed: int) -> dict:
         "tokens_per_s": rep["tokens"] / wall,
         "ttft_ms": rep["ttft_ms"],
         "tpot_ms": rep["tpot_ms"],
-        "latency_ms": rep["latency_ms"],     # deprecated combined row
         "hit_rate": fast / max(reads, 1),
         "hit_rate_steady": steady,
         "resource_hit_steady": steady_per,
@@ -238,11 +254,129 @@ def _bench_prefill(params) -> dict:
     }
 
 
-def run(quick: bool = False):
+# The kv_reuse A/B (DESIGN.md §12): agentic multi-turn sessions over the
+# content-addressed page store.  Tenant prompt_len bounds the per-TURN user
+# block; the pool is sized BELOW the trace's distinct-page footprint so LRU
+# eviction punches front-of-history holes that only substring matching can
+# skip past.  prefill_chunk is on so gap scans interleave with installs.
+REUSE_TENANTS = (
+    TenantProfile("agent-a", weight=1.0, prompt_len=(3, 6), out_len=(3, 5)),
+    TenantProfile("agent-b", weight=1.0, prompt_len=(3, 6), out_len=(3, 5)),
+)
+REUSE_TRACE_KW = dict(turn_gap=16, sys_len=12, n_convs=2, work_len=4,
+                      max_total=56)
+# Pool sized BELOW the trace's live footprint (~4 conversations x ~13 pages)
+# so LRU eviction reaches live front-of-history pages: the shared system
+# pages stay hot (re-touched by the sibling conversation), early history
+# evicts, and only substring matching recovers the surviving tail.
+REUSE_PAGES = 32
+REUSE_CHUNK = 8
+REUSE_STEPS = 224          # enough steps for deep (7-8 turn) conversations
+
+
+def _reuse_arm(params, trace, mode: str, reuse_pages: int) -> dict:
+    """One arm of the reuse A/B: a fresh engine + scheduler replaying the
+    identical agentic trace, greedy.  ``reuse_pages=0`` disables the store
+    (the baseline arm); otherwise ``mode`` selects prefix vs substring
+    admission matching (SchedConfig.reuse_match)."""
+    cfg = get_smoke_config(ARCH)
+    eng = ServeEngine(cfg, params, ServeConfig(**SERVE_KW,
+                                               reuse_pages=reuse_pages))
+    compile_s = _warm_engine(eng, chunk=REUSE_CHUNK)
+    tenants = [Tenant(t.name, t.weight) for t in trace.tenants]
+    sched = Scheduler(eng, tenants,
+                      SchedConfig(preempt_patience=24, seed=0,
+                                  prefill_chunk=REUSE_CHUNK,
+                                  reuse_match=mode))
+    mid_counts: list[dict] = []
+
+    def snap_mid(s):
+        if not mid_counts and s.step_count >= steady_start(trace.n_steps):
+            mid_counts.append(_read_counts(eng))
+
+    t0 = time.perf_counter()
+    play(trace, sched, on_step=snap_mid)
+    wall = time.perf_counter() - t0
+    rep = sched.report()
+    assert rep["completed"] == rep["submitted"], "requests left undrained"
+    _, steady_per = _window_rate(mid_counts[0], _read_counts(eng))
+    return {
+        "mode": "off" if reuse_pages == 0 else mode,
+        "reuse_pages": reuse_pages,
+        "steps": rep["steps"],
+        "completed": rep["completed"],
+        "tokens": rep["tokens"],
+        "compile_s": compile_s,
+        "wall_s": wall,
+        "kv_hit_steady": steady_per["kv"],
+        "ttft_ms": rep["ttft_ms"],
+        "reuse": eng.reuse_stats() if eng.reuse is not None else None,
+        "outputs": {int(r.rid): [int(t) for t in r.out]
+                    for r in sched.finished},
+    }
+
+
+def _bench_reuse(params, n_steps: int, seed: int) -> dict:
+    """Cross-request KV reuse A/B (DESIGN.md §12): the identical agentic
+    trace served with reuse off, prefix matching, and substring matching.
+    Gates (asserted here AND in validate_bench.py): outputs bit-exact
+    across arms, substring saves prefill tokens, substring page-hit rate
+    beats prefix (hole-skipping), substring steady KV hit >= off."""
+    cfg = get_smoke_config(ARCH)
+    trace = make_trace("agentic", n_steps=max(n_steps, REUSE_STEPS),
+                       vocab=cfg.vocab, tenants=REUSE_TENANTS, seed=seed,
+                       **REUSE_TRACE_KW)
+    off = _reuse_arm(params, trace, "substring", reuse_pages=0)
+    prefix = _reuse_arm(params, trace, "prefix", REUSE_PAGES)
+    substr = _reuse_arm(params, trace, "substring", REUSE_PAGES)
+    match = off["outputs"] == prefix["outputs"] == substr["outputs"]
+    assert match, "KV reuse changed output tokens — bit-exactness gate lost"
+    saved = substr["reuse"]["tokens_saved"]
+    assert saved > 0, "substring reuse saved no prefill tokens"
+    hp, hs = prefix["reuse"]["hit_rate"], substr["reuse"]["hit_rate"]
+    assert hs > hp, (
+        f"substring page-hit rate {hs:.3f} must beat prefix {hp:.3f} — "
+        "hole-skipping found nothing beyond the shared prefix")
+    assert substr["kv_hit_steady"] >= off["kv_hit_steady"], (
+        f"reuse degraded the steady KV hit rate: {substr['kv_hit_steady']:.3f}"
+        f" < {off['kv_hit_steady']:.3f}")
+    for arm in (off, prefix, substr):
+        del arm["outputs"]                 # compared above; too bulky to keep
+    return {
+        "arch": ARCH,
+        "trace": "agentic",
+        "seed": seed,
+        "trace_steps": trace.n_steps,
+        "turns": len(trace.arrivals),
+        "lanes": LANES,
+        "page_t": SERVE_KW["page_t"],
+        "reuse_pages": REUSE_PAGES,
+        "prefill_chunk": REUSE_CHUNK,
+        "tenants": {t.name: t.weight for t in REUSE_TENANTS},
+        "tokens_match": bool(match),
+        "prefill_tokens_saved": saved,
+        "hit_rate_gap": hs - hp,
+        "off": off,
+        "prefix": prefix,
+        "substring": substr,
+    }
+
+
+def run(quick: bool = False, reuse_only: bool = False):
     n_steps = 120 if quick else 320
     params = tr.init_params(get_smoke_config(ARCH), jax.random.PRNGKey(0))
+    if reuse_only:
+        kr = _bench_reuse(params, n_steps, seed=0)
+        emit("traffic_kv_reuse", 0.0,
+             f"saved={kr['prefill_tokens_saved']} "
+             f"hit sub={kr['substring']['reuse']['hit_rate']:.3f} "
+             f"pre={kr['prefix']['reuse']['hit_rate']:.3f} "
+             f"match={kr['tokens_match']}")
+        update_bench_json(OUT_PATH, kv_reuse=kr)
+        emit("traffic_bench_json", 0.0, os.path.normpath(OUT_PATH))
+        return kr
     rows = [_bench_trace(kind, params, n_steps, seed=0)
-            for kind in TRACE_KINDS]
+            for kind in CONTENT_KINDS]
     by_kind = {r["trace"]: r for r in rows}
     gap = (by_kind["zipf-hot"]["hit_rate_steady"]
            - by_kind["scan-antagonist"]["hit_rate_steady"])
@@ -266,6 +400,12 @@ def run(quick: bool = False):
          f"ttft chunked={pf['chunked']['ttft_ms']:.1f}ms "
          f"token={pf['token']['ttft_ms']:.1f}ms "
          f"ratio={pf['ttft_ratio']:.3f} match={pf['tokens_match']}")
+    kr = _bench_reuse(params, n_steps, seed=0)
+    emit("traffic_kv_reuse", 0.0,
+         f"saved={kr['prefill_tokens_saved']} "
+         f"hit sub={kr['substring']['reuse']['hit_rate']:.3f} "
+         f"pre={kr['prefix']['reuse']['hit_rate']:.3f} "
+         f"match={kr['tokens_match']}")
     update_bench_json(OUT_PATH, traffic={
         "quick": quick,
         "arch": ARCH,
@@ -273,7 +413,7 @@ def run(quick: bool = False):
         "arrival": ARRIVAL,
         "tenants": {t.name: t.weight for t in DEFAULT_TENANTS},
         "traces": rows,
-    }, prefill=pf)
+    }, prefill=pf, kv_reuse=kr)
     emit("traffic_bench_json", 0.0, os.path.normpath(OUT_PATH))
     return rows
 
@@ -281,4 +421,7 @@ def run(quick: bool = False):
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
-    run(quick=ap.parse_args().quick)
+    ap.add_argument("--reuse", action="store_true",
+                    help="run only the kv_reuse A/B section")
+    args = ap.parse_args()
+    run(quick=args.quick, reuse_only=args.reuse)

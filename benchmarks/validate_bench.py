@@ -22,9 +22,19 @@ bench-traffic`` runs the gate in CI) carries the chunked-prefill TTFT A/B
 the chunked scan on the same seed.  The gate asserts chunked TTFT <= 1/4
 of streaming with bit-exact output tokens and a nonzero TPOT row — the
 prompt-length tail-latency fix must not regress, and the split ttft_ms /
-tpot_ms schema (latency_ms stays one release, deprecated) must be present
-on every trace and tenant row.  Run after ``make bench-serve`` /
-``make bench-traffic``:
+tpot_ms schema must be present on every trace and tenant row.  (The
+combined ``latency_ms`` row finished its one-release deprecation window:
+its PRESENCE is now an error.)
+
+The ``kv_reuse`` section (written by traffic_bench, DESIGN.md §12) carries
+the cross-request KV reuse A/B: the identical agentic multi-turn trace
+served with the content-addressed page store off, with prefix matching,
+and with substring matching.  Gates: output tokens bit-exact across all
+three arms, substring prefill-tokens-saved > 0, substring page-hit rate
+strictly above prefix (hole-skipping must recover evicted-front history),
+and the substring arm's steady-state KV hit rate no worse than reuse-off.
+Run after ``make bench-serve`` / ``make bench-traffic`` /
+``make bench-reuse``:
 
     PYTHONPATH=src:. python benchmarks/validate_bench.py [path]
 """
@@ -46,7 +56,7 @@ RESOURCE_KEYS = {
 TRACE_KEYS = {
     "trace", "seed", "arrival", "kv_mass_source", "trace_steps", "steps",
     "lanes", "submitted", "completed", "tokens", "compile_s", "wall_s",
-    "tokens_per_s", "ttft_ms", "tpot_ms", "latency_ms", "hit_rate",
+    "tokens_per_s", "ttft_ms", "tpot_ms", "hit_rate",
     "hit_rate_steady", "resource_hit_steady", "migration_bytes",
     "migration_bytes_per_s", "preemptions", "queued_peak",
     "tenants", "resources",
@@ -54,11 +64,11 @@ TRACE_KEYS = {
 TRACE_KINDS = {"zipf-hot", "diurnal-shift", "scan-antagonist"}
 ARRIVAL_KINDS = {"bernoulli", "mmpp"}
 TENANT_KEYS = {"weight", "completed", "tokens", "kv_hit_rate", "ttft_ms",
-               "tpot_ms", "latency_ms"}
+               "tpot_ms"}
 LATENCY_KEYS = {"p50", "p99", "mean", "n"}
-# latency_ms is the DEPRECATED combined row (one release, benchmarks/
-# README.md); ttft_ms and tpot_ms are the split that replaces it
-LATENCY_ROWS = ("ttft_ms", "tpot_ms", "latency_ms")
+# the split that replaced the combined latency_ms row (deprecation window
+# closed — latency_ms may no longer appear on any row)
+LATENCY_ROWS = ("ttft_ms", "tpot_ms")
 PREFILL_KEYS = {"arch", "prompt_len", "max_new", "page_t", "chunk", "lanes",
                 "seed", "tokens_match", "ttft_ratio", "token", "chunked"}
 PREFILL_ARM_KEYS = {"chunk", "compile_s", "steps", "ttft_ms", "tpot_ms",
@@ -67,6 +77,17 @@ MASS_AB_KEYS = {"arch", "trace", "arrival", "lanes", "seed", "trace_steps",
                 "fill", "kernel"}
 MASS_AB_ARM_KEYS = {"kv_mass_source", "steps", "tokens", "wall_s", "kv_hit",
                     "kv_hit_steady", "kv_promoted", "migration_bytes"}
+KV_REUSE_KEYS = {"arch", "trace", "seed", "trace_steps", "turns", "lanes",
+                 "page_t", "reuse_pages", "prefill_chunk", "tenants",
+                 "tokens_match", "prefill_tokens_saved", "hit_rate_gap",
+                 "off", "prefix", "substring"}
+KV_REUSE_ARM_KEYS = {"mode", "reuse_pages", "steps", "completed", "tokens",
+                     "compile_s", "wall_s", "kv_hit_steady", "ttft_ms",
+                     "reuse"}
+KV_REUSE_STAT_KEYS = {"pool_pages", "indexed", "free", "shared_refs",
+                      "lookups", "matchable", "page_hits", "hit_rate",
+                      "tokens_saved", "published", "evicted", "rejected",
+                      "shared_mass_share"}
 
 
 def _check_resources(tag: str, resources: dict, errors: list[str]) -> None:
@@ -117,6 +138,10 @@ def _check_traffic(traffic: dict, errors: list[str]) -> None:
         for row in LATENCY_ROWS:
             if LATENCY_KEYS - set(r[row]):
                 errors.append(f"{tag}: incomplete {row} row")
+        if "latency_ms" in r or any("latency_ms" in t
+                                    for t in r["tenants"].values()):
+            errors.append(f"{tag}: deprecated combined latency_ms row "
+                          "present — its one-release window is over")
         if r["completed"] != r["submitted"]:
             errors.append(f"{tag}: {r['submitted'] - r['completed']} "
                           "requests never finished (undrained queue)")
@@ -166,6 +191,54 @@ def _check_mass_ab(ab: dict, errors: list[str]) -> None:
             "(device-true hotness profiling worse than the host proxy)")
 
 
+def _check_kv_reuse(kr: dict, errors: list[str]) -> None:
+    """The cross-request KV reuse gates (DESIGN.md §12): reuse must never
+    change tokens, substring matching must actually save prefill work and
+    beat prefix matching (hole-skipping), and turning reuse on must not
+    cost steady-state KV hit rate."""
+    missing = KV_REUSE_KEYS - set(kr)
+    if missing:
+        errors.append(f"kv_reuse: missing keys {sorted(missing)}")
+        return
+    for arm in ("off", "prefix", "substring"):
+        amissing = KV_REUSE_ARM_KEYS - set(kr[arm])
+        if amissing:
+            errors.append(f"kv_reuse/{arm}: missing {sorted(amissing)}")
+            return
+        if arm == "off":
+            if kr[arm]["reuse"] is not None:
+                errors.append("kv_reuse/off: baseline arm carries reuse "
+                              "stats — the store was not disabled")
+            continue
+        st = kr[arm]["reuse"] or {}
+        smissing = KV_REUSE_STAT_KEYS - set(st)
+        if smissing:
+            errors.append(f"kv_reuse/{arm}: reuse stats missing "
+                          f"{sorted(smissing)}")
+            return
+        if not 0.0 <= st["hit_rate"] <= 1.0:
+            errors.append(f"kv_reuse/{arm}: hit_rate {st['hit_rate']} "
+                          "out of [0, 1]")
+    if not kr["tokens_match"]:
+        errors.append("kv_reuse: output tokens diverge across arms — KV "
+                      "reuse changed what the model generated")
+    if not kr["prefill_tokens_saved"] > 0:
+        errors.append("kv_reuse: substring matching saved no prefill "
+                      "tokens — the store never produced a hit")
+    hs = kr["substring"]["reuse"]["hit_rate"]
+    hp = kr["prefix"]["reuse"]["hit_rate"]
+    if not hs > hp:
+        errors.append(
+            f"kv_reuse: substring page-hit rate {hs:.3f} must exceed "
+            f"prefix {hp:.3f} — hole-skipping recovered nothing beyond "
+            "the shared prefix")
+    s, o = kr["substring"]["kv_hit_steady"], kr["off"]["kv_hit_steady"]
+    if not s >= o:
+        errors.append(
+            f"kv_reuse: substring steady KV hit rate {s:.3f} fell below "
+            f"reuse-off {o:.3f} — reuse degraded tiering behaviour")
+
+
 def _check_prefill(p: dict, errors: list[str]) -> None:
     """The chunked-prefill TTFT gate (DESIGN.md §11): a >= 512-token prompt
     served through the Scheduler must reach its first token in <= 1/4 the
@@ -205,11 +278,12 @@ def validate(path: str) -> list[str]:
     with open(path) as f:
         doc = json.load(f)
     errors: list[str] = []
-    if not set(doc) <= {"quick", "cases", "traffic", "mass_ab", "prefill"} or \
+    if not set(doc) <= {"quick", "cases", "traffic", "mass_ab", "prefill",
+                        "kv_reuse"} or \
             not {"quick", "cases"} <= set(doc):
         errors.append(f"top-level keys {sorted(doc)} not in expected "
                       "['cases', 'quick'] (+ optional 'traffic', 'mass_ab', "
-                      "'prefill')")
+                      "'prefill', 'kv_reuse')")
         return errors
     if not doc["cases"] and "traffic" not in doc:
         errors.append("no benchmark cases recorded")
@@ -235,6 +309,8 @@ def validate(path: str) -> list[str]:
                           "chunked-prefill TTFT A/B (DESIGN.md §11)")
     if "prefill" in doc:
         _check_prefill(doc["prefill"], errors)
+    if "kv_reuse" in doc:
+        _check_kv_reuse(doc["kv_reuse"], errors)
     return errors
 
 
@@ -255,8 +331,12 @@ def main() -> int:
            if ab else "")
     pf = doc.get("prefill")
     ttft = f", prefill TTFT ratio {pf['ttft_ratio']:.3f}" if pf else ""
-    print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces{gap}{ttft}, "
-          "schema + quota + adaptivity + fidelity + prefill checks pass")
+    kr = doc.get("kv_reuse")
+    reuse = (f", kv_reuse saved {kr['prefill_tokens_saved']} tokens "
+             f"(sub-pre gap {kr['hit_rate_gap']:+.3f})" if kr else "")
+    print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces{gap}{ttft}"
+          f"{reuse}, schema + quota + adaptivity + fidelity + prefill + "
+          "reuse checks pass")
     return 0
 
 

@@ -1,8 +1,9 @@
 """Quickstart: NeoMem's sketch-profiled tiering on a synthetic access stream.
 
-Shows the full paper loop in ~40 lines: NeoProf observes the stream on
-device, Algorithm 1 adapts the hotness threshold, the TieredStore promotes
-hot pages under quota, and the hit rate converges.
+Shows the full paper loop in ~40 lines on the unified ``repro.tiering``
+surface: one :class:`ResourceSpec` declares the geometry, NeoProf observes
+the stream on device, Algorithm 1 adapts the hotness threshold, the 2Q
+tier promotes hot pages under quota, and the hit rate converges.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,17 +13,16 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (DaemonParams, NeoMemDaemon, NeoProfParams,
-                        SketchParams, TierParams, neoprof_init,
-                        neoprof_observe, tier_init, touch)
+from repro.tiering import (DaemonParams, NeoMemDaemon, ResourceSpec,
+                           StreamResource)
 
 N_PAGES, N_SLOTS = 8192, 1024
-pp = NeoProfParams(sketch=SketchParams(width=1 << 14))
-tp = TierParams(N_PAGES, N_SLOTS, quota_pages=128)
-daemon = NeoMemDaemon(pp, tp, DaemonParams(
+spec = ResourceSpec(name="demo", n_pages=N_PAGES, hot_slots=N_SLOTS,
+                    quota_pages=128, sketch_width=1 << 14)
+daemon = NeoMemDaemon(DaemonParams(
     migration_interval=1, threshold_update_period=4, clear_interval=16))
-prof, tier = neoprof_init(pp), tier_init(tp)
-prof = daemon.cmd.set_threshold(prof, 4)
+h = daemon.register(StreamResource(spec))
+h.state = h.state._replace(prof=h.mem.cmd.set_threshold(h.state.prof, 4))
 
 rng = np.random.default_rng(0)
 for step in range(128):
@@ -30,18 +30,18 @@ for step in range(128):
     hot = rng.integers(7000, 7600, 1740)
     uni = rng.integers(0, N_PAGES, 308)
     pages = np.concatenate([hot, uni]).astype(np.int32)
-    # profile ONLY slow-tier traffic (NeoProf sits in the slow tier)
-    slot = np.asarray(tier.page_slot)
+    # profile ONLY slow-tier traffic (NeoProf sits in the slow tier);
+    # the tier's touch accounting still sees every access
+    slot = np.asarray(h.state.tier.page_slot)
     slow = pages[slot[pages] < 0]
     blk = np.full(len(pages), -1, np.int32)
     blk[: len(slow)] = slow
-    prof = neoprof_observe(prof, jnp.asarray(blk), pp)
-    tier = touch(tier, jnp.asarray(pages))
-    prof, tier = daemon.tick(prof, tier)
+    h.observe_pages(jnp.asarray(blk), touch_pages=jnp.asarray(pages))
+    daemon.tick()
     if step % 16 == 15:
-        st = daemon.state
-        total = st.total_fast + st.total_slow + 1
-        print(f"step {step:4d}  theta={daemon.policy.theta:4d}  "
-              f"hit={st.total_fast/total:.3f}  promoted={st.total_promoted}")
+        pol = h.mem.policy_state(h.state, h.stats)
+        print(f"step {step:4d}  theta={pol.theta:4d}  "
+              f"hit={h.hit_rate():.3f}  promoted={h.stats.promoted}")
 print("hot pages resident:",
-      int((np.asarray(tier.page_slot)[7000:7600] >= 0).sum()), "/ 600")
+      int((np.asarray(h.state.tier.page_slot)[7000:7600] >= 0).sum()),
+      "/ 600")

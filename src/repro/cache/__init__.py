@@ -1,0 +1,9 @@
+"""Content-addressed KV page cache (DESIGN.md §12).
+
+Cross-request reuse of completed paged-KV pages: page-granular content +
+chain hashing, a refcounted shared pool over the KV slow store, and
+prefix / interior-substring admission matching for `serve.sched`.
+"""
+from repro.cache.store import KVReuseStore, MatchResult, hash_pages
+
+__all__ = ["KVReuseStore", "MatchResult", "hash_pages"]

@@ -42,10 +42,6 @@ class ExpertCache(LegacyTierAdapter):
         super().__init__(tm.ExpertStreamResource(
             spec, n_experts=cfg.n_experts, migrate_fn=migrate_fn))
 
-    def page_ids(self, router_idx: jax.Array, group_ids: jax.Array) -> jax.Array:
-        """(..., k) expert indices + per-row group ids -> flat page stream."""
-        return (group_ids[..., None] * self.cfg.n_experts + router_idx).reshape(-1)
-
     def observe_step(self, router_streams: jax.Array) -> None:
         """router_streams: (G, n_moe, B, S, k) from the forward pass."""
         self._h.observe(jnp.asarray(router_streams))

@@ -3,17 +3,15 @@
 Deprecation shim: the stream encoding now lives in
 :class:`repro.tiering.KVPagesResource` (pages ranked by their attention
 softmax-mass quantile — see DESIGN.md §3.2) and the orchestration in the
-multiplexed :class:`repro.tiering.NeoMemDaemon`.  This class keeps the
-original ``KVTier`` surface for pre-existing callers; new code should
-register a ``"kv"`` resource on a shared daemon instead.
+multiplexed :class:`repro.tiering.NeoMemDaemon`.  Only the construction
+path (config + DeprecationWarning + base adapter surface) survives; the
+``important_pages`` / ``observe_step`` / ``resident_pages`` forwarders had
+no remaining callers and are gone.  New code should register a ``"kv"``
+resource on a shared daemon instead.
 """
 from __future__ import annotations
 
 import dataclasses
-
-import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro import tiering as tm
 from repro.core.adapters.base import LegacyTierAdapter
@@ -40,21 +38,3 @@ class KVTier(LegacyTierAdapter):
         super().__init__(tm.KVPagesResource(
             spec, mass_threshold=cfg.mass_threshold, migrate_fn=migrate_fn))
         self.prof_params = spec.prof_params()
-
-    @staticmethod
-    def important_pages(page_mass: jax.Array, page_ids: jax.Array,
-                        threshold: float) -> jax.Array:
-        """page_mass: (P,) per-page softmax mass; -> page-id stream (P,)
-        with unimportant pages masked to -1 (NeoProf padding)."""
-        total = jnp.maximum(jnp.sum(page_mass), 1e-30)
-        keep = page_mass / total >= threshold
-        return jnp.where(keep, page_ids, -1)
-
-    def observe_step(self, page_mass: np.ndarray | jax.Array,
-                     page_ids: np.ndarray | jax.Array) -> None:
-        self._h.observe(jnp.asarray(page_mass),
-                        jnp.asarray(page_ids, jnp.int32))
-
-    def resident_pages(self) -> np.ndarray:
-        sp = np.asarray(self.tier.slot_page)
-        return sp[sp >= 0]

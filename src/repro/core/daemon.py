@@ -3,23 +3,20 @@
 The orchestration loop now lives in :mod:`repro.tiering` (a multiplexed
 daemon driving N resources on one cadence with a shared quota budget).
 This module keeps the original ``NeoMemDaemon(prof_params, tier_params)``
-surface — explicit ``tick(prof, tier)`` threading, ``.cmd`` / ``.policy`` /
-``.state`` attributes — as a thin wrapper over
-:class:`repro.tiering.TieredMemory` so pre-existing callers keep working.
-
-New code should register a :class:`repro.tiering.TieredResource` with the
-multiplexed :class:`repro.tiering.NeoMemDaemon` instead.
+construction and explicit ``tick(prof, tier)`` threading as a thin wrapper
+over :class:`repro.tiering.TieredMemory` so pre-existing callers keep
+working.  The wider forwarding surface the shim once carried (``.policy``,
+``.state``, ``.bind_data``, ``migrate_fn`` callbacks) had no remaining
+callers and is gone; new code should register a
+:class:`repro.tiering.TieredResource` with the multiplexed
+:class:`repro.tiering.NeoMemDaemon` instead.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
-
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core.neoprof import NeoProfParams, NeoProfState
-from repro.core.policy import PolicyParams, PolicyState
+from repro.core.policy import PolicyParams
 from repro.core.tiering import TierParams, TierState
 
 
@@ -34,11 +31,7 @@ class DaemonParams:
 
 
 class NeoMemDaemon:
-    """Host-side daemon driving device-resident NeoProf + TieredStore.
-
-    ``migrate_fn(promoted_pages, victim_slots)`` is the adapter callback that
-    applies the actual data movement.  The daemon itself is data-agnostic.
-    """
+    """Host-side daemon driving device-resident NeoProf + TieredStore."""
 
     def __init__(
         self,
@@ -46,7 +39,6 @@ class NeoMemDaemon:
         tier_params: TierParams,
         daemon_params: DaemonParams | None = None,
         policy_params: PolicyParams | None = None,
-        migrate_fn: Callable[[jnp.ndarray, jnp.ndarray], None] | None = None,
     ):
         # Imported lazily: repro.core's package init imports this module,
         # while repro.tiering.memory imports repro.core submodules.
@@ -72,38 +64,14 @@ class NeoMemDaemon:
         self.pol_params = self.mem.pol_params
         self.cmd = self.mem.cmd
         self.stats = TierStats(name="legacy")
-        self.migrate_fn = migrate_fn
         # p + tick carried across ticks (prof/tier are threaded by the caller)
         self._mstate = self.mem.init()
 
-    @property
-    def policy(self) -> PolicyState:
-        return self.mem.policy_state(self._mstate, self.stats)
-
-    @property
-    def state(self):
-        from repro.tiering.stats import LegacyDaemonStateView
-        return LegacyDaemonStateView(
-            self.stats, tick_fn=lambda: int(self._mstate.tick))
-
-    @property
-    def _pending(self) -> np.ndarray:
-        return self.mem._pending
-
-    def bind_data(self, slow_data) -> None:
-        """Forward to the unified data plane: promotions move real bytes
-        (metered in ``self.stats``) once a payload is bound (DESIGN.md §8)."""
-        self.mem.bind_data(slow_data)
-        self.stats.quota_bytes = self.mem.quota_bytes
-
-    # ------------------------------------------------------------------
     def tick(
         self, prof: NeoProfState, tier: TierState
     ) -> tuple[NeoProfState, TierState]:
         """One daemon tick: run whatever cadences are due."""
         st = self._mstate._replace(prof=prof, tier=tier)
-        st, event = self.mem.tick(st, self.stats)
-        if event is not None and self.migrate_fn is not None:
-            self.migrate_fn(event.promoted, event.victims)
+        st, _ = self.mem.tick(st, self.stats)
         self._mstate = st
         return st.prof, st.tier

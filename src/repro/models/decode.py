@@ -679,6 +679,50 @@ def decode_step_paged(cfg: ArchConfig, params, cache, token, *, page_t: int,
 
 
 # ---------------------------------------------------------------------------
+# content-addressed page install (cross-request KV reuse, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def reuse_eligible(cfg: ArchConfig) -> bool:
+    """True when a lane's full per-position decode state is carried by the
+    KV slow store alone — the precondition for fast-forwarding a fresh
+    lane over slow-store pages (DESIGN.md §12).  The tiered KV payload
+    holds only the representative paged-attention entry, so reuse needs a
+    single-position pattern (no sibling rings), no O(1) recurrent states
+    and no dense-prologue ring (those travel only in preempt residuals)."""
+    recurrent = any(k in ("mamba", "mlstm", "slstm") for k in cfg.pattern)
+    prologue = bool(cfg.moe and cfg.moe.n_dense_prologue)
+    return len(cfg.pattern) == 1 and not recurrent and not prologue
+
+
+def install_pages(cache, lane: int, slot_ids, rows, *, dk: int, page_t: int,
+                  new_pos: int) -> None:
+    """Fast-forward one lane's paged ring to ``new_pos`` by installing
+    pre-computed KV page payloads.
+
+    ``rows`` is (G, n, T, hkv, dk+dv) slow-store [K | V] payload for ring
+    slots ``slot_ids``.  Bit-exact with streaming the same tokens to the
+    same position: installed slots hold full pages, and the new current
+    slot's fill is zeroed — the eager-advance invariant of
+    `_append_attend_local` (at a page boundary ``cur_slot`` has already
+    advanced onto an empty slot).  Requires `reuse_eligible`: the
+    representative entry must BE the whole per-position state.
+    """
+    entry = next(c for c in cache["blocks"]
+                 if isinstance(c, dict) and "page_len" in c)
+    n_slots = entry["page_len"].shape[-1]
+    slot_ids = jnp.asarray(slot_ids, jnp.int32)
+    entry["k_pages"] = entry["k_pages"].at[:, lane, slot_ids].set(
+        rows[..., :dk].astype(entry["k_pages"].dtype))
+    entry["v_pages"] = entry["v_pages"].at[:, lane, slot_ids].set(
+        rows[..., dk:].astype(entry["v_pages"].dtype))
+    entry["page_len"] = entry["page_len"].at[:, lane, slot_ids].set(page_t)
+    cur = (new_pos // page_t) % n_slots
+    entry["cur_slot"] = entry["cur_slot"].at[:, lane].set(cur)
+    entry["page_len"] = entry["page_len"].at[:, lane, cur].set(0)
+    cache["pos"] = cache["pos"].at[lane].set(new_pos)
+
+
+# ---------------------------------------------------------------------------
 # sampling — temperature / nucleus over the lane substrate (DESIGN.md §9)
 # ---------------------------------------------------------------------------
 

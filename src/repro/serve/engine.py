@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import tiering as tm
+from repro.cache import KVReuseStore
 from repro.configs.base import ArchConfig
 from repro.models import decode as dec
 from repro.models import transformer as tr
@@ -95,6 +96,11 @@ class ServeConfig:
     # Bind embedding/expert reads of the jitted decode step to the tiered
     # store (in-jit lookup_rows; off = dense params, reads stay host-only).
     jit_tier_reads: bool = True
+    # Content-addressed KV reuse (repro.cache, DESIGN.md §12): extra shared
+    # pool pages appended to the KV slow store behind a refcounted index so
+    # admission can install matched prompt pages pre-resident.  Lane mode
+    # only; 0 = off.
+    reuse_pages: int = 0
 
 
 class ServeEngine:
@@ -110,9 +116,28 @@ class ServeEngine:
             raise ValueError(
                 f"kv_mass_source must be 'kernel' or 'fill', "
                 f"got {scfg.kv_mass_source!r}")
+        if scfg.reuse_pages:
+            if not scfg.lanes:
+                raise ValueError(
+                    "reuse_pages requires lane mode (ServeConfig.lanes > 0)")
+            if not dec.reuse_eligible(cfg):
+                raise ValueError(
+                    f"arch {cfg.name!r} is not reuse-eligible: the KV slow "
+                    f"store must carry the whole per-position state (single "
+                    f"attention pattern position, no recurrent blocks, no "
+                    f"dense prologue)")
         self.daemon = tm.NeoMemDaemon()
         self._embed_rpp = scfg.embed_rows_per_page or tm.EMBED_ROWS_PER_PAGE
         self._register_resources()
+        # content-addressed shared pool (repro.cache, DESIGN.md §12): pool
+        # page ids sit ABOVE every private segment in the KV address space
+        self.reuse = None
+        self.reuse_mass = {"shared": 0.0, "total": 0.0}
+        if scfg.reuse_pages:
+            n_segments = scfg.kv_segments or scfg.lanes
+            self.reuse = KVReuseStore(
+                scfg.reuse_pages, base_gid=n_segments * self.pages_per_seq,
+                page_t=scfg.page_t)
         self._kernel_mass = scfg.paged and scfg.kv_mass_source == "kernel"
         self._want_streams = "experts" in self.daemon or \
             ("kv" in self.daemon and self._kernel_mass)
@@ -128,6 +153,15 @@ class ServeEngine:
         self._kv_flushed: dict[tuple[int, int], tuple[int, int]] = {}
         self._lane_active = np.zeros(max(scfg.lanes, 1), bool)
         self._lane_segments = np.full(max(scfg.lanes, 1), -1, np.int32)
+        # per-lane page table (copy-on-write indirection): local page idx ->
+        # global store page; -1 = the private affine default
+        # segment*pages_per_seq + local.  Matched shared pages point into
+        # the reuse pool instead, so every referencing lane observes the
+        # SAME pool gid and the daemon aggregates their mass (DESIGN.md §12).
+        pps = self.pages_per_seq if scfg.paged else 1
+        self._lane_pages = np.full((max(scfg.lanes, 1), pps), -1, np.int64)
+        # locals whose slow-store row holds a complete page (publish witness)
+        self._lane_full = np.zeros((max(scfg.lanes, 1), pps), bool)
 
     def _register_resources(self) -> None:
         cfg, scfg = self.cfg, self.scfg
@@ -140,10 +174,12 @@ class ServeEngine:
                     raise ValueError("the 'kv' resource requires paged=True")
                 row_shape = self._kv_row_shape()
                 # lane mode: the slow store is carved into per-request
-                # segments, each a max_seq-worth of logical pages
+                # segments, each a max_seq-worth of logical pages; the
+                # content-addressed reuse pool's pages sit above them
                 n_segments = scfg.kv_segments or scfg.lanes or 1
                 spec = tm.ResourceSpec(
-                    "kv", n_pages=n_segments * self.pages_per_seq,
+                    "kv", n_pages=n_segments * self.pages_per_seq
+                    + scfg.reuse_pages,
                     hot_slots=scfg.kv_tier_slots or scfg.hot_slots,
                     quota_pages=scfg.kv_quota,
                     row_shape=row_shape, row_dtype="bfloat16")
@@ -388,6 +424,9 @@ class ServeEngine:
         self._kv_flushed.clear()
         self._lane_active = np.zeros(scfg.lanes, bool)
         self._lane_segments = np.full(scfg.lanes, -1, np.int32)
+        self._lane_pages = np.full((scfg.lanes, self.pages_per_seq), -1,
+                                   np.int64)
+        self._lane_full = np.zeros((scfg.lanes, self.pages_per_seq), bool)
 
     def advance_lanes(self, tokens, active, segments) -> np.ndarray:
         """One continuous-batching decode step for ALL lanes at once.
@@ -498,6 +537,7 @@ class ServeEngine:
                 agg = jnp.sum(per_step * jnp.asarray(valid.T)[:, :, None],
                               axis=0)                         # (L, S)
                 mass = np.where(gids >= 0, np.asarray(agg, np.float32), 0.0)
+            self._count_shared_mass(mass, gids)
             self.daemon.observe("kv", jnp.asarray(mass.reshape(-1)),
                                 jnp.asarray(gids.reshape(-1), jnp.int32))
 
@@ -520,6 +560,7 @@ class ServeEngine:
                     # segment-mapped pages (same mask the gids carry)
                     km = np.asarray(self._last_kv_mass, np.float32)
                     mass = np.where(gids >= 0, km, 0.0)
+                self._count_shared_mass(mass, gids)
                 self.daemon.observe("kv", jnp.asarray(mass.reshape(-1)),
                                     jnp.asarray(gids.reshape(-1), jnp.int32))
 
@@ -542,6 +583,8 @@ class ServeEngine:
             clear(entry, tmpl, lane, 0)
         self.cache["pos"] = self.cache["pos"].at[lane].set(0)
         self._invalidate_lane_flush(lane)
+        self._lane_pages[lane] = -1
+        self._lane_full[lane] = False
 
     def preempt_lane(self, lane: int) -> dict:
         """Evict a lane's request so the lane can serve someone else.
@@ -556,6 +599,11 @@ class ServeEngine:
         self._flush_kv_lanes(lanes=[lane], force=True)
         residual = {"pos": int(np.asarray(self.cache["pos"])[lane]),
                     "segment": int(self._lane_segments[lane]),
+                    # page-table row + publish witnesses travel with the
+                    # request: its claim on shared pool pages survives the
+                    # lane (refcounts are the scheduler's, unchanged here)
+                    "pages": self._lane_pages[lane].copy(),
+                    "full": self._lane_full[lane].copy(),
                     "blocks": [], "prologue": []}
         rep = self._paged_entry()
         for entry in self.cache["blocks"]:
@@ -586,6 +634,8 @@ class ServeEngine:
                 entry[k] = entry[k].at[lane].set(jnp.asarray(v, entry[k].dtype))
         self.cache["pos"] = self.cache["pos"].at[lane].set(residual["pos"])
         self._invalidate_lane_flush(lane)
+        self._lane_pages[lane] = residual.get("pages", -1)
+        self._lane_full[lane] = residual.get("full", False)
         entry = self._paged_entry()
         segment = residual["segment"]
         if entry is None or segment < 0:
@@ -597,7 +647,11 @@ class ServeEngine:
         slots = np.flatnonzero(local >= 0)
         if slots.size == 0:
             return
-        gids = segment * self.pages_per_seq + local[slots]
+        # shared pool pages re-gather from the pool, private ones from the
+        # segment — the page-table row restored above decides per page
+        tabled = self._lane_pages[lane, local[slots]]
+        gids = np.where(tabled >= 0, tabled,
+                        segment * self.pages_per_seq + local[slots])
         rows = self.daemon["kv"].read_rows(jnp.asarray(gids, jnp.int32))
         rows = jnp.moveaxis(rows, 0, 1)          # (G, n, T, hkv, dk+dv)
         dk = self._kv_split_width()
@@ -619,6 +673,93 @@ class ServeEngine:
     def _invalidate_lane_flush(self, lane: int) -> None:
         for key in [k for k in self._kv_flushed if k[0] == lane]:
             del self._kv_flushed[key]
+
+    # -- content-addressed KV reuse (repro.cache, DESIGN.md §12) --------------
+    def install_lane_pages(self, lane: int, run: dict[int, int]
+                           ) -> tuple[int, int]:
+        """Fast-forward a lane over one CONSECUTIVE run of admission-matched
+        pages: install the run's ring-window tail from the shared pool and
+        jump the lane position past the run, no forward pass (DESIGN.md
+        §12).  ``run`` maps local page idx -> pool gid; pages before the
+        window tail fall outside the attention ring and carry no payload
+        (streaming would have wrapped over them identically) but still
+        count as prefill tokens saved.  Installed slots are marked clean in
+        the flush tracker — copy-on-write: the ring never writes a shared
+        page back.  Returns the pool reads' (fast, slow) placement split so
+        the scheduler can charge them to the admitting tenant (the reads
+        themselves are metered on the "kv" resource by read_rows)."""
+        if self.reuse is None:
+            raise ValueError("install_lane_pages requires reuse_pages > 0")
+        locals_ = np.asarray(sorted(run), np.int64)
+        if locals_.size == 0:
+            return 0, 0
+        if not np.all(np.diff(locals_) == 1):
+            raise ValueError("install run must be consecutive local pages")
+        gids = np.asarray([run[int(j)] for j in locals_], np.int64)
+        S, T = self.scfg.hot_slots, self.scfg.page_t
+        sel, gsel = locals_[-S:], gids[-S:]
+        h = self.daemon["kv"]
+        _, hit = h.lookup(jnp.asarray(gsel, jnp.int32))
+        fast_n = int(np.asarray(hit).sum())
+        rows = h.read_rows(jnp.asarray(gsel, jnp.int32))
+        rows = jnp.moveaxis(rows, 0, 1)          # (G, n, T, hkv, dk+dv)
+        new_pos = int(locals_[-1] + 1) * T
+        dec.install_pages(self.cache, lane, sel % S, rows,
+                          dk=self._kv_split_width(), page_t=T,
+                          new_pos=new_pos)
+        self._lane_pages[lane, locals_] = gids
+        cur = (new_pos // T) % S
+        for j, g in zip(sel % S, gsel):
+            if int(j) != cur:                    # cur slot was re-zeroed
+                self._kv_flushed[(lane, int(j))] = (int(g), T)
+        return fast_n, int(gsel.size - fast_n)
+
+    def publish_lane(self, lane: int, tokens) -> int:
+        """Publish a finishing request's completed KV pages into the shared
+        pool: force-flush the lane (its segment becomes an exact ring
+        snapshot), index every full page of its appended token stream whose
+        slow row is witnessed complete, and copy NEW pages' payloads
+        segment -> pool in ONE fused ``copy_rows``.  Pages already indexed
+        (e.g. installed at admission) deduplicate to an LRU touch.
+        Returns the number of newly published pages."""
+        if self.reuse is None:
+            return 0
+        toks = np.asarray(tokens).ravel()
+        pos = int(np.asarray(self.cache["pos"])[lane])
+        n_pages = min(toks.size, pos) // self.scfg.page_t
+        if n_pages <= 0 or self._lane_segments[lane] < 0:
+            return 0
+        self._flush_kv_lanes(lanes=[lane], force=True)
+        witness = self._lane_full[lane] | (self._lane_pages[lane] >= 0)
+        new = self.reuse.publish(toks, n_pages, mask=witness)
+        if not new:
+            return 0
+        seg = int(self._lane_segments[lane])
+        src = [int(self._lane_pages[lane, j]) if self._lane_pages[lane, j] >= 0
+               else seg * self.pages_per_seq + j for j, _ in new]
+        dst = [gid for _, gid in new]
+        self.daemon["kv"].copy_rows(np.asarray(src, np.int32),
+                                    np.asarray(dst, np.int32))
+        return len(new)
+
+    def _count_shared_mass(self, mass: np.ndarray, gids: np.ndarray) -> None:
+        """Accumulate the observation mass landing on shared pool pages vs
+        all resident pages — the shared-page mass share (BENCH kv_reuse)."""
+        if self.reuse is None:
+            return
+        m = np.asarray(mass, np.float64)
+        self.reuse_mass["total"] += float(m[gids >= 0].sum())
+        self.reuse_mass["shared"] += float(m[gids >= self.reuse.base_gid].sum())
+
+    def reuse_stats(self) -> dict | None:
+        """Content-addressed store telemetry + the shared-page mass share."""
+        if self.reuse is None:
+            return None
+        row = self.reuse.stats()
+        total = self.reuse_mass["total"]
+        row["shared_mass_share"] = (self.reuse_mass["shared"] / total
+                                    if total > 0 else 0.0)
+        return row
 
     # -- tiering-state checkpoint (DESIGN.md §6) ------------------------------
     def save_tiering(self, mgr, step: int) -> None:
@@ -736,11 +877,21 @@ class ServeEngine:
         plen, cur, pos = view
         local = self._ring_page_ids(plen, cur, pos, self.scfg.page_t)
         act = self._lane_active if active is None else np.asarray(active, bool)
-        seg = self._lane_segments[:, None].astype(np.int64)
-        gids = np.where((local >= 0) & act[:, None] & (seg >= 0),
-                        seg * self.pages_per_seq + local, -1)
+        gids = self._map_gids(local, act)
         mass = np.where(gids >= 0, plen, 0).astype(np.float32)
         return mass, gids
+
+    def _map_gids(self, local: np.ndarray, act: np.ndarray) -> np.ndarray:
+        """Resolve (L, S) local page ids to global store page ids through
+        the per-lane page table: table entries (shared pool pages) win,
+        everything else falls back to the private affine mapping
+        ``segment * pages_per_seq + local``; invalid lanes/slots are -1."""
+        seg = self._lane_segments[:, None].astype(np.int64)
+        affine = seg * self.pages_per_seq + local
+        lanes = np.arange(local.shape[0])[:, None]
+        tabled = self._lane_pages[lanes, np.maximum(local, 0)]
+        gids = np.where(tabled >= 0, tabled, affine)
+        return np.where((local >= 0) & act[:, None] & (seg >= 0), gids, -1)
 
     def _flush_kv_slow(self) -> None:
         """Flush the resident paged-cache window down to the KV data plane.
@@ -783,27 +934,48 @@ class ServeEngine:
         payloads, unlike the single-request row-0 representative).  Pages
         unchanged since the last flush are skipped unless ``force`` —
         preemption forces a full flush of the evicted lane so the slow store
-        is an exact snapshot of its ring."""
+        is an exact snapshot of its ring.
+
+        Copy-on-write over shared pool pages (DESIGN.md §12): a ring slot
+        holding a CLEAN shared page (installed at admission, fill
+        unchanged) is never written back — the pool is authoritative, even
+        under ``force``.  A slot whose shared mapping went stale (the ring
+        wrote into it) forks: the page-table entry reverts to the lane's
+        private segment page and the payload flushes there, so other
+        referencing lanes keep the pool copy untouched."""
         h = self.daemon["kv"]
         if h.mem.buffers is None:
             return
         entry = self._paged_entry()
         if entry is None:
             return
+        view = self._ring_view()
+        if view is None:
+            return
+        plen, cur, pos = view
+        local = self._ring_page_ids(plen, cur, pos, self.scfg.page_t)
         if lanes is None:
-            sv = self._kv_lane_stream()
+            act = self._lane_active
         else:
             act = np.zeros(self.scfg.lanes, bool)
             act[np.asarray(lanes, int)] = True
-            sv = self._kv_lane_stream(active=act)
-        if sv is None:
-            return
-        mass, gids = sv                              # (L, S)
-        fill = mass.astype(np.int64)
+        gids = self._map_gids(local, act)            # (L, S)
+        fill = np.where(gids >= 0, plen, 0).astype(np.int64)
+        base = self.reuse.base_gid if self.reuse is not None else None
         ids = gids.copy()
         for lane, slot in np.argwhere(ids >= 0):
             key = (int(lane), int(slot))
             state = (int(gids[lane, slot]), int(fill[lane, slot]))
+            if base is not None and gids[lane, slot] >= base:
+                if self._kv_flushed.get(key) == state:
+                    ids[lane, slot] = -1             # clean shared page: CoW
+                    continue
+                lp = int(local[lane, slot])          # dirty: private fork
+                self._lane_pages[lane, lp] = -1
+                priv = (int(self._lane_segments[lane]) * self.pages_per_seq
+                        + lp)
+                ids[lane, slot] = gids[lane, slot] = priv
+                state = (priv, int(fill[lane, slot]))
             if not force and self._kv_flushed.get(key) == state:
                 ids[lane, slot] = -1
         if not (ids >= 0).any():
@@ -814,6 +986,9 @@ class ServeEngine:
         for lane, slot in np.argwhere(ids >= 0):
             self._kv_flushed[(int(lane), int(slot))] = (
                 int(gids[lane, slot]), int(fill[lane, slot]))
+            if fill[lane, slot] >= self.scfg.page_t:
+                # witness: this local's slow row holds the complete page
+                self._lane_full[lane, local[lane, slot]] = True
 
     def read_rows(self, name: str, page_ids) -> jax.Array:
         """Serve payload rows for a resource: fast-tier copy when the page

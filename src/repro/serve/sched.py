@@ -78,6 +78,12 @@ class SchedConfig:
     temperature: float = 0.0
     top_p: float = 1.0
     seed: int = 0                # sampling seed (seeded per trace)
+    # Content-addressed admission matching (repro.cache, DESIGN.md §12),
+    # active when the engine has a reuse pool (ServeConfig.reuse_pages):
+    # "substring" verifies every full prompt page independently and skips
+    # holes; "prefix" stops at the first miss (the vLLM-style baseline —
+    # strictly a subset of substring, kept for the kv_reuse A/B).
+    reuse_match: str = "substring"
 
 
 @dataclasses.dataclass
@@ -102,6 +108,12 @@ class Request:
     arrival_time: float = 0.0
     token_times: list = dataclasses.field(default_factory=list)
     key: np.ndarray | None = None  # per-request PRNG key (sampling mode)
+    # admission-matched shared pages not yet installed: local page -> pool
+    # gid (install consumes runs as prefill reaches them)
+    matched: dict = dataclasses.field(default_factory=dict)
+    # every pool gid this request holds a reference on (released at finish;
+    # survives preemption — the claim belongs to the request, not the lane)
+    shared_gids: list = dataclasses.field(default_factory=list)
 
     @property
     def n_prompt(self) -> int:
@@ -225,6 +237,15 @@ class Scheduler:
             req.segment = self.free_segments.pop(0)
             req.admitted_step = self.step_count
             self.eng.reset_lane(lane)
+            if self.eng.reuse is not None:
+                # content-addressed admission matching (DESIGN.md §12):
+                # matched pages install as prefill reaches them, so the
+                # lane only scans the unmatched gaps; the match acquires
+                # one reference per page, released when the request ends
+                res = self.eng.reuse.match(req.prompt,
+                                           mode=self.scfg.reuse_match)
+                req.matched = dict(res.pages)
+                req.shared_gids = list(res.pages.values())
         req.state, req.lane = "running", lane
         self.lanes[lane] = req
         self.queue.remove(req)
@@ -277,6 +298,16 @@ class Scheduler:
         self.queued_peak = max(self.queued_peak, len(self.queue))
 
     def _finish(self, req: Request) -> None:
+        if self.eng.reuse is not None:
+            # publish BEFORE the segment is recycled (the pool copy sources
+            # from it), then drop this request's claims on shared pages
+            stream = (np.concatenate(
+                [req.prompt, np.asarray(req.out[:-1], np.int32)])
+                if len(req.out) > 1 else req.prompt)
+            self.eng.publish_lane(req.lane, stream)
+            if req.shared_gids:
+                self.eng.reuse.release(req.shared_gids)
+                req.shared_gids = []
         self.lanes[req.lane] = None
         self.free_segments.append(req.segment)
         req.state, req.lane = "finished", -1
@@ -303,12 +334,35 @@ class Scheduler:
         segments = np.full(self.n_lanes, -1, np.int32)
         consumed = np.zeros(self.n_lanes, np.int32)
         chunk_logits: dict[int, np.ndarray] = {}
+        page_t = self.eng.scfg.page_t
         for lane, req in enumerate(self.lanes):
             if req is None:
                 continue
             segments[lane] = req.segment
+            if req.prefilling and req.matched:
+                # content-addressed fast-forward (DESIGN.md §12): when the
+                # page at the lane position is matched, install the whole
+                # consecutive run from the shared pool — no forward pass —
+                # and charge the pool reads to the admitting tenant
+                j = req.pos // page_t
+                if req.pos % page_t == 0 and j in req.matched:
+                    run: dict[int, int] = {}
+                    while j in req.matched:
+                        run[j] = req.matched.pop(j)
+                        j += 1
+                    fast_n, slow_n = self.eng.install_lane_pages(lane, run)
+                    st = self.tenant_stats[req.tenant]
+                    st.fast_reads += fast_n
+                    st.slow_reads += slow_n
+                    consumed[lane] = len(run) * page_t
+                    continue
             if chunk > 0 and req.prefilling and req.n_prompt > chunk:
-                piece = req.prompt[req.pos:req.pos + chunk]
+                # a chunk scan must stop at the next matched page — scanning
+                # past it would recompute what the pool already holds
+                end = req.pos + chunk
+                gap = min((jj * page_t for jj in req.matched
+                           if jj * page_t >= req.pos), default=end)
+                piece = req.prompt[req.pos:min(end, gap)]
                 chunk_logits[lane] = self.eng.prefill_lane(
                     lane, piece, req.segment, chunk=chunk)
                 consumed[lane] = piece.size
@@ -318,6 +372,11 @@ class Scheduler:
             tokens[lane] = (req.prompt[req.pos] if req.prefilling
                             else req.out[-1])
         if not (active.any() or chunk_logits):
+            # install-only step (or nothing to do): no engine step ran and
+            # no lane can emit — just advance the fast-forwarded positions
+            for lane, req in enumerate(self.lanes):
+                if req is not None and consumed[lane]:
+                    req.pos += int(consumed[lane])
             self.step_count += 1
             return
         logits = (self.eng.advance_lanes(tokens, active, segments)
@@ -423,17 +482,15 @@ class Scheduler:
         """Split latency schema: ``ttft_ms`` (arrival -> first emitted token)
         and ``tpot_ms`` (gaps between a request's consecutive output tokens)
         are DIFFERENT distributions — folding them together makes the
-        "per-token p99" just TTFT in disguise.  ``latency_ms`` keeps the old
-        combined row, deprecated for one release (benchmarks/README.md)."""
-        ttft, tpot, combined = [], [], []
+        "per-token p99" just TTFT in disguise.  (The combined ``latency_ms``
+        row served its one-release deprecation and is gone.)"""
+        ttft, tpot = [], []
         for r in reqs:
             if r.token_times:
                 ttft.append(r.token_times[0] - r.arrival_time)
                 tpot.extend(np.diff(r.token_times))
-            combined.extend(np.diff([r.arrival_time] + r.token_times))
         return {"ttft_ms": cls._pct_row(ttft),
-                "tpot_ms": cls._pct_row(tpot),
-                "latency_ms": cls._pct_row(combined)}
+                "tpot_ms": cls._pct_row(tpot)}
 
     def report(self) -> dict:
         """The traffic-bench schema row for this run (BENCH_serve.json)."""

@@ -148,6 +148,12 @@ class ResourceHandle:
         n = self.mem.write_pages(self.state, page_ids, k_pages, v_pages)
         self.stats.flush_bytes += n * self.mem.row_bytes
 
+    def copy_rows(self, src_ids, dst_ids) -> None:
+        """Store-to-store page duplication (the content-addressed publish
+        verb, one donated fused op); bytes metered as flush traffic."""
+        n = self.mem.copy_rows(self.state, src_ids, dst_ids)
+        self.stats.flush_bytes += n * self.mem.row_bytes
+
     def hit_rate(self) -> float:
         return self.mem.hit_rate(self.state, self.stats)
 

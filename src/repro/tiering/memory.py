@@ -292,6 +292,21 @@ class TieredMemory:
                                                k_pages, v_pages)
         return int(np.sum(np.asarray(page_ids) >= 0))
 
+    def copy_rows(self, state: TieredMemoryState, src_ids, dst_ids) -> int:
+        """Duplicate page payloads store-to-store (`migrate.copy_rows`):
+        the content-addressed publish path copies a finished request's
+        segment pages into shared pool pages in one fused donated op.
+        Returns the pages copied."""
+        if self.buffers is None:
+            raise ValueError("no payload bound — call bind_data() first")
+        src_ids = jnp.asarray(src_ids, jnp.int32)
+        dst_ids = jnp.asarray(dst_ids, jnp.int32)
+        dst_slots, _ = lookup(state, dst_ids)
+        self.buffers = migrate_lib.copy_rows(self.buffers, src_ids, dst_ids,
+                                             dst_slots)
+        return int(np.sum((np.asarray(src_ids) >= 0)
+                          & (np.asarray(dst_ids) >= 0)))
+
     # -- state ---------------------------------------------------------------
     def init(self, key: jax.Array | None = None) -> TieredMemoryState:
         prof = neoprof_init(self.pp, key)

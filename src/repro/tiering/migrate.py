@@ -207,3 +207,36 @@ def write_pages(buffers: TierBuffers, page_ids: jax.Array, slots: jax.Array,
         buffers.fast, buffers.slow, jnp.asarray(page_ids, jnp.int32),
         jnp.asarray(slots, jnp.int32), k_pages, v_pages)
     return TierBuffers(fast=fast, slow=slow)
+
+
+def _copy_rows_impl(fast, slow, src_ids, dst_ids, dst_slots):
+    # the slow store is coherent by construction (every write verb and the
+    # demotion write-back lands there), so the gather reads slow only
+    rows = slow[jnp.maximum(src_ids, 0)]
+    valid = (src_ids >= 0) & (dst_ids >= 0)
+    slow_idx = jnp.where(valid, dst_ids, slow.shape[0])
+    slow = slow.at[slow_idx].set(rows, mode="drop")
+    fast_idx = jnp.where(valid & (dst_slots >= 0), dst_slots, fast.shape[0])
+    fast = fast.at[fast_idx].set(rows, mode="drop")
+    return fast, slow
+
+
+@functools.lru_cache(maxsize=None)
+def _copy_rows_jit():
+    donate = (0, 1) if jax.default_backend() != "cpu" else ()
+    return jax.jit(_copy_rows_impl, donate_argnums=donate)
+
+
+def copy_rows(buffers: TierBuffers, src_ids: jax.Array, dst_ids: jax.Array,
+              dst_slots: jax.Array) -> TierBuffers:
+    """Duplicate page payloads store-to-store as ONE donated fused op —
+    the content-addressed publish verb (DESIGN.md §12): a finished
+    request's private segment pages are copied into shared pool pages
+    without a host round-trip.  Destinations currently promoted
+    (``dst_slots[i] >= 0``) get their fast copy refreshed for coherence;
+    -1 in either id array drops that pair.
+    """
+    fast, slow = _copy_rows_jit()(
+        buffers.fast, buffers.slow, jnp.asarray(src_ids, jnp.int32),
+        jnp.asarray(dst_ids, jnp.int32), jnp.asarray(dst_slots, jnp.int32))
+    return TierBuffers(fast=fast, slow=slow)

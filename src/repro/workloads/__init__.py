@@ -1,8 +1,8 @@
 """repro.workloads — trace-driven multi-tenant workload generators.
 
 Seeded, replayable arrival traces (zipf-hot / diurnal-shift /
-scan-antagonist) for the continuous-batching scheduler; see
-:mod:`repro.workloads.traces` and DESIGN.md §9.
+scan-antagonist / agentic) for the continuous-batching scheduler; see
+:mod:`repro.workloads.traces` and DESIGN.md §9 / §12.
 """
 from repro.workloads.traces import (  # noqa: F401
     ARRIVAL_KINDS, DEFAULT_TENANTS, TRACE_KINDS, Arrival, TenantProfile,

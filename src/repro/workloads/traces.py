@@ -19,11 +19,33 @@ CONTENT from a distribution the tiering daemon can (or cannot) exploit:
                           hot set, thrashes promotions, and drags the
                           steady-state hit rate below ``zipf-hot`` — the
                           adaptivity gap the traffic benchmark asserts.
+  * ``agentic``         — multi-turn tool-agent sessions, the workload the
+                          content-addressed KV store (DESIGN.md §12) exists
+                          for.  Each tenant owns one fixed system prompt S;
+                          each conversation replays its FULL context every
+                          turn: ``prompt_t = S + u_1 .. u_t + W_t`` where
+                          the user-turn history is append-only and ``W_t``
+                          is a fixed-length working block (scratchpad /
+                          tool output) that MUTATES between turns.  Because
+                          the mutation sits at the END, every history page
+                          keeps a stable causal-chain hash turn over turn —
+                          so cross-turn KV reuse is exact, and when pool
+                          pressure evicts front-of-history pages, substring
+                          matching recovers the surviving tail while prefix
+                          matching stalls at the first hole (the
+                          MemGPT-style gap ``kv_reuse`` asserts).  Turns of
+                          one conversation are spaced ``turn_gap`` steps
+                          apart so turn ``t`` publishes before ``t+1``
+                          arrives; for this kind ``prompt_len`` bounds the
+                          per-TURN user block, not the whole prompt.
 
-Arrival PROCESSES are deliberately identical across kinds for the same
-(seed, arrival) pair (same per-step draws, same prompt/output lengths) —
-only token content differs, so hit-rate deltas between traces measure the
-access pattern, not accidental load differences.
+Arrival PROCESSES are deliberately identical across the three content kinds
+for the same (seed, arrival) pair (same per-step draws, same prompt/output
+lengths) — only token content differs, so hit-rate deltas between traces
+measure the access pattern, not accidental load differences.  ``agentic``
+is the exception: its session structure (spaced turns, growing prompts) IS
+the workload, so it draws its own arrival schedule from the same structural
+stream.
 
 Two arrival processes (the CXL-at-scale study's point: tails live in the
 bursts, not the means):
@@ -46,7 +68,7 @@ import functools
 
 import numpy as np
 
-TRACE_KINDS = ("zipf-hot", "diurnal-shift", "scan-antagonist")
+TRACE_KINDS = ("zipf-hot", "diurnal-shift", "scan-antagonist", "agentic")
 ARRIVAL_KINDS = ("bernoulli", "mmpp")
 
 # MMPP defaults: calm->burst 0.05, burst->calm 0.25 => stationary burst
@@ -115,17 +137,65 @@ def _zipf_tokens(rng: np.random.Generator, n: int, vocab: int, a: float,
     return ((ranks + phase) % vocab).astype(np.int32)
 
 
+def _agentic_arrivals(struct: np.random.Generator,
+                      content: np.random.Generator,
+                      tenants: tuple[TenantProfile, ...], *, n_steps: int,
+                      vocab: int, zipf_a: float, turn_gap: int,
+                      sys_len: int, n_convs: int, work_len: int,
+                      max_total: int) -> list[Arrival]:
+    """Multi-turn sessions: ``prompt_t = S + u_1 .. u_t + W_t``.
+
+    The system prompt S is per-TENANT (every conversation of a tenant
+    shares it — those pages stay hot in the reuse pool); the user-turn
+    history is append-only (stable chain hashes, the reuse substrate); the
+    working block W_t re-draws every turn (the mutation that ends prefix
+    matching exactly at the history/working boundary).  A conversation
+    stops growing when the next turn's prompt + output would exceed
+    ``max_total`` (the scheduler rejects requests longer than a KV
+    segment), and its turns are ``turn_gap``-spaced with small structural
+    jitter so the previous turn has published before the next arrives.
+    """
+    arrivals: list[Arrival] = []
+    for t in tenants:
+        sys_p = content.integers(0, vocab, size=sys_len).astype(np.int32)
+        for _ in range(n_convs):
+            step = int(struct.integers(0, max(1, n_steps // 3)))
+            history = [sys_p]
+            hist_len = sys_len
+            while step < n_steps:
+                ulen = int(struct.integers(*t.prompt_len))
+                n_out = int(struct.integers(*t.out_len))
+                if hist_len + ulen + work_len + n_out > max_total:
+                    break                      # context budget exhausted
+                history.append(
+                    _zipf_tokens(content, ulen, vocab, zipf_a, 0))
+                hist_len += ulen
+                work = content.integers(0, vocab, size=work_len
+                                        ).astype(np.int32)
+                arrivals.append(Arrival(
+                    step=step, tenant=t.name,
+                    tokens=np.concatenate(history + [work]),
+                    max_new=n_out))
+                step += turn_gap + int(struct.integers(0, 4))
+    arrivals.sort(key=lambda a: (a.step, a.tenant))
+    return arrivals
+
+
 def make_trace(kind: str, *, n_steps: int = 200, vocab: int = 256,
                tenants: tuple[TenantProfile, ...] = DEFAULT_TENANTS,
                seed: int = 0, zipf_a: float = 1.4,
-               shift_period: int = 64, arrival: str = "bernoulli") -> Trace:
+               shift_period: int = 64, arrival: str = "bernoulli",
+               turn_gap: int = 24, sys_len: int = 12, n_convs: int = 3,
+               work_len: int = 4, max_total: int = 56) -> Trace:
     """Build one seeded, replayable arrival trace (see module docstring).
 
     The structural draws (the MMPP modulation chain, arrival steps,
     prompt/output lengths) come from a dedicated RNG stream shared by every
     kind; token content comes from a second stream — so for a fixed
     (seed, arrival) pair, traces of different kinds carry the SAME load at
-    the same steps and differ only in what they touch.
+    the same steps and differ only in what they touch.  The ``turn_gap`` /
+    ``sys_len`` / ``n_convs`` / ``work_len`` / ``max_total`` knobs apply to
+    ``kind="agentic"`` only (see :func:`_agentic_arrivals`).
     """
     if kind not in TRACE_KINDS:
         raise KeyError(f"unknown trace kind {kind!r}; known: {TRACE_KINDS}")
@@ -134,6 +204,14 @@ def make_trace(kind: str, *, n_steps: int = 200, vocab: int = 256,
             f"unknown arrival process {arrival!r}; known: {ARRIVAL_KINDS}")
     struct = np.random.default_rng(np.random.SeedSequence([seed, 0xA11]))
     content = np.random.default_rng(np.random.SeedSequence([seed, 0xB22]))
+    if kind == "agentic":
+        arrivals = _agentic_arrivals(
+            struct, content, tenants, n_steps=n_steps, vocab=vocab,
+            zipf_a=zipf_a, turn_gap=turn_gap, sys_len=sys_len,
+            n_convs=n_convs, work_len=work_len, max_total=max_total)
+        return Trace(kind=kind, seed=seed, vocab=vocab, n_steps=n_steps,
+                     tenants=tuple(tenants), arrivals=tuple(arrivals),
+                     arrival=arrival)
     # The MMPP calm/burst chain is drawn FIRST, from the structural stream:
     # identical modulation (and identical subsequent draws) for every kind.
     rate_scale = np.ones(n_steps)

@@ -1,0 +1,217 @@
+"""Content-addressed KV page store (DESIGN.md §12): the dual content/chain
+hash scheme, refcount lifecycle + LRU eviction, hole-skipping substring
+matching vs prefix matching, bit-exact cross-request reuse through the
+scheduler, and preempt/resume of a lane holding shared (refcount > 1)
+pages — no clobber, no double-free."""
+import jax
+import numpy as np
+import pytest
+
+from repro.cache import KVReuseStore, hash_pages
+from repro.configs.registry import get_smoke_config
+from repro.models import transformer as tr
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.sched import SchedConfig, Scheduler, Tenant
+
+ARCH = "llama3.2-3b"
+PAGE_T = 4
+BASE_KW = dict(max_seq=48, paged=True, page_t=PAGE_T, hot_slots=5,
+               migration_interval=4, resources=("embeddings",),
+               embed_hot_slots=4, embed_rows_per_page=8)
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config(ARCH)
+    return cfg, tr.init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompt(seed, n=8):
+    vocab = get_smoke_config(ARCH).vocab
+    return (np.random.default_rng(seed).integers(0, vocab, n)
+            .astype(np.int32))
+
+
+# -- hash scheme --------------------------------------------------------------
+
+def test_hash_pages_content_position_independent():
+    """The same token span hashes to the same content bucket at any offset
+    (the index key), while the chain hash tracks the causal prefix."""
+    span = np.arange(PAGE_T, dtype=np.int32) + 7
+    a = np.concatenate([span, np.full(PAGE_T, 3, np.int32), span])
+    content, chain = hash_pages(a, PAGE_T)
+    assert content.size == chain.size == 3
+    assert content[0] == content[2]            # same span, offsets 0 and 2
+    assert chain[0] != chain[2]                # different causal prefixes
+    assert len(set(chain.tolist())) == 3
+
+
+def test_hash_pages_chain_witnesses_full_prefix():
+    """Perturbing one token in page 0 leaves later pages' CONTENT hashes
+    untouched but rewrites every chain hash — the witness that forbids
+    reusing a page whose causal prefix changed."""
+    toks = _prompt(0, 4 * PAGE_T)
+    c1, h1 = hash_pages(toks, PAGE_T)
+    mut = toks.copy()
+    mut[1] = (mut[1] + 1) % 251
+    c2, h2 = hash_pages(mut, PAGE_T)
+    assert c1[0] != c2[0]
+    np.testing.assert_array_equal(c1[1:], c2[1:])
+    assert all(h1[j] != h2[j] for j in range(4))
+    # incomplete trailing pages are never hashed
+    assert hash_pages(toks[:PAGE_T + 1], PAGE_T)[0].size == 1
+
+
+# -- store bookkeeping --------------------------------------------------------
+
+def _store(n_pages=8):
+    return KVReuseStore(n_pages, base_gid=100, page_t=PAGE_T)
+
+
+def test_match_excludes_final_prompt_page_and_diverged_chains():
+    """The final prompt token's page must be scanned (it produces the
+    first-token logits), and a diverged early page poisons every later
+    page's chain — substring matching must NOT hand those out."""
+    store = _store()
+    stream = _prompt(1, 5 * PAGE_T)
+    store.publish(stream, n_pages=5)
+    res = store.match(stream, mode="substring")
+    assert res.n_matchable == 4                # page 4 holds the last token
+    assert sorted(res.pages) == [0, 1, 2, 3]
+    mut = stream.copy()
+    mut[0] = (mut[0] + 1) % 251                # diverge inside page 0
+    res2 = store.match(mut, mode="substring")
+    assert res2.pages == {}                    # chains all differ: zero hits
+
+
+def test_refcount_blocks_eviction_and_release_frees():
+    """Matched (referenced) pages are never reclaimed: a full pool rejects
+    new publishes instead; releasing the refs makes them evictable again,
+    and over-release raises (double-free guard)."""
+    store = _store(n_pages=4)
+    a = _prompt(2, 4 * PAGE_T + 1)
+    store.publish(a, n_pages=4)
+    res = store.match(a, mode="substring")     # acquires refs on pages 0-3
+    held = list(res.pages.values())
+    b = _prompt(3, 2 * PAGE_T)
+    assert store.publish(b, n_pages=2) == []   # nothing reclaimable
+    assert store.stats()["rejected"] == 2
+    store.release(held)
+    new = store.publish(b, n_pages=2)
+    assert len(new) == 2                       # LRU-evicted a's front pages
+    assert store.stats()["evicted"] == 2
+    with pytest.raises(ValueError):
+        store.release([held[0]])               # refcount already zero
+
+
+def test_substring_recovers_tail_past_evicted_front():
+    """LRU eviction punches front-of-history holes: prefix matching stops
+    dead at the first hole, substring matching recovers the surviving
+    interior (the MemGPT-style gap the agentic bench measures)."""
+    store = _store(n_pages=8)
+    a = _prompt(4, 6 * PAGE_T + 1)             # 6 matchable pages
+    store.publish(a, n_pages=6)
+    store.publish(_prompt(5, 2 * PAGE_T), n_pages=2)   # pool now full
+    store.publish(_prompt(6, 2 * PAGE_T), n_pages=2)   # evicts a's pages 0-1
+    pre = store.match(a, mode="prefix")
+    assert pre.pages == {}                     # hole at page 0: nothing
+    sub = store.match(a, mode="substring")
+    assert sorted(sub.pages) == [2, 3, 4, 5]   # tail recovered
+    store.release(list(sub.pages.values()))
+
+
+# -- end-to-end through the scheduler ----------------------------------------
+
+def _sched(cfg_params, reuse_pages, lanes=2, segments=None, patience=16,
+           mode="substring", tenants=(("t", 1.0),)):
+    cfg, params = cfg_params
+    eng = ServeEngine(cfg, params, ServeConfig(
+        **BASE_KW, lanes=lanes, kv_segments=segments or lanes,
+        reuse_pages=reuse_pages))
+    sched = Scheduler(eng, [Tenant(n, w) for n, w in tenants],
+                      SchedConfig(preempt_patience=patience,
+                                  reuse_match=mode))
+    return eng, sched
+
+
+def test_reuse_bit_exact_with_hits_and_metered_reads(cfg_params):
+    """Sequential requests sharing a system prefix: reuse must not change a
+    single output token, must actually hit pages and save prefill tokens,
+    and installed pages are charged to the admitting tenant's read meters
+    at admission."""
+    sys_p, u1, u2 = _prompt(10, 12), _prompt(11, 7), _prompt(12, 6)
+    prompts = [np.concatenate([sys_p, u1]),
+               np.concatenate([sys_p, u1, u2]),     # extends the first
+               np.concatenate([sys_p, u2])]         # shares only sys_p
+
+    def run(reuse_pages, mode="substring"):
+        eng, sched = _sched(cfg_params, reuse_pages, mode=mode)
+        outs = []
+        for p in prompts:
+            r = sched.submit("t", p, max_new=4)
+            sched.run(max_steps=400)
+            outs.append(list(r.out))
+        return outs, eng, sched
+
+    base, _, _ = run(0)
+    for mode in ("prefix", "substring"):
+        outs, eng, sched = run(16, mode)
+        assert outs == base
+        st = eng.reuse.stats()
+        assert st["page_hits"] > 0 and st["tokens_saved"] > 0
+        assert st["published"] > 0
+        assert sum(st.values()) >= 0            # schema sanity
+        ts = sched.tenant_stats["t"]
+        assert ts.fast_reads + ts.slow_reads > 0
+
+
+def test_reuse_requires_eligible_arch(cfg_params):
+    """The store is gated to single-block attention stacks: recurrent
+    archs (whose lane state is not pure paged KV) must refuse it."""
+    cfg = get_smoke_config("xlstm-1.3b")
+    params = tr.init_params(cfg, jax.random.PRNGKey(1))
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params, ServeConfig(
+            max_seq=32, paged=True, page_t=4, hot_slots=4,
+            migration_interval=4, lanes=1, reuse_pages=8))
+
+
+def test_preempt_resume_with_shared_refcount_pages(cfg_params):
+    """A lane holding shared (refcount > 1) pool pages is preempted, the
+    lane serves another request that references the SAME pool pages, and
+    the original resumes bit-exactly: no clobbered payload, no double-free,
+    and every reference is returned on finish."""
+    cfg, params = cfg_params
+    shared = _prompt(20, 16)                   # 3 matchable pages
+    long_p = np.concatenate([shared, _prompt(21, 4)])
+
+    ref_eng = ServeEngine(cfg, params, ServeConfig(
+        **{**BASE_KW, "resources": ()}))
+
+    def reference(prompt, n):
+        return list(ref_eng.generate(np.asarray(prompt)[None],
+                                     n_tokens=n)[0])
+
+    eng, sched = _sched(cfg_params, reuse_pages=16, lanes=1, segments=2,
+                        patience=4,
+                        tenants=(("long", 1.0), ("short", 4.0)))
+    seed_req = sched.submit("long", shared, max_new=4)   # publishes pages
+    sched.run(max_steps=200)
+    assert eng.reuse.stats()["published"] > 0
+
+    rl = sched.submit("long", long_p, max_new=20)        # holds shared refs
+    for _ in range(10):
+        sched.step()
+    rs = sched.submit("short", shared, max_new=4)        # same shared pages
+    saw_shared = False
+    for _ in range(400):
+        if rs.state == rl.state == "finished":
+            break
+        saw_shared = saw_shared or any(v > 1 for v in eng.reuse.ref.values())
+        sched.step()
+    assert rl.preemptions >= 1                 # the lane really was taken
+    assert saw_shared                          # both requests held one page
+    assert rl.out == reference(long_p, 20)     # bit-exact across preemption
+    assert rs.out == reference(shared, 4)
+    assert seed_req.out == reference(shared, 4)
+    assert sum(eng.reuse.ref.values()) == 0    # every ref returned

@@ -280,8 +280,31 @@ def _bench_doc(tmp_path, mutate=None):
                "chunk": 64, "lanes": 2, "seed": 0, "tokens_match": True,
                "ttft_ratio": 0.05, "token": pf_arm(0, 4000.0),
                "chunked": pf_arm(64, 200.0)}
+    def reuse_arm(mode, pool, hit, steady):
+        stats = None
+        if mode != "off":
+            stats = {"pool_pages": pool, "indexed": 30, "free": 2,
+                     "shared_refs": 5, "lookups": 40, "matchable": 200,
+                     "page_hits": int(200 * hit), "hit_rate": hit,
+                     "tokens_saved": int(200 * hit) * 4, "published": 60,
+                     "evicted": 20, "rejected": 1,
+                     "shared_mass_share": 0.3}
+        return {"mode": mode, "reuse_pages": pool, "steps": 240,
+                "completed": 24, "tokens": 96, "compile_s": 3.0,
+                "wall_s": 9.0, "kv_hit_steady": steady,
+                "ttft_ms": {"p50": 30.0, "p99": 60.0, "mean": 35.0, "n": 24},
+                "reuse": stats}
+    kv_reuse = {"arch": "a", "trace": "agentic", "seed": 0,
+                "trace_steps": 224, "turns": 24, "lanes": 4, "page_t": 4,
+                "reuse_pages": 32, "prefill_chunk": 8,
+                "tenants": {"agent-a": 1.0, "agent-b": 1.0},
+                "tokens_match": True, "prefill_tokens_saved": 776,
+                "hit_rate_gap": 0.04,
+                "off": reuse_arm("off", 0, 0.0, 0.13),
+                "prefix": reuse_arm("prefix", 32, 0.63, 0.13),
+                "substring": reuse_arm("substring", 32, 0.67, 0.136)}
     doc = {"quick": True, "cases": [case], "mass_ab": mass_ab,
-           "prefill": prefill}
+           "prefill": prefill, "kv_reuse": kv_reuse}
     if mutate:
         mutate(doc)
     p = tmp_path / "BENCH_serve.json"
@@ -345,6 +368,38 @@ def test_validate_bench_rejects_violations(tmp_path):
         doc["prefill"]["prompt_len"] = 64
     assert any("512" in e for e in validate(_bench_doc(tmp_path,
                                                        short_prompt)))
+
+    def reuse_tokens_diverge(doc):
+        doc["kv_reuse"]["tokens_match"] = False
+    assert any("KV reuse changed" in e
+               for e in validate(_bench_doc(tmp_path, reuse_tokens_diverge)))
+
+    def reuse_no_savings(doc):
+        doc["kv_reuse"]["prefill_tokens_saved"] = 0
+    assert any("saved no prefill" in e
+               for e in validate(_bench_doc(tmp_path, reuse_no_savings)))
+
+    def hole_gap_lost(doc):
+        doc["kv_reuse"]["substring"]["reuse"]["hit_rate"] = 0.63
+    assert any("hole-skipping" in e
+               for e in validate(_bench_doc(tmp_path, hole_gap_lost)))
+
+    def reuse_degrades_tiering(doc):
+        doc["kv_reuse"]["substring"]["kv_hit_steady"] = 0.05
+    assert any("degraded tiering" in e
+               for e in validate(_bench_doc(tmp_path,
+                                            reuse_degrades_tiering)))
+
+    def off_arm_has_stats(doc):
+        doc["kv_reuse"]["off"]["reuse"] = \
+            doc["kv_reuse"]["prefix"]["reuse"]
+    assert any("store was not disabled" in e
+               for e in validate(_bench_doc(tmp_path, off_arm_has_stats)))
+
+    def reuse_stat_missing(doc):
+        del doc["kv_reuse"]["substring"]["reuse"]["tokens_saved"]
+    assert any("reuse stats missing" in e
+               for e in validate(_bench_doc(tmp_path, reuse_stat_missing)))
 
 
 # ---------------------------------------------------------------------------

@@ -168,14 +168,13 @@ def test_latency_split_synthetic_timestamps():
     np.testing.assert_allclose(rows["tpot_ms"]["mean"],
                                (20 + 20 + 40) / 3, atol=1e-6)
     assert rows["tpot_ms"]["n"] == 3
-    # deprecated combined row: 5 gaps, TTFT outliers drag its p99 up
-    assert rows["latency_ms"]["n"] == 5
-    assert rows["latency_ms"]["p99"] > rows["tpot_ms"]["p99"]
+    # the deprecated combined latency_ms row is gone (one-release window)
+    assert "latency_ms" not in rows
     empty = Scheduler._latency_rows([])
     assert empty["ttft_ms"]["n"] == empty["tpot_ms"]["n"] == 0
 
 
-def test_report_carries_split_and_deprecated_rows(cfg_params):
+def test_report_carries_split_rows(cfg_params):
     eng = _engine(cfg_params)
     sched = Scheduler(eng, [Tenant("a")], SchedConfig(prefill_chunk=8))
     sched.submit("a", _prompt(9, 12), max_new=4)
@@ -184,7 +183,7 @@ def test_report_carries_split_and_deprecated_rows(cfg_params):
     for row in [rep, rep["tenants"]["a"]]:
         assert row["ttft_ms"]["n"] == 1
         assert row["tpot_ms"]["n"] == 3
-        assert row["latency_ms"]["n"] == 4          # deprecated, still there
+        assert "latency_ms" not in row
         assert row["tpot_ms"]["p99"] > 0
 
 

@@ -164,7 +164,9 @@ def test_report_and_per_tenant_stats(cfg_params):
     for row in rep["tenants"].values():
         assert row["completed"] == 1 and row["tokens"] == 5
         assert 0.0 <= row["kv_hit_rate"] <= 1.0
-        assert row["latency_ms"]["n"] == 5
+        assert row["ttft_ms"]["n"] == 1
+        assert row["tpot_ms"]["n"] == 4
+        assert "latency_ms" not in row      # combined row removed
     # per-tenant accounting actually saw KV traffic
     assert any(s.fast_reads + s.slow_reads > 0
                for s in sched.tenant_stats.values())
