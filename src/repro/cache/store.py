@@ -130,6 +130,11 @@ class KVReuseStore:
         token are matchable — the final token's forward pass produces the
         first-token logits, so its page must be scanned, never installed.
         Acquires one reference per matched page (release on finish).
+
+        ``lookups``/``matchable``/``page_hits`` are LOOKUP stats, counted
+        here; ``tokens_saved`` is counted only when the engine actually
+        consumes an install run (`note_consumed`) — a match abandoned
+        before installation saves nothing.
         """
         if mode not in ("prefix", "substring"):
             raise ValueError(f"unknown match mode {mode!r}")
@@ -147,11 +152,17 @@ class KVReuseStore:
         self.lookups += 1
         self.matchable += n_match
         self.page_hits += len(matched)
-        self.tokens_saved += len(matched) * self.page_t
         for gid in matched.values():
             self.ref[gid] = self.ref.get(gid, 0) + 1
             self.lru.move_to_end(gid)
         return MatchResult(pages=matched, n_matchable=n_match)
+
+    def note_consumed(self, n_pages: int) -> None:
+        """Record ``n_pages`` matched pages actually installed into a lane
+        (prefill work truly skipped) — the engine calls this from
+        `install_lane_pages`, so ``tokens_saved`` never counts a match
+        that was preempted and abandoned before consumption."""
+        self.tokens_saved += int(n_pages) * self.page_t
 
     def release(self, gids) -> None:
         """Drop one reference per gid (request finished / match abandoned)."""
@@ -182,18 +193,19 @@ class KVReuseStore:
             if mask is not None and not mask[j]:
                 continue
             key = (int(chain[j]), j)
-            bucket = self.index.setdefault(int(content[j]), {})
-            if key in bucket:
-                self.lru.move_to_end(bucket[key])
+            c = int(content[j])
+            dup = self.index.get(c, {}).get(key)
+            if dup is not None:
+                self.lru.move_to_end(dup)
                 continue
             gid = self._alloc()
             if gid is None:
-                if not bucket:
-                    del self.index[int(content[j])]
                 self.rejected += 1
                 continue
-            bucket[key] = gid
-            self.key_of[gid] = (int(content[j]),) + key
+            # _alloc's eviction may have mutated (or deleted) this content
+            # bucket — bind it only now, after allocation succeeded.
+            self.index.setdefault(c, {})[key] = gid
+            self.key_of[gid] = (c,) + key
             self.ref.setdefault(gid, 0)
             self.lru[gid] = None
             self.published += 1

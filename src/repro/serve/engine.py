@@ -712,6 +712,7 @@ class ServeEngine:
         for j, g in zip(sel % S, gsel):
             if int(j) != cur:                    # cur slot was re-zeroed
                 self._kv_flushed[(lane, int(j))] = (int(g), T)
+        self.reuse.note_consumed(locals_.size)   # tokens_saved: consumed runs
         return fast_n, int(gsel.size - fast_n)
 
     def publish_lane(self, lane: int, tokens) -> int:

@@ -104,6 +104,42 @@ def test_refcount_blocks_eviction_and_release_frees():
         store.release([held[0]])               # refcount already zero
 
 
+def test_publish_eviction_of_same_content_bucket_keeps_index_sound():
+    """REVIEW regression: publishing a page whose content hash collides
+    with the LRU victim's bucket must not orphan the bucket — _alloc's
+    eviction can delete ``index[content]`` mid-publish, and the new entry
+    must land in a fresh bucket, stay reachable via lookup_page, and stay
+    evictable (no KeyError on a later _evict)."""
+    store = KVReuseStore(2, base_gid=100, page_t=1)
+    store.publish([7], 1)                      # pool page A: content(7)@0
+    store.publish([9, 7], 2)                   # (9)@0 + (7)@1: evicts A
+    c, ch = hash_pages([9, 7], 1)
+    assert store.lookup_page(c[1], ch[1], 1) is not None   # reachable
+    store.publish([11], 1)                     # evicts (9)@0
+    store.publish([13], 1)                     # evicts (7)@1 — was KeyError
+    assert len(store.key_of) == 2
+    assert store.stats()["evicted"] == 3
+    for gid, (kc, kch, koff) in store.key_of.items():
+        assert store.lookup_page(kc, kch, koff) == gid
+
+
+def test_tokens_saved_counts_consumed_installs_only():
+    """REVIEW regression: a match that is never installed (request
+    preempted and abandoned) must not inflate tokens_saved — only
+    note_consumed (driven by install_lane_pages) charges it; match-time
+    counters stay lookup stats."""
+    store = _store()
+    stream = _prompt(7, 4 * PAGE_T + 1)
+    store.publish(stream, n_pages=4)
+    res = store.match(stream, mode="substring")
+    assert len(res.pages) == 4
+    assert store.stats()["page_hits"] == 4     # lookup stat: at match
+    assert store.stats()["tokens_saved"] == 0  # nothing consumed yet
+    store.note_consumed(3)
+    assert store.stats()["tokens_saved"] == 3 * PAGE_T
+    store.release(list(res.pages.values()))
+
+
 def test_substring_recovers_tail_past_evicted_front():
     """LRU eviction punches front-of-history holes: prefix matching stops
     dead at the first hole, substring matching recovers the surviving
@@ -215,3 +251,29 @@ def test_preempt_resume_with_shared_refcount_pages(cfg_params):
     assert rs.out == reference(shared, 4)
     assert seed_req.out == reference(shared, 4)
     assert sum(eng.reuse.ref.values()) == 0    # every ref returned
+
+
+def test_resume_keeps_shared_pages_clean_across_flush(cfg_params):
+    """REVIEW regression: resume_lane must re-seed the flush tracker's
+    clean records for installed shared pages — otherwise the next
+    _flush_kv_lanes sees every shared-mapped slot as dirty and forks the
+    whole lane to private copies, silently dropping CoW sharing after
+    every preempt/resume."""
+    shared = _prompt(30, 16)
+    long_p = np.concatenate([shared, _prompt(31, 4)])
+    eng, sched = _sched(cfg_params, reuse_pages=16, lanes=1, segments=2)
+    sched.submit("t", shared, max_new=4)       # publish the shared pages
+    sched.run(max_steps=200)
+    sched.submit("t", long_p, max_new=8)
+    for _ in range(3):                         # admit + install the run
+        sched.step()
+    assert (eng._lane_pages[0] >= eng.reuse.base_gid).sum() > 0
+    residual = eng.preempt_lane(0)
+    eng.resume_lane(0, residual)
+    mapped = eng._lane_pages[0].copy()
+    flushed = dict(eng._kv_flushed)
+    eng._flush_kv_lanes()                      # non-force: all slots clean
+    np.testing.assert_array_equal(eng._lane_pages[0], mapped)  # no fork
+    assert dict(eng._kv_flushed) == flushed    # no redundant flush traffic
+    sched.run(max_steps=400)                   # drain; refs all come home
+    assert sum(eng.reuse.ref.values()) == 0
