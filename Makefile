@@ -1,7 +1,7 @@
 PYTEST ?= python -m pytest
 
 .PHONY: test test-fast test-dist dryrun bench-serve bench-traffic \
-	bench-reuse validate-bench
+	bench-reuse bench-disagg validate-bench
 
 # full tier-1 suite (includes slow 8-host-device subprocess parity tests)
 test:
@@ -37,6 +37,14 @@ bench-traffic:
 # prefill-tokens-saved, and substring-vs-prefix hit-rate gates)
 bench-reuse:
 	PYTHONPATH=src:. python benchmarks/traffic_bench.py --quick --reuse
+
+# prefill/decode disaggregation A/B (DESIGN.md §13): the prefill-heavy trace
+# served by the unified scheduler vs the split prefill-worker/decode-worker
+# pools over the slow-tier hand-off fabric, same total lane budget — writes
+# the "disagg" section of BENCH_serve.json (bit-exactness, hand-off bytes,
+# and decode-lane TPOT-flatness-under-concurrent-prefill gates)
+bench-disagg:
+	PYTHONPATH=src:. python benchmarks/traffic_bench.py --disagg
 
 # check BENCH_serve.json against the schema documented in benchmarks/README.md
 validate-bench:

@@ -33,8 +33,26 @@ and with substring matching.  Gates: output tokens bit-exact across all
 three arms, substring prefill-tokens-saved > 0, substring page-hit rate
 strictly above prefix (hole-skipping must recover evicted-front history),
 and the substring arm's steady-state KV hit rate no worse than reuse-off.
+The ``disagg`` section (written by traffic_bench, DESIGN.md §13) carries
+the prefill/decode disaggregation A/B: the identical prefill-heavy trace
+served by the unified scheduler and by the split prefill-pool/decode-pool
+scheduler over the slow-tier hand-off fabric, same seed.  Gates: output
+tokens bit-exact across arms, the disagg arm actually handed requests off
+through the slow store (count and producer/consumer bytes nonzero), the
+decode pool's TPOT during concurrent prefill degrades <= 10% over its
+quiet-period TPOT (per-worker virtual clocks), while the unified arm shows
+a measurably larger degradation on the same trace — the disaggregation
+payoff, not a workload artifact.
+
+Every resource row is additionally held to the telemetry conservation
+laws: ``hit_rate`` must equal ``fast_reads / (fast_reads + slow_reads)``
+(every metered read is either fast or slow — none lost, none invented),
+and ``max_epoch_bytes`` — the LARGEST migration epoch, hand-off flushes
+included — must respect ``quota_bytes``, which ``last_epoch_bytes`` can
+never exceed.
+
 Run after ``make bench-serve`` / ``make bench-traffic`` /
-``make bench-reuse``:
+``make bench-reuse`` / ``make bench-disagg``:
 
     PYTHONPATH=src:. python benchmarks/validate_bench.py [path]
 """
@@ -50,8 +68,8 @@ CASE_KEYS = {
 }
 RESOURCE_KEYS = {
     "name", "fast_reads", "slow_reads", "hit_rate", "promoted", "demoted",
-    "ping_pong", "migration_bytes", "last_epoch_bytes", "quota_bytes",
-    "migration_epochs", "flush_bytes",
+    "ping_pong", "migration_bytes", "last_epoch_bytes", "max_epoch_bytes",
+    "quota_bytes", "migration_epochs", "flush_bytes",
 }
 TRACE_KEYS = {
     "trace", "seed", "arrival", "kv_mass_source", "trace_steps", "steps",
@@ -88,24 +106,56 @@ KV_REUSE_STAT_KEYS = {"pool_pages", "indexed", "free", "shared_refs",
                       "lookups", "matchable", "page_hits", "hit_rate",
                       "tokens_saved", "published", "evicted", "rejected",
                       "shared_mass_share"}
+DISAGG_KEYS = {"arch", "trace", "seed", "arrival", "trace_steps", "page_t",
+               "chunk", "total_lanes", "victim_tenant", "tokens_match",
+               "unified", "disagg"}
+DISAGG_ARM_KEYS = {"mode", "lanes", "prefill_lanes", "compile_s", "steps",
+                   "wall_s", "completed", "tokens", "preemptions",
+                   "tpot_quiet_ms", "tpot_during_ms", "tpot_n",
+                   "tpot_degradation", "ttft_ms", "handoff", "clock",
+                   "resources"}
+HANDOFF_KEYS = {"count", "bytes_out", "bytes_in", "depth_peak"}
+# Decode-lane TPOT flatness under concurrent prefill (DESIGN.md §13): the
+# disagg arm's decode worker may degrade at most 10%; the unified arm must
+# show a measurably larger hit on the identical trace for the A/B to mean
+# anything (floor calibrated well below observed unified degradation).
+DISAGG_MAX_DEGRADATION = 0.10
+UNIFIED_MIN_DEGRADATION = 0.25
 
 
 def _check_resources(tag: str, resources: dict, errors: list[str]) -> None:
+    """Schema + the telemetry conservation laws, per resource row: the
+    per-epoch quota must hold for EVERY epoch (``max_epoch_bytes``, which
+    bounds ``last_epoch_bytes`` by construction), and the reported hit
+    rate must be exactly the fast share of the metered reads — every read
+    is either fast or slow, none lost, none invented."""
     for name, row in resources.items():
         rmissing = RESOURCE_KEYS - set(row)
         if rmissing:
             errors.append(f"{tag}/{name}: missing keys {sorted(rmissing)}")
             continue
-        if row["quota_bytes"] and row["last_epoch_bytes"] > row["quota_bytes"]:
+        if row["quota_bytes"] and row["max_epoch_bytes"] > row["quota_bytes"]:
+            errors.append(
+                f"{tag}/{name}: max_epoch_bytes {row['max_epoch_bytes']}"
+                f" exceeds quota_bytes {row['quota_bytes']} — some epoch "
+                "(hand-off flushes included) broke the migration budget")
+        if row["last_epoch_bytes"] > row["max_epoch_bytes"]:
             errors.append(
                 f"{tag}/{name}: last_epoch_bytes {row['last_epoch_bytes']}"
-                f" exceeds quota_bytes {row['quota_bytes']}")
+                f" exceeds max_epoch_bytes {row['max_epoch_bytes']} — "
+                "the epoch maximum lost an epoch")
         if not 0.0 <= row["hit_rate"] <= 1.0:
             errors.append(f"{tag}/{name}: hit_rate {row['hit_rate']} "
                           "out of [0, 1]")
         if row["hit_rate"] > 0 and row["fast_reads"] == 0:
             errors.append(f"{tag}/{name}: nonzero hit_rate with zero "
                           "fast_reads — read metering is broken")
+        reads = row["fast_reads"] + row["slow_reads"]
+        expect = row["fast_reads"] / reads if reads else 0.0
+        if abs(row["hit_rate"] - expect) > 1e-9:
+            errors.append(
+                f"{tag}/{name}: hit_rate {row['hit_rate']:.6f} != "
+                f"fast/(fast+slow) {expect:.6f} — read conservation lost")
 
 
 def _check_traffic(traffic: dict, errors: list[str]) -> None:
@@ -239,6 +289,62 @@ def _check_kv_reuse(kr: dict, errors: list[str]) -> None:
             f"reuse-off {o:.3f} — reuse degraded tiering behaviour")
 
 
+def _check_disagg(d: dict, errors: list[str]) -> None:
+    """The prefill/decode disaggregation gates (DESIGN.md §13): the split
+    must never change tokens, the hand-off fabric must actually carry
+    bytes both ways, and the decode worker's TPOT must stay flat under
+    concurrent prefill while the unified arm measurably degrades."""
+    missing = DISAGG_KEYS - set(d)
+    if missing:
+        errors.append(f"disagg: missing keys {sorted(missing)}")
+        return
+    for name in ("unified", "disagg"):
+        arm = d[name]
+        amissing = DISAGG_ARM_KEYS - set(arm)
+        if amissing:
+            errors.append(f"disagg/{name}: missing {sorted(amissing)}")
+            return
+        if HANDOFF_KEYS - set(arm["handoff"]):
+            errors.append(f"disagg/{name}: incomplete handoff row")
+            return
+        for side in ("during", "quiet"):
+            if arm["tpot_n"].get(side, 0) < 8:
+                errors.append(
+                    f"disagg/{name}: only {arm['tpot_n'].get(side, 0)} "
+                    f"{side}-prefill decode gaps — the trace never "
+                    "exercised the contention the A/B measures")
+        _check_resources(f"disagg/{name}", arm["resources"], errors)
+    if not d["tokens_match"]:
+        errors.append("disagg: output tokens diverge between the unified "
+                      "and disaggregated schedulers — bit-exactness lost")
+    ho = d["disagg"]["handoff"]
+    if not (ho["count"] > 0 and ho["bytes_out"] > 0 and ho["bytes_in"] > 0):
+        errors.append(
+            f"disagg: hand-off fabric idle (count={ho['count']}, "
+            f"bytes_out={ho['bytes_out']}, bytes_in={ho['bytes_in']}) — "
+            "requests never crossed the slow tier")
+    if d["unified"]["handoff"]["count"] != 0:
+        errors.append("disagg: unified arm recorded hand-offs — the "
+                      "baseline ran the split scheduler")
+    dd = d["disagg"]["tpot_degradation"]
+    ud = d["unified"]["tpot_degradation"]
+    if not dd <= DISAGG_MAX_DEGRADATION:
+        errors.append(
+            f"disagg: decode-lane TPOT degrades {dd:+.1%} with a "
+            f"concurrent prefill on the dedicated lane (gate <= "
+            f"{DISAGG_MAX_DEGRADATION:.0%}) — the split did not isolate "
+            "the decode worker")
+    if not ud >= UNIFIED_MIN_DEGRADATION:
+        errors.append(
+            f"disagg: unified-arm TPOT degradation {ud:+.1%} below the "
+            f"{UNIFIED_MIN_DEGRADATION:.0%} floor — the trace carries no "
+            "prefill contention, so the flatness gate proves nothing")
+    if not dd < ud:
+        errors.append(
+            f"disagg: disagg degradation {dd:+.1%} not below unified "
+            f"{ud:+.1%} — disaggregation bought nothing on this trace")
+
+
 def _check_prefill(p: dict, errors: list[str]) -> None:
     """The chunked-prefill TTFT gate (DESIGN.md §11): a >= 512-token prompt
     served through the Scheduler must reach its first token in <= 1/4 the
@@ -279,11 +385,11 @@ def validate(path: str) -> list[str]:
         doc = json.load(f)
     errors: list[str] = []
     if not set(doc) <= {"quick", "cases", "traffic", "mass_ab", "prefill",
-                        "kv_reuse"} or \
+                        "kv_reuse", "disagg"} or \
             not {"quick", "cases"} <= set(doc):
         errors.append(f"top-level keys {sorted(doc)} not in expected "
                       "['cases', 'quick'] (+ optional 'traffic', 'mass_ab', "
-                      "'prefill', 'kv_reuse')")
+                      "'prefill', 'kv_reuse', 'disagg')")
         return errors
     if not doc["cases"] and "traffic" not in doc:
         errors.append("no benchmark cases recorded")
@@ -311,6 +417,8 @@ def validate(path: str) -> list[str]:
         _check_prefill(doc["prefill"], errors)
     if "kv_reuse" in doc:
         _check_kv_reuse(doc["kv_reuse"], errors)
+    if "disagg" in doc:
+        _check_disagg(doc["disagg"], errors)
     return errors
 
 
@@ -334,9 +442,13 @@ def main() -> int:
     kr = doc.get("kv_reuse")
     reuse = (f", kv_reuse saved {kr['prefill_tokens_saved']} tokens "
              f"(sub-pre gap {kr['hit_rate_gap']:+.3f})" if kr else "")
+    dg = doc.get("disagg")
+    disagg = (f", disagg TPOT {dg['disagg']['tpot_degradation']:+.1%} vs "
+              f"unified {dg['unified']['tpot_degradation']:+.1%}"
+              if dg else "")
     print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces{gap}{ttft}"
-          f"{reuse}, schema + quota + adaptivity + fidelity + prefill + "
-          "reuse checks pass")
+          f"{reuse}{disagg}, schema + quota + conservation + adaptivity + "
+          "fidelity + prefill + reuse + disagg checks pass")
     return 0
 
 

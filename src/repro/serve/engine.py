@@ -105,7 +105,15 @@ class ServeConfig:
 
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
-                 ep_axes=None):
+                 ep_axes=None, attach_to: "ServeEngine | None" = None):
+        """``attach_to`` builds a WORKER engine over another engine's tiered
+        store (DESIGN.md §13): the daemon, every resource handle (placement
+        maps + payload buffers) and the content-addressed reuse store are
+        SHARED with ``attach_to`` — the two engines are two workers on one
+        hand-off fabric.  The attached engine may differ in lane count but
+        must match the owner's cache/store geometry exactly (its preemption
+        residuals transplant onto the owner's lanes); it never ticks the
+        shared daemon — migration cadence belongs to the owning engine."""
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -126,18 +134,27 @@ class ServeEngine:
                     f"store must carry the whole per-position state (single "
                     f"attention pattern position, no recurrent blocks, no "
                     f"dense prologue)")
-        self.daemon = tm.NeoMemDaemon()
+        self._daemon_owner = attach_to is None
         self._embed_rpp = scfg.embed_rows_per_page or tm.EMBED_ROWS_PER_PAGE
-        self._register_resources()
-        # content-addressed shared pool (repro.cache, DESIGN.md §12): pool
-        # page ids sit ABOVE every private segment in the KV address space
-        self.reuse = None
-        self.reuse_mass = {"shared": 0.0, "total": 0.0}
-        if scfg.reuse_pages:
-            n_segments = scfg.kv_segments or scfg.lanes
-            self.reuse = KVReuseStore(
-                scfg.reuse_pages, base_gid=n_segments * self.pages_per_seq,
-                page_t=scfg.page_t)
+        if attach_to is not None:
+            self._check_attach_geometry(attach_to)
+            self.daemon = attach_to.daemon
+            self.reuse = attach_to.reuse
+            self.reuse_mass = attach_to.reuse_mass
+        else:
+            self.daemon = tm.NeoMemDaemon()
+            self._register_resources()
+            # content-addressed shared pool (repro.cache, DESIGN.md §12):
+            # pool page ids sit ABOVE every private segment in the KV
+            # address space
+            self.reuse = None
+            self.reuse_mass = {"shared": 0.0, "total": 0.0}
+            if scfg.reuse_pages:
+                n_segments = scfg.kv_segments or scfg.lanes
+                self.reuse = KVReuseStore(
+                    scfg.reuse_pages,
+                    base_gid=n_segments * self.pages_per_seq,
+                    page_t=scfg.page_t)
         self._kernel_mass = scfg.paged and scfg.kv_mass_source == "kernel"
         self._want_streams = "experts" in self.daemon or \
             ("kv" in self.daemon and self._kernel_mass)
@@ -162,6 +179,24 @@ class ServeEngine:
         self._lane_pages = np.full((max(scfg.lanes, 1), pps), -1, np.int64)
         # locals whose slow-store row holds a complete page (publish witness)
         self._lane_full = np.zeros((max(scfg.lanes, 1), pps), bool)
+
+    def _check_attach_geometry(self, owner: "ServeEngine") -> None:
+        """An attached worker engine must agree with the owner on every
+        field that shapes the shared store or the per-lane cache geometry —
+        a residual snapshotted on one engine's lane is installed verbatim
+        onto the other's (ring arrays sized by hot_slots/page_t, segment
+        address space sized by max_seq/kv_segments).  Only the lane count
+        may differ: that is the worker-pool split."""
+        if not (self.lane_mode and owner.lane_mode):
+            raise ValueError("attach_to requires lane mode on both engines")
+        mine = dataclasses.asdict(self.scfg)
+        theirs = dataclasses.asdict(owner.scfg)
+        mine.pop("lanes"), theirs.pop("lanes")
+        diff = [k for k in mine if mine[k] != theirs[k]]
+        if diff:
+            raise ValueError(
+                f"attached engine geometry differs from owner on {diff} — "
+                "only ServeConfig.lanes may differ between workers")
 
     def _register_resources(self) -> None:
         cfg, scfg = self.cfg, self.scfg
@@ -216,7 +251,10 @@ class ServeEngine:
                 raise KeyError(f"unknown serve resource kind {kind!r}; "
                                f"known: {tm.resource_kinds()}")
             handle = self.daemon.register(res)
-            handle.bind_data(payload)
+            # the KV slow store starts as zero scratch — pages only become
+            # resident (write-witnessed) once a flush lands on them; every
+            # other resource binds a payload that is valid from step 0
+            handle.bind_data(payload, initially_valid=(kind != "kv"))
 
     # -- payload construction (the migration data plane, DESIGN.md §8) -------
     def _kv_row_shape(self) -> tuple[int, ...]:
@@ -619,11 +657,13 @@ class ServeEngine:
                 {k: np.asarray(v[lane]) for k, v in entry.items()})
         return residual
 
-    def resume_lane(self, lane: int, residual: dict) -> None:
+    def resume_lane(self, lane: int, residual: dict) -> int:
         """Re-install a preempted request into a lane: residual bookkeeping
         is restored and the representative entry's resident ring pages are
         gathered back through the tiered KV store (fast-tier copy when
-        promoted, slow-tier fallback — bit-exact either way)."""
+        promoted, slow-tier fallback — bit-exact either way).  Returns the
+        number of ring pages gathered back up (the consumer-side hand-off
+        volume, DESIGN.md §13)."""
         for entry, snap in zip(self.cache["blocks"], residual["blocks"]):
             for k, v in snap.items():
                 entry[k] = entry[k].at[:, lane].set(
@@ -636,17 +676,21 @@ class ServeEngine:
         self._invalidate_lane_flush(lane)
         self._lane_pages[lane] = residual.get("pages", -1)
         self._lane_full[lane] = residual.get("full", False)
-        entry = self._paged_entry()
         segment = residual["segment"]
+        # restore the lane->segment binding NOW, not at the next
+        # advance_lanes: a hand-off install may flush or publish this lane
+        # (e.g. a max_new=1 request finishing at install) before any step
+        self._lane_segments[lane] = segment
+        entry = self._paged_entry()
         if entry is None or segment < 0:
-            return
+            return 0
         plen = np.asarray(entry["page_len"])[0, lane][None]      # (1, S)
         cur = np.asarray(entry["cur_slot"])[0, lane][None]       # (1,)
         pos = np.asarray([residual["pos"]])
         local = self._ring_page_ids(plen, cur, pos, self.scfg.page_t)[0]
         slots = np.flatnonzero(local >= 0)
         if slots.size == 0:
-            return
+            return 0
         # shared pool pages re-gather from the pool, private ones from the
         # segment — the page-table row restored above decides per page
         tabled = self._lane_pages[lane, local[slots]]
@@ -662,6 +706,7 @@ class ServeEngine:
         for i, s in enumerate(slots):
             self._kv_flushed[(lane, int(s))] = (int(gids[i]),
                                                 int(plen[0, s]))
+        return int(slots.size)
 
     def _kv_split_width(self) -> int:
         """Last-axis K width inside a concatenated [K | V] payload row."""
@@ -669,6 +714,56 @@ class ServeEngine:
         if cfg.mla is not None:
             return cfg.mla.kv_lora + cfg.mla.d_rope
         return cfg.head_dim
+
+    # -- disaggregated prefill/decode hand-off (DESIGN.md §13) ----------------
+    def handoff_lane(self, lane: int) -> dict:
+        """Producer-side hand-off: detach a finished prefill from its lane.
+
+        Mechanically a preemption — the force-flush pushes every resident
+        ring page down into the request's slow-store segment
+        (``migrate.write_pages``) and the residual snapshots everything the
+        KV payload does not carry — plus the fabric metering:
+        ``handoff_bytes`` counts the whole consumed prefix once, the bulk
+        KV bytes that crossed the slow tier producer-side (each page was
+        flushed exactly once as prefill filled it, or here if partial).
+        The residual is the hand-off token a decode worker passes to
+        :meth:`install_handoff`."""
+        residual = self.preempt_lane(lane)
+        n_pages = -(-residual["pos"] // self.scfg.page_t)
+        row = self.daemon["kv"].mem.row_bytes if "kv" in self.daemon else 0
+        residual["handoff_bytes"] = n_pages * row
+        return residual
+
+    def segment_resident(self, residual: dict) -> bool:
+        """Consumer-side admission gate (DESIGN.md §13): is the hand-off's
+        consumed prefix fully write-witnessed in the slow store?  Checks
+        every page up to ``residual["pos"]`` — the final, possibly partial,
+        page included (the hand-off force-flush writes it) — through the
+        request's copy-on-write page table, so admission-matched shared
+        pool pages count via their pool row (DESIGN.md §12)."""
+        if "kv" not in self.daemon or residual["segment"] < 0:
+            return True
+        gids = tm.segment_page_ids(
+            residual["segment"], residual["pos"], self.scfg.page_t,
+            self.pages_per_seq, table=residual.get("pages"))
+        return bool(self.daemon["kv"].pages_written(gids).all())
+
+    def install_handoff(self, lane: int, residual: dict) -> int:
+        """Consumer-side hand-off: install a prefilled request into a decode
+        lane, pulling its ring window back up THROUGH the placement-table
+        read path (``resume_lane``'s ``read_rows`` — fast-tier copy when the
+        daemon already promoted the page, slow-tier gather otherwise, so the
+        tiering daemon treats the new request's pages exactly like any
+        slow-resident data).  Refuses a segment the producer has not fully
+        flushed — callers gate admission on :meth:`segment_resident` first.
+        Returns the consumer-side hand-off bytes (gathered pages x row)."""
+        if not self.segment_resident(residual):
+            raise RuntimeError(
+                f"segment {residual['segment']} not fully resident — "
+                "hand-off installed before the prefill flush completed")
+        gathered = self.resume_lane(lane, residual)
+        row = self.daemon["kv"].mem.row_bytes if "kv" in self.daemon else 0
+        return gathered * row
 
     def _invalidate_lane_flush(self, lane: int) -> None:
         for key in [k for k in self._kv_flushed if k[0] == lane]:
@@ -1004,6 +1099,11 @@ class ServeEngine:
         ticks = (self.step_count + n) // interval - self.step_count // interval
         self.step_count += n
         if not self.daemon.resources:
+            return
+        if not self._daemon_owner:
+            # an attached worker engine (DESIGN.md §13) never drives the
+            # shared daemon: migration cadence is the owner's; this worker's
+            # dirty pages flush per chunk / at hand-off, not per tick
             return
         for _ in range(ticks):
             if "kv" in self.daemon:

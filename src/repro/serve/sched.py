@@ -25,9 +25,37 @@ The request lifecycle (DESIGN.md §9) over the ServeEngine lane substrate:
   wrapping over old pages is a real fast-tier eviction, not data loss.
 * **preempt/finish** — the starvation guard: a tenant whose queue head has
   waited longer than ``preempt_patience`` steps while the tenant holds no
-  lane preempts the most over-served tenant's youngest request.  Preemption
-  force-flushes the lane's resident pages to the slow tier and snapshots
-  the residual (`ServeEngine.preempt_lane`); resuming restores bit-exactly.
+  lane in that pool preempts the most over-served tenant's youngest
+  request.  Preemption force-flushes the lane's resident pages to the slow
+  tier and snapshots the residual (`ServeEngine.preempt_lane`); resuming
+  restores bit-exactly.
+
+**Disaggregated prefill/decode** (DESIGN.md §13, ``SchedConfig.
+prefill_lanes > 0``): the scheduler splits into two worker pools over the
+SAME tiered slow store — the CXL-pooled hand-off fabric.  A dedicated
+prefill engine (attached to the decode engine's daemon, its own lanes/
+ring) runs only `ServeEngine.prefill_lane` chunks; each finished chunk's
+pages flush down into the request's slow-store segment via the migration
+data plane (``migrate.write_pages``).  When the last chunk lands the
+request detaches as a hand-off residual (`ServeEngine.handoff_lane`) and
+queues for the decode pool, which admits it only once its segment is
+fully write-witnessed in the slow tier (`ServeEngine.segment_resident`)
+and pulls the ring window back up THROUGH the placement-table read path
+(`ServeEngine.install_handoff`) — the daemon promotes the new request's
+hot pages exactly like any slow-resident data.  The first output token is
+emitted (TTFT stamped) at hand-off completion, from the final chunk's
+last-position logits.  Outputs are bit-exact against the unified
+scheduler: sampling keys derive from (seed, rid, token index) and the
+chunked scan equals streaming, so the split changes WHERE work runs,
+never what is computed.
+
+Each pool accrues wall time on its own **virtual worker clock**
+(``Scheduler.clock``): a worker's clock only advances while its own
+engine/host work runs, so on a single host the decode clock measures
+decode-lane latency the way a dedicated decode box would experience it —
+hand-off install and gather costs included, the other worker's prefill
+scans excluded.  The unified scheduler runs everything on the decode
+clock, which is how a colocated deployment experiences a long prompt.
 
 Per-tenant telemetry rides the same `TierStats` schema the daemon uses:
 each step the scheduler looks the lanes' resident pages up in the KV
@@ -70,6 +98,15 @@ class SchedConfig:
     # token-at-a-time streaming; prompts no longer than the chunk also
     # fall back to the streaming loop (bit-exact either way).
     prefill_chunk: int = 0
+    # Disaggregation (DESIGN.md §13): > 0 reserves a DISJOINT pool of that
+    # many prefill-worker lanes on an attached engine; the decode pool
+    # keeps the owning engine's lanes.  Requests prefill chunk-by-chunk on
+    # the prefill pool, hand off through the shared slow store, and decode
+    # on the decode pool — requires prefill_chunk > 0 (the chunked scan is
+    # the prefill worker's unit of work).  Size the KV slow store for both
+    # pools: ServeConfig.kv_segments >= lanes + prefill_lanes, plus slack
+    # for hand-offs in flight.  0 = unified scheduling (unchanged).
+    prefill_lanes: int = 0
     # Sampling (models/decode.py::sample_tokens): temperature <= 0 is exact
     # argmax (the default — zero overhead); with temperature > 0 each
     # emitted token is drawn with a per-request PRNG key folded from
@@ -88,25 +125,37 @@ class SchedConfig:
 
 @dataclasses.dataclass
 class Request:
-    """One request's lifecycle record (see module docstring)."""
+    """One request's lifecycle record (see module docstring).
+
+    ``state`` walks: queued -> running -> finished in the unified
+    scheduler (preempted in between on a starvation guard); the
+    disaggregated scheduler inserts the hand-off leg — queued -> prefill
+    (on a prefill-pool lane) -> handoff (detached, waiting for slow-tier
+    residency + a decode lane) -> running (decode pool) -> finished."""
 
     rid: int
     tenant: str
     prompt: np.ndarray           # (P,) int32 prompt tokens
     max_new: int                 # output tokens to generate
     arrival_step: int = 0
-    state: str = "queued"        # queued | running | preempted | finished
-    lane: int = -1
+    state: str = "queued"  # queued | prefill | handoff | running | preempted
+    #                        | finished
+    lane: int = -1               # pool-local lane index (state names the pool)
     segment: int = -1            # KV slow-store segment (kept while preempted)
     pos: int = 0                 # tokens consumed so far (prompt + generated)
     out: list = dataclasses.field(default_factory=list)
-    residual: dict | None = None  # preemption snapshot (engine residual)
+    residual: dict | None = None  # preemption/hand-off snapshot (engine)
     queued_since: int = 0
     admitted_step: int = -1
     finished_step: int = -1
     preemptions: int = 0
     arrival_time: float = 0.0
     token_times: list = dataclasses.field(default_factory=list)
+    # per-token worker-clock stamps + the step each token was emitted on:
+    # the disagg A/B classifies decode gaps by what the prefill worker was
+    # doing between the two stamps (benchmarks/traffic_bench.py)
+    token_clock: list = dataclasses.field(default_factory=list)
+    token_steps: list = dataclasses.field(default_factory=list)
     key: np.ndarray | None = None  # per-request PRNG key (sampling mode)
     # admission-matched shared pages not yet installed: local page -> pool
     # gid (install consumes runs as prefill reaches them)
@@ -149,8 +198,41 @@ class Scheduler:
         self._next_rid = 0
         self.tenant_stats = {t: TierStats(name=t) for t in self.tenants}
         self._sample_master = jax.random.PRNGKey(self.scfg.seed)
+        # per-worker virtual clocks (module docstring): unified mode runs
+        # everything on "decode"; disagg charges each pool's engine/host
+        # work to its own worker
+        self.clock = {"prefill": 0.0, "handoff": 0.0, "decode": 0.0}
+        self._seg_role: str | None = None
+        self._seg_t0 = 0.0
+        # prefill_busy[s]: was a prefill in flight during step s?  (the
+        # disagg A/B's gap classifier — maintained in both modes)
+        self.prefill_busy: list[bool] = []
+        # -- disaggregated pools (DESIGN.md §13) --
+        self.disagg = self.scfg.prefill_lanes > 0
+        self.handoff: list[Request] = []    # detached, awaiting decode admit
+        self.handoffs = 0
+        self.handoff_bytes_out = 0          # producer flush (prefill -> slow)
+        self.handoff_bytes_in = 0           # consumer gather (slow -> decode)
+        self.handoff_peak = 0
+        if self.disagg:
+            if self.scfg.prefill_chunk <= 0:
+                raise ValueError(
+                    "disaggregated scheduling (prefill_lanes > 0) requires "
+                    "prefill_chunk > 0 — the chunked scan is the prefill "
+                    "worker's unit of work (DESIGN.md §13)")
+            pcfg = dataclasses.replace(engine.scfg,
+                                       lanes=self.scfg.prefill_lanes)
+            self.peng = ServeEngine(engine.cfg, engine.params, pcfg,
+                                    ep_axes=engine.ep, attach_to=engine)
+            self.pre_lanes: list[Request | None] = \
+                [None] * self.scfg.prefill_lanes
+        else:
+            self.peng = None
+            self.pre_lanes = []
         if engine.cache is None:
             engine.start_lanes()
+        if self.peng is not None and self.peng.cache is None:
+            self.peng.start_lanes()
 
     # -- request intake -------------------------------------------------------
     def submit(self, tenant: str, prompt: np.ndarray,
@@ -181,84 +263,159 @@ class Scheduler:
         self.queued_peak = max(self.queued_peak, len(self.queue))
         return req
 
+    # -- worker clocks --------------------------------------------------------
+    def _enter(self, role: str) -> None:
+        """Start charging wall time to ``role``'s virtual clock."""
+        self._close_seg()
+        self._seg_role, self._seg_t0 = role, time.perf_counter()
+
+    def _close_seg(self) -> None:
+        if self._seg_role is not None:
+            self.clock[self._seg_role] += time.perf_counter() - self._seg_t0
+            self._seg_role = None
+
+    def _now(self, role: str) -> float:
+        """``role``'s virtual clock reading, mid-segment included."""
+        t = self.clock[role]
+        if self._seg_role == role:
+            t += time.perf_counter() - self._seg_t0
+        return t
+
     # -- admission / preemption ----------------------------------------------
-    def _running_by_tenant(self) -> dict[str, int]:
+    def _pool(self, role: str) -> tuple[ServeEngine, list]:
+        if role == "prefill":
+            return self.peng, self.pre_lanes
+        return self.eng, self.lanes
+
+    def _running_by_tenant(self, lanes: list) -> dict[str, int]:
         counts = {t: 0 for t in self.tenants}
-        for r in self.lanes:
+        for r in lanes:
             if r is not None:
                 counts[r.tenant] += 1
         return counts
 
-    def _lane_shares(self) -> dict[str, int]:
-        """Target decode-lane allocation per tenant: the daemon's quota split
-        applied to lanes — demand = running + queued, weighted, clamped."""
-        running = self._running_by_tenant()
-        demands = {t: running[t] for t in self.tenants}
-        for r in self.queue:
-            demands[r.tenant] += 1
-        caps = {t: self.n_lanes for t in self.tenants}
-        weights = {t: self.tenants[t].weight for t in self.tenants}
-        return split_quota(self.n_lanes, demands, caps, weights)
+    def _candidates(self, role: str) -> list[Request]:
+        """Admissible requests for a pool, in service order.
 
-    def _admit(self) -> None:
-        if self.queue:
-            self._maybe_preempt()
-        free = [ln for ln, r in enumerate(self.lanes) if r is None]
-        while free and self.queue:
-            shares = self._lane_shares()
-            running = self._running_by_tenant()
+        Unified mode: the whole queue competes for the decode pool.  Disagg
+        prefill pool: fresh arrivals and mid-prefill preemptions, queue
+        (arrival) order.  Disagg decode pool: hand-offs whose segment has
+        become fully slow-tier resident (the fabric admission gate) plus
+        decode-phase preemptions, oldest wait first."""
+        if not self.disagg:
+            return list(self.queue)
+        if role == "prefill":
+            return [r for r in self.queue
+                    if r.state == "queued"
+                    or (r.state == "preempted" and r.prefilling)]
+        ready = [r for r in self.handoff
+                 if self.eng.segment_resident(r.residual)]
+        ready += [r for r in self.queue
+                  if r.state == "preempted" and not r.prefilling]
+        return sorted(ready, key=lambda r: (r.queued_since, r.rid))
+
+    def _lane_shares(self, role: str, cands: list[Request]) -> dict[str, int]:
+        """Target lane allocation per tenant for one pool: the daemon's
+        quota split applied to lanes — demand = running + waiting,
+        weighted, clamped."""
+        _, lanes = self._pool(role)
+        n_pool = len(lanes)
+        demands = self._running_by_tenant(lanes)
+        for r in cands:
+            demands[r.tenant] += 1
+        caps = {t: n_pool for t in self.tenants}
+        weights = {t: self.tenants[t].weight for t in self.tenants}
+        return split_quota(n_pool, demands, caps, weights)
+
+    def _admit_pool(self, role: str) -> None:
+        _, lanes = self._pool(role)
+        if self._candidates(role):
+            self._maybe_preempt(role)
+        free = [ln for ln, r in enumerate(lanes) if r is None]
+        while free:
+            cands = self._candidates(role)
+            if not cands:
+                break
+            shares = self._lane_shares(role, cands)
+            running = self._running_by_tenant(lanes)
             heads: dict[str, Request] = {}
-            for r in self.queue:             # arrival order: first is head
+            for r in cands:                  # service order: first is head
                 heads.setdefault(r.tenant, r)
-            # the queued tenant with the largest share deficit wins the lane;
-            # deficit <= 0 everywhere falls back to FIFO (work-conserving)
+            # the waiting tenant with the largest share deficit wins the
+            # lane; deficit <= 0 everywhere falls back to FIFO
             pick = max(heads.values(),
                        key=lambda r: (shares.get(r.tenant, 0)
                                       - running[r.tenant],
                                       -r.queued_since, -r.rid))
             if shares.get(pick.tenant, 0) - running[pick.tenant] <= 0:
-                pick = self.queue[0]
-            if not self._install(pick, free[0]):
+                pick = cands[0]
+            if not self._install(pick, free[0], role):
                 # no free KV segment for a fresh request — a preempted one
                 # (which kept its segment) can still take the lane
-                pre = next((r for r in self.queue
+                pre = next((r for r in cands
                             if r.state == "preempted"), None)
-                if pre is None or not self._install(pre, free[0]):
+                if pre is None or not self._install(pre, free[0], role):
                     break
             free.pop(0)
 
-    def _install(self, req: Request, lane: int) -> bool:
+    def _install(self, req: Request, lane: int, role: str = "decode") -> bool:
+        eng, lanes = self._pool(role)
+        if req.state == "handoff":
+            # decode-side hand-off completion (DESIGN.md §13): pull the
+            # ring window up through the placement table, then emit the
+            # first output token from the final chunk's logits — TTFT is
+            # stamped HERE, when the hand-off completes
+            residual = req.residual
+            logits_row = residual.pop("logits")
+            # the gather itself is the fabric transfer (CXL port / DMA
+            # engine), charged to its own clock: the decode worker's clock
+            # keeps only what decode actually executes — the placement-
+            # table slow-tier pulls during advance — so hand-off traffic
+            # shows up in clock.handoff_s and bytes_in, not as fake TPOT
+            self._enter("handoff")
+            self.handoff_bytes_in += eng.install_handoff(lane, residual)
+            self._enter("decode")
+            req.residual = None
+            self.handoff.remove(req)
+            req.state, req.lane = "running", lane
+            lanes[lane] = req
+            self._emit(req, logits_row)
+            return True
         if req.state == "preempted":
-            self.eng.resume_lane(lane, req.residual)
+            eng.resume_lane(lane, req.residual)
             req.residual = None
         else:
             if not self.free_segments:
                 return False
             req.segment = self.free_segments.pop(0)
             req.admitted_step = self.step_count
-            self.eng.reset_lane(lane)
-            if self.eng.reuse is not None:
+            eng.reset_lane(lane)
+            if eng.reuse is not None:
                 # content-addressed admission matching (DESIGN.md §12):
                 # matched pages install as prefill reaches them, so the
                 # lane only scans the unmatched gaps; the match acquires
                 # one reference per page, released when the request ends
-                res = self.eng.reuse.match(req.prompt,
-                                           mode=self.scfg.reuse_match)
+                res = eng.reuse.match(req.prompt,
+                                      mode=self.scfg.reuse_match)
                 req.matched = dict(res.pages)
                 req.shared_gids = list(res.pages.values())
-        req.state, req.lane = "running", lane
-        self.lanes[lane] = req
+        req.state = "prefill" if role == "prefill" else "running"
+        req.lane = lane
+        lanes[lane] = req
         self.queue.remove(req)
         return True
 
-    def _maybe_preempt(self) -> None:
-        """Starvation guard: one preemption per step, only for a tenant that
-        holds NO lane and whose queue head has out-waited the patience."""
-        if any(r is None for r in self.lanes):
+    def _maybe_preempt(self, role: str = "decode") -> None:
+        """Per-pool starvation guard: one preemption per step, only for a
+        tenant that holds NO lane in this pool and whose waiting head has
+        out-waited the patience.  On the prefill pool the victim is mid-
+        prefill — its chunk boundary is the preemption point."""
+        _, lanes = self._pool(role)
+        if any(r is None for r in lanes):
             return                            # a free lane serves them first
-        running = self._running_by_tenant()
+        running = self._running_by_tenant(lanes)
         starving = None
-        for r in self.queue:                  # arrival order
+        for r in self._candidates(role):      # service order
             waited = self.step_count - r.queued_since
             if running[r.tenant] == 0 and waited >= self.scfg.preempt_patience:
                 starving = r
@@ -277,25 +434,43 @@ class Scheduler:
         victim_t = max(cands,
                        key=lambda t: running[t] / max(self.tenants[t].weight,
                                                       1e-9))
-        victim = max((r for r in self.lanes
+        victim = max((r for r in lanes
                       if r is not None and r.tenant == victim_t),
                      key=lambda r: r.admitted_step)
         lane = victim.lane
         self._preempt(victim)
         # the freed lane goes to the starving head DIRECTLY — handing it to
         # the weighted-fair pick would return it to the hog and thrash
-        self._install(starving, lane)
+        self._install(starving, lane, role)
 
     def _preempt(self, req: Request) -> None:
+        eng, lanes = (self.peng, self.pre_lanes) if req.state == "prefill" \
+            else (self.eng, self.lanes)
         lane = req.lane
-        req.residual = self.eng.preempt_lane(lane)
-        self.lanes[lane] = None
+        req.residual = eng.preempt_lane(lane)
+        lanes[lane] = None
         req.state, req.lane = "preempted", -1
         req.queued_since = self.step_count
         req.preemptions += 1
         self.preemptions += 1
         self.queue.append(req)
         self.queued_peak = max(self.queued_peak, len(self.queue))
+
+    def _to_handoff(self, lane: int, req: Request,
+                    logits_row: np.ndarray) -> None:
+        """Producer-side hand-off: detach a finished prefill from its lane
+        (force-flushing its pages down the fabric) and queue it for decode
+        admission, final-chunk logits riding along for the first token."""
+        residual = self.peng.handoff_lane(lane)
+        self.handoff_bytes_out += residual.pop("handoff_bytes")
+        residual["logits"] = logits_row
+        self.handoffs += 1
+        self.pre_lanes[lane] = None
+        req.residual = residual
+        req.state, req.lane = "handoff", -1
+        req.queued_since = self.step_count   # now waiting on the decode pool
+        self.handoff.append(req)
+        self.handoff_peak = max(self.handoff_peak, len(self.handoff))
 
     def _finish(self, req: Request) -> None:
         if self.eng.reuse is not None:
@@ -314,21 +489,150 @@ class Scheduler:
         req.finished_step = self.step_count
         self.finished.append(req)
 
+    # -- token emission -------------------------------------------------------
+    def _emit(self, req: Request, logits_row: np.ndarray) -> None:
+        """Emit one output token for ``req`` outside the batched decode
+        sweep (the hand-off first token): same identity-derived key fold,
+        so the draw is bit-identical to the unified scheduler's."""
+        req.out.append(self._sample_one(req, logits_row))
+        req.token_times.append(time.perf_counter())
+        req.token_clock.append(self._now("decode"))
+        req.token_steps.append(self.step_count)
+        if len(req.out) >= req.max_new:
+            self._finish(req)
+
+    def _sample_one(self, req: Request, logits_row: np.ndarray) -> int:
+        row = np.asarray(logits_row, np.float32)
+        if self.scfg.temperature <= 0.0:
+            return int(np.argmax(row))
+        folded = dec.fold_lane_keys(
+            jnp.asarray(req.key[None, :]),
+            jnp.asarray([len(req.out)], jnp.uint32))
+        return int(np.asarray(dec.sample_tokens(
+            jnp.asarray(row[None]), folded,
+            temperature=self.scfg.temperature, top_p=self.scfg.top_p))[0])
+
     # -- the serving loop -----------------------------------------------------
     def step(self) -> None:
-        """One scheduler iteration: admit, advance every lane (one decode
-        token, or one prefill CHUNK for long-prompt admissions), sample/
-        finish, meter per-tenant tier stats.
+        """One scheduler iteration.
 
-        With ``SchedConfig.prefill_chunk > 0`` a prefilling request whose
-        prompt is longer than one chunk goes through the chunked path: its
-        lane consumes up to ``prefill_chunk`` prompt tokens via
-        ``ServeEngine.prefill_lane`` while the other lanes take their normal
-        decode step — no stop-the-world.  The first output token is emitted
-        (and its TTFT stamped) the step the LAST chunk lands, from the same
-        last-prompt-position logits the streaming path would produce."""
-        self._admit()
+        Unified mode: admit, advance every lane (one decode token, or one
+        prefill CHUNK for long-prompt admissions), sample/finish, meter
+        per-tenant tier stats.  With ``SchedConfig.prefill_chunk > 0`` a
+        prefilling request whose prompt is longer than one chunk goes
+        through the chunked path: its lane consumes up to ``prefill_chunk``
+        prompt tokens via ``ServeEngine.prefill_lane`` while the other
+        lanes take their normal decode step — no stop-the-world.  The first
+        output token is emitted (and its TTFT stamped) the step the LAST
+        chunk lands, from the same last-prompt-position logits the
+        streaming path would produce.
+
+        Disaggregated mode (``prefill_lanes > 0``): decode-side hand-off
+        admission, then the prefill worker's turn (one chunk or matched
+        install per busy prefill lane) on the prefill clock, then the
+        decode worker's turn (one batched decode step over the decode
+        lanes) on the decode clock."""
+        self._enter("decode")
+        try:
+            if self.disagg:
+                self._step_disagg()
+            else:
+                self._step_unified()
+        finally:
+            self._close_seg()
+
+    def _step_disagg(self) -> None:
+        self._admit_pool("decode")           # hand-offs may emit first tokens
+        self._enter("prefill")
+        self._admit_pool("prefill")
+        self.prefill_busy.append(any(r is not None for r in self.pre_lanes))
+        self._prefill_turn()
+        self._enter("decode")
+        self._decode_turn()
+        self.step_count += 1
+
+    def _prefill_turn(self) -> None:
+        """The prefill worker's step: each busy prefill lane consumes one
+        matched-page install OR one chunk scan; a lane whose last chunk
+        lands detaches its request into the hand-off queue."""
         chunk = self.scfg.prefill_chunk
+        page_t = self.eng.scfg.page_t
+        for lane, req in enumerate(list(self.pre_lanes)):
+            if req is None:
+                continue
+            if req.matched:
+                # content-addressed fast-forward (DESIGN.md §12) — cannot
+                # complete the prompt (the final page is never matchable),
+                # so the hand-off always ends on a real chunk scan
+                j = req.pos // page_t
+                if req.pos % page_t == 0 and j in req.matched:
+                    run: dict[int, int] = {}
+                    while j in req.matched:
+                        run[j] = req.matched.pop(j)
+                        j += 1
+                    fast_n, slow_n = self.peng.install_lane_pages(lane, run)
+                    st = self.tenant_stats[req.tenant]
+                    st.fast_reads += fast_n
+                    st.slow_reads += slow_n
+                    req.pos += len(run) * page_t
+                    continue
+            end = req.pos + chunk
+            gap = min((jj * page_t for jj in req.matched
+                       if jj * page_t >= req.pos), default=end)
+            piece = req.prompt[req.pos:min(end, gap)]
+            logits = self.peng.prefill_lane(lane, piece, req.segment,
+                                            chunk=chunk)
+            req.pos += int(piece.size)
+            if not req.prefilling:
+                self._to_handoff(lane, req, np.asarray(logits))
+        if any(r is not None for r in self.pre_lanes):
+            self._meter_pool(self.peng, self.pre_lanes)
+
+    def _decode_turn(self) -> None:
+        """The decode worker's step: one batched engine step over the
+        decode lanes (every occupant is past its prompt — hand-off
+        admission emitted the first token already)."""
+        tokens = np.zeros(self.n_lanes, np.int32)
+        active = np.zeros(self.n_lanes, bool)
+        segments = np.full(self.n_lanes, -1, np.int32)
+        for lane, req in enumerate(self.lanes):
+            if req is None:
+                continue
+            segments[lane] = req.segment
+            active[lane] = True
+            tokens[lane] = req.out[-1]
+        if not active.any():
+            return
+        logits = np.asarray(
+            self.eng.advance_lanes(tokens, active, segments)
+        ).astype(np.float32)
+        self._meter_pool(self.eng, self.lanes)
+        now = time.perf_counter()
+        clock_now = self._now("decode")
+        sampled = self._sample(logits, active.astype(np.int32))
+        for lane, req in enumerate(list(self.lanes)):
+            if req is None:
+                continue
+            req.pos += 1
+            tok = (int(sampled[lane]) if sampled is not None
+                   else int(np.argmax(logits[lane])))
+            req.out.append(tok)
+            req.token_times.append(now)
+            req.token_clock.append(clock_now)
+            req.token_steps.append(self.step_count)
+            if len(req.out) >= req.max_new:
+                self._finish(req)
+
+    def _step_unified(self) -> None:
+        self._admit_pool("decode")
+        chunk = self.scfg.prefill_chunk
+        # a step is prefill-busy when a lane is mid-CHUNKED-prefill: its
+        # chunk scan (or matched install) is the serialized host wall that
+        # delays the batched decode.  Streaming prefill rides the decode
+        # batch itself and stalls nobody, so it does not count.
+        self.prefill_busy.append(any(
+            r is not None and r.prefilling and chunk > 0
+            and r.n_prompt > chunk for r in self.lanes))
         tokens = np.zeros(self.n_lanes, np.int32)
         active = np.zeros(self.n_lanes, bool)
         segments = np.full(self.n_lanes, -1, np.int32)
@@ -393,6 +697,7 @@ class Scheduler:
         # resident-page reads must still be charged to its tenant)
         self._meter_tenants()
         now = time.perf_counter()
+        clock_now = self._now("decode")
         sampled = self._sample(logits, consumed)
         for lane, req in enumerate(list(self.lanes)):
             if req is None or consumed[lane] == 0:
@@ -403,6 +708,8 @@ class Scheduler:
                        else int(np.argmax(logits[lane])))
                 req.out.append(tok)
                 req.token_times.append(now)
+                req.token_clock.append(clock_now)
+                req.token_steps.append(self.step_count)
                 if len(req.out) >= req.max_new:
                     self._finish(req)
         self.step_count += 1
@@ -435,32 +742,42 @@ class Scheduler:
             jnp.asarray(logits), folded,
             temperature=self.scfg.temperature, top_p=self.scfg.top_p))
 
+    @property
+    def active(self) -> bool:
+        """Any request still in flight (queued, pooled, or in hand-off)?"""
+        return bool(self.queue or self.handoff
+                    or any(r is not None for r in self.lanes)
+                    or any(r is not None for r in self.pre_lanes))
+
     def run(self, max_steps: int = 10_000) -> None:
         """Drain: run until every submitted request finished (or the bound)."""
-        while (self.queue or any(r is not None for r in self.lanes)):
+        while self.active:
             if self.step_count >= max_steps:
                 raise RuntimeError(f"undrained after {max_steps} steps")
             self.step()
 
     # -- telemetry ------------------------------------------------------------
     def _meter_tenants(self) -> None:
+        self._meter_pool(self.eng, self.lanes)
+
+    def _meter_pool(self, eng: ServeEngine, lanes: list) -> None:
         """Account each lane's resident KV pages against its tenant: a page
         the placement map holds fast is a per-tenant fast read.  Runs BEFORE
         the finish sweep over the explicit occupancy mask, so a finishing
         request's final step — and a chunk-prefilling lane the engine's own
         active mask no longer carries — is still charged."""
-        if "kv" not in self.eng.daemon:
+        if eng is None or "kv" not in eng.daemon:
             return
-        occupied = np.array([r is not None for r in self.lanes], bool)
-        sv = self.eng._kv_lane_stream(active=occupied)
+        occupied = np.array([r is not None for r in lanes], bool)
+        sv = eng._kv_lane_stream(active=occupied)
         if sv is None:
             return
         _, gids = sv
-        h = self.eng.daemon["kv"]
+        h = eng.daemon["kv"]
         _, hit = h.lookup(jnp.asarray(gids.reshape(-1), jnp.int32))
         hit = np.asarray(hit).reshape(gids.shape)
         valid = gids >= 0
-        for lane, req in enumerate(self.lanes):
+        for lane, req in enumerate(lanes):
             if req is None:
                 continue
             st = self.tenant_stats[req.tenant]
@@ -514,6 +831,15 @@ class Scheduler:
             "tokens": sum(len(r.out) for r in done),
             "preemptions": self.preemptions,
             "queued_peak": self.queued_peak,
+            "mode": "disagg" if self.disagg else "unified",
+            "prefill_lanes": self.scfg.prefill_lanes,
+            "clock": {"prefill_s": self.clock["prefill"],
+                      "handoff_s": self.clock["handoff"],
+                      "decode_s": self.clock["decode"]},
+            "handoff": {"count": self.handoffs,
+                        "bytes_out": self.handoff_bytes_out,
+                        "bytes_in": self.handoff_bytes_in,
+                        "depth_peak": self.handoff_peak},
             **self._latency_rows(done),
             "tenants": tenants,
             "resources": self.eng.tier_stats(),

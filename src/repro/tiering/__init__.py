@@ -19,7 +19,8 @@ from repro.tiering.memory import (  # noqa: F401
     observe,
 )
 from repro.tiering.migrate import (  # noqa: F401
-    TierBuffers, init_buffers, lookup_rows, read_rows, write_rows,
+    TierBuffers, init_buffers, lookup_rows, read_rows, segment_page_ids,
+    write_rows,
 )
 from repro.tiering.resource import (  # noqa: F401
     ResourceSpec, StreamResource, TieredResource, make_resource,

@@ -107,10 +107,16 @@ class ResourceHandle:
         return lookup(self.state, page_ids)
 
     # -- data plane (DESIGN.md §8) -------------------------------------------
-    def bind_data(self, slow_data) -> None:
-        """Attach the resource's payload; promotions then move real bytes."""
-        self.mem.bind_data(slow_data)
+    def bind_data(self, slow_data, initially_valid: bool = True) -> None:
+        """Attach the resource's payload; promotions then move real bytes.
+        ``initially_valid=False`` starts every page un-witnessed (the KV
+        scratch store) — see :meth:`TieredMemory.pages_written`."""
+        self.mem.bind_data(slow_data, initially_valid=initially_valid)
         self.stats.quota_bytes = self.mem.quota_bytes
+
+    def pages_written(self, page_ids) -> np.ndarray:
+        """Per-page write-witness query (the segment-residency gate)."""
+        return self.mem.pages_written(page_ids)
 
     def tier_view(self) -> dict[str, jax.Array]:
         """Device-array view for in-jit reads: ``{"fast", "slow",

@@ -140,6 +140,8 @@ class TieredMemory:
         self.buffers: migrate_lib.TierBuffers | None = None
         self.row_bytes = 0
         self.quota_bytes = 0
+        # per-page write witness (None until bind_data): see pages_written
+        self.written: np.ndarray | None = None
 
     @classmethod
     def from_spec(cls, spec, daemon_params=None, policy_params=None,
@@ -151,12 +153,20 @@ class TieredMemory:
         return mem
 
     # -- data plane (DESIGN.md §8) -------------------------------------------
-    def bind_data(self, slow_data) -> None:
+    def bind_data(self, slow_data, initially_valid: bool = True) -> None:
         """Attach payload buffers: ``slow_data`` is (num_pages, *row_shape).
 
         After binding, every promotion epoch physically moves rows between
         the fast/slow buffers (:meth:`apply_migration`) and meters the bytes;
         without it the resource stays placement/telemetry-only.
+
+        ``initially_valid=False`` marks every page as not-yet-written: the
+        store starts as zero-filled scratch (the KV slow store) and a page
+        only becomes *resident* once a write verb lands on it.  The
+        :meth:`pages_written` witness backs the disaggregated hand-off's
+        segment-residency gate (DESIGN.md §13) — a decode worker must never
+        admit a request whose segment the prefill worker has not finished
+        flushing.
         """
         slow_data = jnp.asarray(slow_data)
         if slow_data.shape[0] != self.tp.num_pages:
@@ -172,6 +182,7 @@ class TieredMemory:
         self.buffers = migrate_lib.init_buffers(slow_data, self.tp.num_slots)
         self.row_bytes = migrate_lib.row_bytes(self.buffers)
         self.quota_bytes = 2 * self.quota * self.row_bytes
+        self.written = np.full(self.tp.num_pages, bool(initially_valid))
 
     def apply_migration(self, event: MigrationEvent | None,
                         stats: TierStats) -> int:
@@ -190,6 +201,7 @@ class TieredMemory:
         moved = (n_up + n_down) * self.row_bytes
         stats.migration_bytes += moved
         stats.last_epoch_bytes = moved
+        stats.max_epoch_bytes = max(stats.max_epoch_bytes, moved)
         stats.quota_bytes = self.quota_bytes
         if moved:
             stats.migration_epochs += 1
@@ -206,6 +218,10 @@ class TieredMemory:
         """
         if self.buffers is None:
             return
+        # a restored store is assumed fully materialized: the write witnesses
+        # that produced it did not survive the checkpoint, the payload did
+        if self.written is not None:
+            self.written[:] = True
         slot_page = np.asarray(state.tier.slot_page)
         occupied = np.flatnonzero(slot_page >= 0)
         if occupied.size == 0:
@@ -275,7 +291,7 @@ class TieredMemory:
         slots, _ = lookup(state, page_ids)
         self.buffers = migrate_lib.write_rows(self.buffers, page_ids, slots,
                                               rows)
-        return int(np.sum(np.asarray(page_ids) >= 0))
+        return self._mark_written(page_ids)
 
     def write_pages(self, state: TieredMemoryState, page_ids, k_pages,
                     v_pages) -> int:
@@ -290,7 +306,7 @@ class TieredMemory:
         slots, _ = lookup(state, page_ids)
         self.buffers = migrate_lib.write_pages(self.buffers, page_ids, slots,
                                                k_pages, v_pages)
-        return int(np.sum(np.asarray(page_ids) >= 0))
+        return self._mark_written(page_ids)
 
     def copy_rows(self, state: TieredMemoryState, src_ids, dst_ids) -> int:
         """Duplicate page payloads store-to-store (`migrate.copy_rows`):
@@ -304,8 +320,31 @@ class TieredMemory:
         dst_slots, _ = lookup(state, dst_ids)
         self.buffers = migrate_lib.copy_rows(self.buffers, src_ids, dst_ids,
                                              dst_slots)
-        return int(np.sum((np.asarray(src_ids) >= 0)
-                          & (np.asarray(dst_ids) >= 0)))
+        valid = (np.asarray(src_ids) >= 0) & (np.asarray(dst_ids) >= 0)
+        if self.written is not None:
+            self.written[np.asarray(dst_ids)[valid]] = True
+        return int(np.sum(valid))
+
+    def _mark_written(self, page_ids) -> int:
+        """Record the write witnesses for a batch of page ids (-1 dropped)."""
+        ids = np.asarray(page_ids)
+        ids = ids[ids >= 0]
+        if self.written is not None and ids.size:
+            self.written[ids] = True
+        return int(ids.size)
+
+    def pages_written(self, page_ids) -> np.ndarray:
+        """Per-page write witness: True where a write verb has landed since
+        binding (or where the payload was valid at bind time).  The
+        segment-residency query behind disaggregated decode admission
+        (DESIGN.md §13); invalid ids (< 0) report False."""
+        if self.written is None:
+            raise ValueError("no payload bound — call bind_data() first")
+        ids = np.asarray(page_ids, np.int64)
+        out = np.zeros(ids.shape, bool)
+        valid = (ids >= 0) & (ids < self.written.shape[0])
+        out[valid] = self.written[ids[valid]]
+        return out
 
     # -- state ---------------------------------------------------------------
     def init(self, key: jax.Array | None = None) -> TieredMemoryState:

@@ -65,6 +65,29 @@ def init_buffers(slow_data: jax.Array, num_slots: int) -> TierBuffers:
     return TierBuffers(fast=fast, slow=slow)
 
 
+def segment_page_ids(segment: int, n_tokens: int, page_t: int,
+                     pages_per_seq: int,
+                     table: np.ndarray | None = None) -> np.ndarray:
+    """Global page ids of a request's first ``n_tokens`` worth of KV pages.
+
+    A lane-mode KV segment is ``pages_per_seq`` consecutive pages starting
+    at ``segment * pages_per_seq``; a request that has consumed ``n_tokens``
+    occupies the first ``ceil(n_tokens / page_t)`` of them (the final,
+    possibly partial, page included — a hand-off force-flush writes it too).
+    ``table`` is the lane's copy-on-write page-table row (local idx -> pool
+    gid, -1 = private): shared pool pages resolve through it, exactly as the
+    read path does (DESIGN.md §12/§13).  This is the id set the
+    segment-residency gate checks against ``TieredMemory.pages_written``.
+    """
+    n_pages = -(-max(n_tokens, 0) // page_t)
+    local = np.arange(min(n_pages, pages_per_seq), dtype=np.int64)
+    gids = segment * pages_per_seq + local
+    if table is not None:
+        tabled = np.asarray(table, np.int64)[local]
+        gids = np.where(tabled >= 0, tabled, gids)
+    return gids
+
+
 def _migrate_impl(fast, slow, promoted, victims, evicted):
     ok = (promoted >= 0) & (victims >= 0)
     ev_ok = ok & (evicted >= 0)

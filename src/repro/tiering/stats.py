@@ -36,6 +36,9 @@ class TierStats:
     # Data-plane byte metering (DESIGN.md §8; zero when no buffers bound).
     migration_bytes: int = 0       # lifetime payload bytes moved (both ways)
     last_epoch_bytes: int = 0      # bytes moved by the most recent epoch
+    max_epoch_bytes: int = 0       # bytes moved by the LARGEST epoch so far —
+    #                                the per-epoch quota must hold across
+    #                                EVERY epoch, not just the last one
     quota_bytes: int = 0           # per-epoch byte budget (2 * quota * row)
     migration_epochs: int = 0      # epochs that actually moved payload
     flush_bytes: int = 0           # owner write_rows traffic (e.g. KV flush)
@@ -69,6 +72,7 @@ class TierStats:
             "ping_pong": self.ping_pong,
             "migration_bytes": self.migration_bytes,
             "last_epoch_bytes": self.last_epoch_bytes,
+            "max_epoch_bytes": self.max_epoch_bytes,
             "quota_bytes": self.quota_bytes,
             "migration_epochs": self.migration_epochs,
             "flush_bytes": self.flush_bytes,

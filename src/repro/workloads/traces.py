@@ -19,6 +19,21 @@ CONTENT from a distribution the tiering daemon can (or cannot) exploit:
                           hot set, thrashes promotions, and drags the
                           steady-state hit rate below ``zipf-hot`` — the
                           adaptivity gap the traffic benchmark asserts.
+  * ``prefill-heavy``   — a prompt-length mixture built for the prefill/
+                          decode disaggregation A/B (DESIGN.md §13): a
+                          "chat" tenant streams short prompts with LONG
+                          outputs (steady decode occupancy) while a "doc"
+                          tenant drops long prompts with short outputs
+                          (each arrival is a prefill wall).  Under the
+                          unified scheduler every doc prompt's chunk scans
+                          stall the chat tenant's decode steps; with a
+                          dedicated prefill pool the walls move off the
+                          decode worker's clock — the TPOT-flatness gate
+                          ``benchmarks/traffic_bench.py`` asserts.  Token
+                          content is the static Zipf head (as ``zipf-hot``);
+                          the SHAPE mixture is the workload.  Defaults to
+                          :data:`PREFILL_HEAVY_TENANTS` when no explicit
+                          tenant set is passed.
   * ``agentic``         — multi-turn tool-agent sessions, the workload the
                           content-addressed KV store (DESIGN.md §12) exists
                           for.  Each tenant owns one fixed system prompt S;
@@ -68,7 +83,8 @@ import functools
 
 import numpy as np
 
-TRACE_KINDS = ("zipf-hot", "diurnal-shift", "scan-antagonist", "agentic")
+TRACE_KINDS = ("zipf-hot", "diurnal-shift", "scan-antagonist",
+               "prefill-heavy", "agentic")
 ARRIVAL_KINDS = ("bernoulli", "mmpp")
 
 # MMPP defaults: calm->burst 0.05, burst->calm 0.25 => stationary burst
@@ -121,6 +137,16 @@ DEFAULT_TENANTS = (
                   prompt_len=(6, 13), out_len=(4, 9)),
     TenantProfile("batch", weight=1.0, rate=0.12,
                   prompt_len=(10, 21), out_len=(8, 17)),
+)
+
+# The disaggregation A/B's shape mixture (``kind="prefill-heavy"``):
+# "chat" keeps decode lanes streaming, "doc" keeps dropping prompt walls.
+# Sized for the serve benches' max_seq=56 segments (prompt + out <= 45).
+PREFILL_HEAVY_TENANTS = (
+    TenantProfile("chat", weight=2.0, rate=0.25,
+                  prompt_len=(4, 9), out_len=(14, 21)),
+    TenantProfile("doc", weight=1.0, rate=0.09,
+                  prompt_len=(28, 41), out_len=(2, 5)),
 )
 
 
@@ -202,6 +228,8 @@ def make_trace(kind: str, *, n_steps: int = 200, vocab: int = 256,
     if arrival not in ARRIVAL_KINDS:
         raise KeyError(
             f"unknown arrival process {arrival!r}; known: {ARRIVAL_KINDS}")
+    if kind == "prefill-heavy" and tenants is DEFAULT_TENANTS:
+        tenants = PREFILL_HEAVY_TENANTS   # the mixture IS the workload
     struct = np.random.default_rng(np.random.SeedSequence([seed, 0xA11]))
     content = np.random.default_rng(np.random.SeedSequence([seed, 0xB22]))
     if kind == "agentic":
@@ -261,8 +289,9 @@ def play(trace: Trace, sched, *, max_steps: int | None = None,
     such as the steady-state counter snapshot."""
     due = trace.by_step()
     horizon = max_steps or max(2000, 50 * trace.n_steps)
-    while sched.step_count < trace.n_steps or sched.queue \
-            or any(r is not None for r in sched.lanes):
+    # drain through Scheduler.active: queued, pooled (decode AND prefill
+    # lanes), and hand-offs in flight all keep the loop going
+    while sched.step_count < trace.n_steps or sched.active:
         if sched.step_count >= horizon:
             raise RuntimeError(f"trace undrained after {horizon} steps")
         for a in due.get(sched.step_count, []):

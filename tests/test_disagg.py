@@ -1,0 +1,223 @@
+"""Prefill/decode disaggregation over the slow-tier hand-off fabric
+(DESIGN.md §13): split-pool vs unified bit-exactness, mid-prefill
+preemption + resume parity, the consumer-side residency gate, per-worker
+virtual-clock / hand-off telemetry, and the TierStats conservation laws
+the fabric's force-flushes must respect."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_smoke_config
+from repro.models import transformer as tr
+from repro.serve.engine import ServeConfig, ServeEngine
+from repro.serve.sched import SchedConfig, Scheduler, Tenant
+
+ARCH = "llama3.2-3b"
+BASE_KW = dict(max_seq=48, paged=True, page_t=4, hot_slots=5,
+               migration_interval=4, resources=("embeddings",),
+               embed_hot_slots=4, embed_rows_per_page=8)
+CHUNK = 4
+
+
+@pytest.fixture(scope="module")
+def cfg_params():
+    cfg = get_smoke_config(ARCH)
+    return cfg, tr.init_params(cfg, jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def reference(cfg_params):
+    """Single-request engine: the ground truth every disaggregated
+    request's output must reproduce bit-for-bit."""
+    cfg, params = cfg_params
+    eng = ServeEngine(cfg, params, ServeConfig(
+        **{**BASE_KW, "resources": ()}))
+
+    def generate(prompt, n):
+        return list(eng.generate(np.asarray(prompt)[None], n_tokens=n)[0])
+    return generate
+
+
+def _sched(cfg_params, prefill_lanes, lanes=2, temp=0.0, reuse=0,
+           patience=16, chunk=CHUNK, segments=None):
+    cfg, params = cfg_params
+    segments = segments or (lanes + prefill_lanes + 2)
+    eng = ServeEngine(cfg, params, ServeConfig(
+        **BASE_KW, lanes=lanes, kv_segments=segments, reuse_pages=reuse))
+    return Scheduler(eng, [Tenant("a"), Tenant("b")], SchedConfig(
+        preempt_patience=patience, prefill_chunk=chunk,
+        prefill_lanes=prefill_lanes, temperature=temp, seed=7))
+
+
+def _prompt(seed, n=8):
+    vocab = get_smoke_config(ARCH).vocab
+    return (np.random.default_rng(seed).integers(0, vocab, n)
+            .astype(np.int32))
+
+
+_WORK = [("a", 1, 18, 5), ("b", 2, 6, 6), ("a", 3, 11, 4),
+         ("b", 4, 21, 3), ("a", 5, 9, 5)]
+
+
+def _serve(sched):
+    reqs = [sched.submit(t, _prompt(s, n), max_new=m)
+            for t, s, n, m in _WORK]
+    sched.run(max_steps=2000)
+    return {r.rid: list(r.out) for r in reqs}, reqs
+
+
+# -- the tentpole: split pools reproduce the unified scheduler ---------------
+
+@pytest.mark.parametrize("temp", [0.0, 0.8])
+def test_disagg_bit_exact_vs_unified(cfg_params, temp):
+    """The same request set through the unified scheduler and through the
+    split prefill-worker/decode-worker pools: token-for-token identical.
+    The hand-off fabric moved real bytes both ways; unified never hands
+    off."""
+    uni = _sched(cfg_params, prefill_lanes=0, temp=temp)
+    dis = _sched(cfg_params, prefill_lanes=1, temp=temp)
+    out_u, _ = _serve(uni)
+    out_d, _ = _serve(dis)
+    assert out_u == out_d
+    assert uni.handoffs == 0 and uni.handoff_bytes_out == 0
+    assert dis.handoffs == len(_WORK)
+    assert dis.handoff_bytes_out > 0 and dis.handoff_bytes_in > 0
+
+
+def test_disagg_matches_reference_engine(cfg_params, reference):
+    """Stronger ground truth: every disaggregated request reproduces the
+    dedicated single-request engine (greedy)."""
+    sched = _sched(cfg_params, prefill_lanes=1)
+    _, reqs = _serve(sched)
+    for r in reqs:
+        assert r.out == reference(r.prompt, r.max_new), r.rid
+
+
+# -- satellite: mid-prefill preemption + resume ------------------------------
+
+def test_mid_prefill_preempt_resume_parity(cfg_params, reference):
+    """A request preempted BETWEEN prefill chunks on the prefill worker
+    (pages already flushed to its slow segment) resumes on the pool and
+    still hands off / decodes token-for-token with the uninterrupted
+    run."""
+    sched = _sched(cfg_params, prefill_lanes=1)
+    ra = sched.submit("a", _prompt(30, 20), max_new=6)   # 5 chunks of 4
+    for _ in range(50):
+        sched.step()
+        if ra.state == "prefill" and 0 < ra.pos < ra.n_prompt:
+            break
+    assert ra.state == "prefill" and ra.prefilling, "never mid-prefill"
+    sched._preempt(ra)
+    assert ra.state == "preempted" and ra.prefilling
+    assert sched.pre_lanes[0] is None
+    sched.run(max_steps=2000)
+    assert ra.state == "finished" and ra.preemptions >= 1
+    assert ra.out == reference(ra.prompt, 6)
+
+
+# -- the consumer-side residency gate ----------------------------------------
+
+def test_handoff_residency_gate(cfg_params, reference):
+    """Decode admission waits on the write witness: a hand-off whose
+    segment has an unflushed page is not admissible, and installing it
+    anyway raises.  Once the page is witnessed the request drains
+    normally."""
+    from repro.tiering import segment_page_ids
+    sched = _sched(cfg_params, prefill_lanes=1)
+    ra = sched.submit("a", _prompt(31, 14), max_new=4)
+    for _ in range(50):
+        if sched.handoff:
+            break
+        sched.step()
+    assert sched.handoff, "request never reached the hand-off state"
+    res = ra.residual
+    eng = sched.eng
+    gids = segment_page_ids(res["segment"], res["pos"], eng.scfg.page_t,
+                            eng.pages_per_seq, table=res.get("pages"))
+    assert eng.segment_resident(res)          # producer flushed everything
+    mem = eng.daemon["kv"].mem
+    mem.written[int(gids[-1])] = False        # simulate an in-flight flush
+    assert not eng.segment_resident(res)
+    with pytest.raises(RuntimeError, match="not fully resident"):
+        eng.install_handoff(0, res)
+    before = sched.step_count
+    sched.step()                              # gate holds: no admission
+    assert ra.state == "handoff" and sched.step_count == before + 1
+    mem.written[int(gids[-1])] = True         # flush lands
+    sched.run(max_steps=2000)
+    assert ra.out == reference(ra.prompt, 4)
+
+
+def test_disagg_requires_chunked_prefill(cfg_params):
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        _sched(cfg_params, prefill_lanes=1, chunk=0)
+
+
+# -- satellite: TierStats conservation laws ----------------------------------
+
+def _check_conservation(resources):
+    """Every metered read is fast or slow — none lost, none invented —
+    and the per-epoch migration budget held for EVERY epoch."""
+    for name, row in resources.items():
+        reads = row["fast_reads"] + row["slow_reads"]
+        expect = row["fast_reads"] / reads if reads else 0.0
+        assert abs(row["hit_rate"] - expect) < 1e-9, name
+        assert row["last_epoch_bytes"] <= row["max_epoch_bytes"], name
+        if row["quota_bytes"]:
+            assert row["max_epoch_bytes"] <= row["quota_bytes"], name
+
+
+@pytest.mark.parametrize("pre", [0, 1])
+def test_tier_stats_conservation(cfg_params, pre):
+    """Both scheduler modes respect the conservation laws — the disagg
+    arm's hand-off force-flushes and placement-table pulls included."""
+    sched = _sched(cfg_params, prefill_lanes=pre)
+    _serve(sched)
+    rep = sched.report()
+    _check_conservation(rep["resources"])
+    for stats in sched.tenant_stats.values():
+        _check_conservation({stats.name: stats.as_row()})
+    if pre:
+        assert rep["resources"]["kv"]["flush_bytes"] > 0
+        assert rep["handoff"]["bytes_out"] > 0
+
+
+# -- reuse interplay ---------------------------------------------------------
+
+def test_disagg_reuse_bit_exact_and_refs_drain(cfg_params):
+    """The content-addressed store works across the split: admission
+    matching happens on the prefill worker, publishes on the decode
+    worker, outputs stay bit-exact vs unified+reuse, and every shared-page
+    claim drains by quiescence."""
+    uni = _sched(cfg_params, prefill_lanes=0, reuse=8)
+    dis = _sched(cfg_params, prefill_lanes=1, reuse=8)
+    out_u, _ = _serve(uni)
+    out_d, _ = _serve(dis)
+    assert out_u == out_d
+    st = dis.eng.reuse.stats()
+    assert st["lookups"] > 0 and st["shared_refs"] == 0
+
+
+# -- telemetry ---------------------------------------------------------------
+
+def test_report_mode_clock_and_handoff_schema(cfg_params):
+    uni = _sched(cfg_params, prefill_lanes=0)
+    dis = _sched(cfg_params, prefill_lanes=1)
+    _serve(uni)
+    _serve(dis)
+    ru, rd = uni.report(), dis.report()
+    assert ru["mode"] == "unified" and ru["prefill_lanes"] == 0
+    assert rd["mode"] == "disagg" and rd["prefill_lanes"] == 1
+    for rep in (ru, rd):
+        assert set(rep["clock"]) == {"prefill_s", "handoff_s", "decode_s"}
+        assert set(rep["handoff"]) == {"count", "bytes_out", "bytes_in",
+                                       "depth_peak"}
+    assert ru["handoff"]["count"] == 0 and ru["clock"]["prefill_s"] == 0.0
+    assert rd["handoff"]["count"] == len(_WORK)
+    assert rd["handoff"]["depth_peak"] >= 1
+    assert rd["clock"]["prefill_s"] > 0 and rd["clock"]["decode_s"] > 0
+    # every emitted token carries the (virtual clock, step) stamps the
+    # disagg A/B's gap classifier keys on
+    for r in dis.finished:
+        assert len(r.token_clock) == len(r.token_steps) == len(r.out)
+    assert len(dis.prefill_busy) == dis.step_count

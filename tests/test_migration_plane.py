@@ -255,9 +255,10 @@ def test_other_legacy_adapters_warn():
 def _bench_doc(tmp_path, mutate=None):
     import json
     row = {"name": "embeddings", "fast_reads": 10, "slow_reads": 2,
-           "hit_rate": 0.8, "promoted": 4, "demoted": 1, "ping_pong": 0,
+           "hit_rate": 10 / 12, "promoted": 4, "demoted": 1, "ping_pong": 0,
            "migration_bytes": 1024, "last_epoch_bytes": 256,
-           "quota_bytes": 512, "migration_epochs": 4, "flush_bytes": 0}
+           "max_epoch_bytes": 256, "quota_bytes": 512,
+           "migration_epochs": 4, "flush_bytes": 0}
     case = {"arch": "a", "batch": 2, "prompt_len": 8, "n_tokens": 4,
             "compile_s": 0.5, "tokens_per_s": 1.0, "wall_s": 8.0,
             "migration_bytes": 1024, "migration_bytes_per_s": 128.0,
@@ -325,9 +326,19 @@ def test_validate_bench_rejects_violations(tmp_path):
     assert any("nonzero" in e for e in validate(_bench_doc(tmp_path, no_bytes)))
 
     def over_quota(doc):
-        doc["cases"][0]["resources"]["embeddings"]["last_epoch_bytes"] = 9999
+        doc["cases"][0]["resources"]["embeddings"]["max_epoch_bytes"] = 9999
     assert any("exceeds quota" in e
                for e in validate(_bench_doc(tmp_path, over_quota)))
+
+    def max_epoch_lost(doc):
+        doc["cases"][0]["resources"]["embeddings"]["last_epoch_bytes"] = 300
+    assert any("epoch maximum" in e
+               for e in validate(_bench_doc(tmp_path, max_epoch_lost)))
+
+    def reads_lost(doc):
+        doc["cases"][0]["resources"]["embeddings"]["hit_rate"] = 0.8
+    assert any("read conservation" in e
+               for e in validate(_bench_doc(tmp_path, reads_lost)))
 
     def missing_key(doc):
         del doc["cases"][0]["resources"]["embeddings"]["quota_bytes"]

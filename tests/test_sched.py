@@ -234,6 +234,129 @@ def test_sample_tokens_top_p_masks_tail():
     np.testing.assert_array_equal(np.asarray(greedy), 1)
 
 
+# -- lifecycle fuzzer (DESIGN.md §13) -----------------------------------------
+#
+# Randomized arrive / admit / chunk / hand-off / preempt / resume / finish
+# interleavings over both scheduler modes, with the full state-machine
+# invariant set checked after EVERY step.  The same driver runs under two
+# harnesses: a hypothesis property (CI, shrinking counterexamples) and a
+# seeded numpy sweep (always on, hypothesis not required locally).
+
+def _check_invariants(sched, reqs):
+    """Every submitted request lives in EXACTLY one scheduler container,
+    lanes are single-occupancy per pool, and the KV segment ledger neither
+    leaks nor double-books."""
+    where: dict[int, str] = {}
+
+    def seen(req, place):
+        assert req.rid not in where, \
+            f"rid {req.rid} in both {where[req.rid]} and {place}"
+        where[req.rid] = place
+
+    for r in sched.queue:
+        assert r.state in ("queued", "preempted"), r.state
+        seen(r, "queue")
+    for pool, lanes in (("decode", sched.lanes),
+                        ("prefill", sched.pre_lanes)):
+        for ln, r in enumerate(lanes):
+            if r is None:
+                continue
+            assert r.lane == ln, f"{pool} lane {ln} holds r.lane={r.lane}"
+            assert r.state == ("running" if pool == "decode" else "prefill")
+            seen(r, f"{pool}:{ln}")
+    for r in sched.handoff:
+        assert r.state == "handoff" and r.lane == -1
+        seen(r, "handoff")
+    for r in sched.finished:
+        assert r.state == "finished"
+        seen(r, "finished")
+    assert set(where) == {r.rid for r in reqs}, "request lost or invented"
+    # segment ledger: free list has no dupes; every admitted-but-unfinished
+    # request holds a segment no one else (and no free slot) claims
+    n_seg = sched.eng.scfg.kv_segments or sched.n_lanes
+    free = sched.free_segments
+    assert len(set(free)) == len(free), "free segment duplicated"
+    held = [r.segment for r in reqs
+            if r.state in ("running", "prefill", "handoff", "preempted")]
+    assert len(set(held)) == len(held), "segment double-booked"
+    assert not set(held) & set(free), "held segment also on the free list"
+    assert set(held) | set(free) <= set(range(n_seg))
+
+
+def _fuzz_lifecycle(cfg_params, seed, prefill_lanes, reuse_pages, chunk):
+    """One fuzz episode: a seeded random submit/step script, invariants
+    after every step, then drain to quiescence and check nothing leaked."""
+    cfg, params = cfg_params
+    rng = np.random.default_rng(seed)
+    lanes = int(rng.integers(1, 3))
+    segments = lanes + prefill_lanes + int(rng.integers(1, 3))
+    eng = ServeEngine(cfg, params, ServeConfig(
+        **BASE_KW, lanes=lanes, kv_segments=segments,
+        reuse_pages=reuse_pages))
+    sched = Scheduler(eng, [Tenant("a"), Tenant("b", weight=2.0)],
+                      SchedConfig(preempt_patience=int(rng.integers(2, 7)),
+                                  prefill_chunk=chunk,
+                                  prefill_lanes=prefill_lanes,
+                                  temperature=float(rng.choice([0.0, 0.8])),
+                                  seed=seed))
+    reqs = []
+    for _ in range(60):
+        if len(reqs) < 8 and rng.random() < 0.35:
+            reqs.append(sched.submit(
+                "a" if rng.random() < 0.5 else "b",
+                rng.integers(0, cfg.vocab, int(rng.integers(2, 14)))
+                   .astype(np.int32),
+                max_new=int(rng.integers(1, 7))))
+        sched.step()
+        _check_invariants(sched, reqs)
+        if not sched.active and len(reqs) >= 6:
+            break
+    while sched.active:
+        sched.step()
+        _check_invariants(sched, reqs)
+        assert sched.step_count < 2000, "fuzz episode failed to drain"
+    # quiesce: everything finished, every shared-page claim released
+    assert all(r.state == "finished" for r in reqs)
+    assert all(len(r.out) == r.max_new for r in reqs)
+    if eng.reuse is not None:
+        assert eng.reuse.stats()["shared_refs"] == 0, \
+            "reuse refcounts did not drain at quiesce"
+    rep = sched.report()
+    assert rep["completed"] == rep["submitted"] == len(reqs)
+
+
+_FUZZ_GRID = [
+    # (prefill_lanes, reuse_pages, chunk): unified/chunked/disagg x reuse
+    (0, 0, 0), (0, 0, 4), (0, 8, 4), (1, 0, 4), (1, 8, 4), (1, 0, 6),
+]
+
+
+@pytest.mark.parametrize("pre,reuse,chunk", _FUZZ_GRID)
+def test_lifecycle_fuzz_seeded(cfg_params, pre, reuse, chunk):
+    """The always-on sweep: fixed seeds over the mode grid."""
+    for seed in (3, 11):
+        _fuzz_lifecycle(cfg_params, seed, pre, reuse, chunk)
+
+
+def test_lifecycle_fuzz_hypothesis(cfg_params):
+    """The shrinking harness: hypothesis drives the same episode driver
+    over seeds and modes (CI tier; skipped when hypothesis is absent)."""
+    hyp = pytest.importorskip(
+        "hypothesis", reason="property fuzzer needs hypothesis "
+        "(pip install -r requirements-dev.txt)")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.settings(max_examples=10, deadline=None,
+                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.given(seed=st.integers(0, 2**16),
+               mode=st.sampled_from(_FUZZ_GRID))
+    def prop(seed, mode):
+        pre, reuse, chunk = mode
+        _fuzz_lifecycle(cfg_params, seed, pre, reuse, chunk)
+
+    prop()
+
+
 def test_reset_lane_restores_init_state_xlstm():
     """A reused lane must serve like a fresh engine even for NON-ZERO init
     state: the m/sLSTM stabilizer inits to -1e30, so a zeroing reset would
