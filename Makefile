@@ -1,7 +1,7 @@
 PYTEST ?= python -m pytest
 
 .PHONY: test test-fast test-dist dryrun bench-serve bench-traffic \
-	bench-reuse bench-disagg validate-bench
+	bench-reuse bench-disagg bench-compress validate-bench
 
 # full tier-1 suite (includes slow 8-host-device subprocess parity tests)
 test:
@@ -45,6 +45,14 @@ bench-reuse:
 # and decode-lane TPOT-flatness-under-concurrent-prefill gates)
 bench-disagg:
 	PYTHONPATH=src:. python benchmarks/traffic_bench.py --disagg
+
+# slow-tier codec A/B (DESIGN.md §14): the zipf-hot trace served under the
+# none / fp32 / int8 slow-store codecs at the same page quota, plus the
+# logit-drift probe and the zero1 compressed-collective parity — writes the
+# "compress" section of BENCH_serve.json (byte-ratio, hit-parity, drift,
+# and fp32-arm bit-exactness gates)
+bench-compress:
+	PYTHONPATH=src:. python benchmarks/serve_bench.py --quick --compress
 
 # check BENCH_serve.json against the schema documented in benchmarks/README.md
 validate-bench:

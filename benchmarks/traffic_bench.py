@@ -86,6 +86,11 @@ OUT_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
 # kind has its own session-structured arrivals and is the kv_reuse A/B's
 # workload below.
 CONTENT_KINDS = ("zipf-hot", "diurnal-shift", "scan-antagonist")
+# Ride-along kinds benched with the trio (same schema row, own load shape):
+# prod-mixture replays the bimodal public-trace prompt-length mixture
+# (repro.workloads §prod-mixture) — zipf-hot content under realistic
+# length dispersion.  Selectable via --kinds.
+BENCH_KINDS = CONTENT_KINDS + ("prod-mixture",)
 
 ARCH = "llama3.2-3b"
 LANES = 4
@@ -507,7 +512,7 @@ def _bench_disagg(params, seed: int) -> dict:
 
 
 def run(quick: bool = False, reuse_only: bool = False,
-        disagg_only: bool = False):
+        disagg_only: bool = False, kinds: tuple[str, ...] = BENCH_KINDS):
     n_steps = 120 if quick else 320
     params = tr.init_params(get_smoke_config(ARCH), jax.random.PRNGKey(0))
     if reuse_only:
@@ -533,7 +538,7 @@ def run(quick: bool = False, reuse_only: bool = False,
         emit("traffic_bench_json", 0.0, os.path.normpath(OUT_PATH))
         return dg
     rows = [_bench_trace(kind, params, n_steps, seed=0)
-            for kind in CONTENT_KINDS]
+            for kind in dict.fromkeys(CONTENT_KINDS + tuple(kinds))]
     by_kind = {r["trace"]: r for r in rows}
     gap = (by_kind["zipf-hot"]["hit_rate_steady"]
            - by_kind["scan-antagonist"]["hit_rate_steady"])
@@ -590,5 +595,9 @@ if __name__ == "__main__":
                     help="run only the kv_reuse A/B section")
     ap.add_argument("--disagg", action="store_true",
                     help="run only the prefill/decode disaggregation A/B")
+    ap.add_argument("--kinds", default=",".join(BENCH_KINDS),
+                    help="comma-separated trace kinds for the traffic "
+                    "section (the adaptivity-gap trio always runs)")
     args = ap.parse_args()
-    run(quick=args.quick, reuse_only=args.reuse, disagg_only=args.disagg)
+    run(quick=args.quick, reuse_only=args.reuse, disagg_only=args.disagg,
+        kinds=tuple(k for k in args.kinds.split(",") if k))

@@ -44,6 +44,18 @@ quiet-period TPOT (per-worker virtual clocks), while the unified arm shows
 a measurably larger degradation on the same trace — the disaggregation
 payoff, not a workload artifact.
 
+The ``compress`` section (written by ``serve_bench --compress``, so
+``make bench-compress`` runs the gate in CI) carries the slow-tier codec
+A/B (DESIGN.md §14): the identical zipf-hot trace served under the
+``none`` / ``fp32`` / ``int8`` slow-store codecs at the same page quota.
+Gates: identical served load across arms, output tokens bit-exact between
+``none`` and ``fp32`` (a full-precision store must change nothing), the
+int8 arm's migration bytes <= 0.35x the fp32 arm's, its steady hit rate
+within eps of fp32 per resource, the logit probe's fp32 drift exactly 0
+and int8 drift within its bound, and the zero1 ``compress_collective``
+consumer: fp32-parity update drift within tolerance at <= 0.30x the
+collective bytes.
+
 Every resource row is additionally held to the telemetry conservation
 laws: ``hit_rate`` must equal ``fast_reads / (fast_reads + slow_reads)``
 (every metered read is either fast or slow — none lost, none invented),
@@ -121,6 +133,19 @@ HANDOFF_KEYS = {"count", "bytes_out", "bytes_in", "depth_peak"}
 # anything (floor calibrated well below observed unified degradation).
 DISAGG_MAX_DEGRADATION = 0.10
 UNIFIED_MIN_DEGRADATION = 0.25
+COMPRESS_KEYS = {"arch", "trace", "arrival", "lanes", "seed", "trace_steps",
+                 "quick", "arms", "bytes_ratio_int8_fp32",
+                 "bytes_ratio_bound", "hit_eps", "tokens_match_none_fp32",
+                 "probe", "zero1"}
+COMPRESS_ARM_KEYS = {"codec", "steps", "tokens", "wall_s", "hit_steady",
+                     "wire_row_bytes", "migration_bytes", "max_epoch_bytes",
+                     "quota_bytes", "resources"}
+COMPRESS_PROBE_KEYS = {"prompt_len", "n_steps", "tokens_match_none_fp32",
+                       "drift_fp32", "drift_int8", "drift_bound"}
+COMPRESS_ZERO1_KEYS = {"steps", "padded", "bytes_fp32", "bytes_int8",
+                       "byte_ratio", "byte_ratio_bound", "update_drift",
+                       "drift_tolerance"}
+COMPRESS_ARMS = ("none", "fp32", "int8")
 
 
 def _check_resources(tag: str, resources: dict, errors: list[str]) -> None:
@@ -345,6 +370,88 @@ def _check_disagg(d: dict, errors: list[str]) -> None:
             f"{ud:+.1%} — disaggregation bought nothing on this trace")
 
 
+def _check_compress(c: dict, errors: list[str]) -> None:
+    """The slow-tier codec gates (DESIGN.md §14): compression must pay in
+    bytes without costing tokens — identical load across arms, fp32-arm
+    bit-exactness, the int8 byte cut, hit-rate parity, bounded logit
+    drift, and the zero1 compressed-collective parity + byte cut."""
+    missing = COMPRESS_KEYS - set(c)
+    if missing:
+        errors.append(f"compress: missing keys {sorted(missing)}")
+        return
+    arms = c["arms"]
+    if set(arms) != set(COMPRESS_ARMS):
+        errors.append(f"compress: arms {sorted(arms)} != "
+                      f"{sorted(COMPRESS_ARMS)}")
+        return
+    for name in COMPRESS_ARMS:
+        arm = arms[name]
+        amissing = COMPRESS_ARM_KEYS - set(arm)
+        if amissing:
+            errors.append(f"compress/{name}: missing {sorted(amissing)}")
+            return
+        if arm["codec"] != name:
+            errors.append(f"compress/{name}: arm records codec "
+                          f"{arm['codec']!r}")
+        for res, h in arm["hit_steady"].items():
+            if not 0.0 <= h <= 1.0:
+                errors.append(f"compress/{name}: {res} hit_steady {h} "
+                              "out of [0, 1]")
+        _check_resources(f"compress/{name}", arm["resources"], errors)
+    if len({(arms[a]["steps"], arms[a]["tokens"]) for a in COMPRESS_ARMS}) != 1:
+        errors.append("compress: arms served different load — the A/B must "
+                      "replay the identical trace under every codec")
+    if not c["tokens_match_none_fp32"]:
+        errors.append("compress: output tokens diverge between the none and "
+                      "fp32 arms — a full-precision slow store changed what "
+                      "the model generated")
+    ratio = c["bytes_ratio_int8_fp32"]
+    if not ratio <= c["bytes_ratio_bound"]:
+        errors.append(
+            f"compress: int8/fp32 migration-byte ratio {ratio:.3f} exceeds "
+            f"{c['bytes_ratio_bound']} — the codec is not paying its way")
+    if not arms["int8"]["migration_bytes"] > 0:
+        errors.append("compress: int8 arm moved no migration bytes — the "
+                      "byte-ratio gate proves nothing")
+    eps = c["hit_eps"]
+    for res, h8 in arms["int8"]["hit_steady"].items():
+        hf = arms["fp32"]["hit_steady"].get(res, 0.0)
+        if not h8 >= hf - eps:
+            errors.append(
+                f"compress: int8 steady hit rate on {res} {h8:.3f} fell "
+                f"more than eps={eps} below fp32 {hf:.3f} — compression "
+                "degraded tiering behaviour")
+    p = c["probe"]
+    pmissing = COMPRESS_PROBE_KEYS - set(p)
+    if pmissing:
+        errors.append(f"compress/probe: missing {sorted(pmissing)}")
+        return
+    if p["drift_fp32"] != 0.0 or not p["tokens_match_none_fp32"]:
+        errors.append(
+            f"compress/probe: fp32 logit drift {p['drift_fp32']} must be "
+            "exactly 0 (bf16 -> fp32 -> bf16 is the identity) — the codec "
+            "plumbing is not transparent")
+    if not p["drift_int8"] <= p["drift_bound"]:
+        errors.append(
+            f"compress/probe: int8 logit drift {p['drift_int8']:.3f} "
+            f"exceeds {p['drift_bound']} — quantization visibly moved the "
+            "model")
+    z = c["zero1"]
+    zmissing = COMPRESS_ZERO1_KEYS - set(z)
+    if zmissing:
+        errors.append(f"compress/zero1: missing {sorted(zmissing)}")
+        return
+    if not z["update_drift"] <= z["drift_tolerance"]:
+        errors.append(
+            f"compress/zero1: param drift {z['update_drift']:.2e} exceeds "
+            f"{z['drift_tolerance']} — the compressed collective lost "
+            "fp32 parity")
+    if not z["byte_ratio"] <= z["byte_ratio_bound"]:
+        errors.append(
+            f"compress/zero1: collective byte ratio {z['byte_ratio']:.3f} "
+            f"exceeds {z['byte_ratio_bound']}")
+
+
 def _check_prefill(p: dict, errors: list[str]) -> None:
     """The chunked-prefill TTFT gate (DESIGN.md §11): a >= 512-token prompt
     served through the Scheduler must reach its first token in <= 1/4 the
@@ -385,11 +492,11 @@ def validate(path: str) -> list[str]:
         doc = json.load(f)
     errors: list[str] = []
     if not set(doc) <= {"quick", "cases", "traffic", "mass_ab", "prefill",
-                        "kv_reuse", "disagg"} or \
+                        "kv_reuse", "disagg", "compress"} or \
             not {"quick", "cases"} <= set(doc):
         errors.append(f"top-level keys {sorted(doc)} not in expected "
                       "['cases', 'quick'] (+ optional 'traffic', 'mass_ab', "
-                      "'prefill', 'kv_reuse', 'disagg')")
+                      "'prefill', 'kv_reuse', 'disagg', 'compress')")
         return errors
     if not doc["cases"] and "traffic" not in doc:
         errors.append("no benchmark cases recorded")
@@ -406,6 +513,11 @@ def validate(path: str) -> list[str]:
     if doc["cases"] and "mass_ab" not in doc:
         errors.append("mass_ab section missing — serve_bench runs the "
                       "fill-vs-kernel fidelity A/B (DESIGN.md §10)")
+    if doc["cases"] and "compress" not in doc:
+        errors.append("compress section missing — serve_bench --compress "
+                      "runs the slow-tier codec A/B (DESIGN.md §14)")
+    if "compress" in doc:
+        _check_compress(doc["compress"], errors)
     if "mass_ab" in doc:
         _check_mass_ab(doc["mass_ab"], errors)
     if "traffic" in doc:
@@ -446,9 +558,14 @@ def main() -> int:
     disagg = (f", disagg TPOT {dg['disagg']['tpot_degradation']:+.1%} vs "
               f"unified {dg['unified']['tpot_degradation']:+.1%}"
               if dg else "")
+    cp = doc.get("compress")
+    compress = (f", int8/fp32 bytes {cp['bytes_ratio_int8_fp32']:.3f} "
+                f"(drift {cp['probe']['drift_int8']:.3f}, zero1 "
+                f"{cp['zero1']['byte_ratio']:.3f})" if cp else "")
     print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces{gap}{ttft}"
-          f"{reuse}{disagg}, schema + quota + conservation + adaptivity + "
-          "fidelity + prefill + reuse + disagg checks pass")
+          f"{reuse}{disagg}{compress}, schema + quota + conservation + "
+          "adaptivity + fidelity + prefill + reuse + disagg + compress "
+          "checks pass")
     return 0
 
 

@@ -11,11 +11,19 @@ State contract (matches ``repro.train.step``):
     ef  = ef_init(params)                     # fp32 residuals, zeros
     qs, ef = compress_grads(grads, ef)        # qs is a pytree of packets
     grads  = decompress_grads(qs)             # original dtypes restored
+
+The symmetric-int8 math itself lives in :mod:`repro.tiering.codec`
+(DESIGN.md §14) — the same quantize/dequantize core the slow-tier row
+codecs use, applied here with a per-TENSOR scale instead of per-row.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# a LEAF module (jax-only imports): safe against the package-level
+# tiering <-> dist import cycle in either import order
+from repro.tiering.codec import dequantize_int8, quantize_int8
 
 
 def ef_init(params):
@@ -29,15 +37,13 @@ def _is_packet(x) -> bool:
 
 def _compress_leaf(g, e):
     x = g.astype(jnp.float32) + e
-    scale = jnp.max(jnp.abs(x)) / 127.0
-    scale = jnp.where(scale > 0.0, scale, 1.0)   # all-zero tensor: q == 0
-    q = jnp.round(x / scale).astype(jnp.int8)    # |x|/scale <= 127 by constr.
+    q, scale = quantize_int8(x)                  # per-tensor symmetric scale
     packet = {"q": q, "scale": scale,
               # zero-size carrier so the original dtype survives the pytree
               "meta": jnp.zeros((0,), g.dtype)}
     # residual against what the receiver actually applies — including the
     # cast back to the gradient dtype — so low-precision grads stay unbiased
-    applied = (q.astype(jnp.float32) * scale).astype(g.dtype)
+    applied = dequantize_int8(q, scale, g.dtype)
     return packet, x - applied.astype(jnp.float32)
 
 
@@ -53,7 +59,7 @@ def compress_grads(grads, ef):
 def decompress_grads(qs):
     """Dequantize a packet pytree back to tensors in their original dtypes."""
     def one(t):
-        return (t["q"].astype(jnp.float32) * t["scale"]).astype(t["meta"].dtype)
+        return dequantize_int8(t["q"], t["scale"], t["meta"].dtype)
 
     return jax.tree.map(one, qs, is_leaf=_is_packet)
 

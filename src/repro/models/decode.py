@@ -58,7 +58,8 @@ def _embed_tokens(params, token, tiered):
         return embed_apply(params["embed"], token)
     rpp = tv["rows_per_page"]
     rows = _tier_lookup_rows(tv["fast"], tv["slow"], tv["page_slot"],
-                             token // rpp)          # (B, 1, rpp, d)
+                             token // rpp,
+                             scale=tv.get("scale"))  # (B, 1, rpp, d)
     r = (token % rpp)[..., None, None]
     return jnp.take_along_axis(rows, r, axis=-2)[..., 0, :]
 

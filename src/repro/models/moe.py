@@ -348,7 +348,9 @@ def moe_apply_tiered(p, x, k: int, *, bias=None, tier, group_id):
     the HBM fast buffer, cold experts stream from the slow store in the
     same fused gather — the serving analogue of a CXL slow-tier load, a
     miss is only slower, never an error.  ``tier`` is the resource's
-    ``{"fast", "slow", "page_slot"}`` view; ``group_id`` the layer-group
+    ``{"fast", "slow", "page_slot"}`` view (plus the int8 codec's optional
+    ``"scale"`` — cold rows dequantize inside the same fused gather,
+    DESIGN.md §14); ``group_id`` the layer-group
     index (page_id = group * n_experts + expert).  Gathered compute is
     per-token (B, S, k) einsums — at decode shapes (S=1, small k) this
     touches k weight blocks per token instead of all E.
@@ -365,7 +367,8 @@ def moe_apply_tiered(p, x, k: int, *, bias=None, tier, group_id):
     gate, idx, probs = router_topk(p, x, k, bias=bias)
     _, d, f = p["w_gate"].shape
     rows = lookup_rows(tier["fast"], tier["slow"], tier["page_slot"],
-                       group_id * e + idx)              # (B, S, k, 3*d*f)
+                       group_id * e + idx,
+                       scale=tier.get("scale"))         # (B, S, k, 3*d*f)
     rows = rows.astype(p["w_gate"].dtype)
     wg = rows[..., : d * f].reshape(idx.shape + (d, f))
     wi = rows[..., d * f: 2 * d * f].reshape(idx.shape + (d, f))

@@ -96,6 +96,12 @@ class ServeConfig:
     # Bind embedding/expert reads of the jitted decode step to the tiered
     # store (in-jit lookup_rows; off = dense params, reads stay host-only).
     jit_tier_reads: bool = True
+    # Slow-store wire format for every tiered resource (tiering/codec.py,
+    # DESIGN.md §14): "none" = native rows (byte-exact data path), "fp32" =
+    # full-precision store (the compression A/B's fp arm — numerically the
+    # identity for bf16 rows), "int8" = per-row symmetric quantization
+    # (~4x fewer wire bytes; reads dequantize in the fused tier gather).
+    slow_codec: str = "none"
     # Content-addressed KV reuse (repro.cache, DESIGN.md §12): extra shared
     # pool pages appended to the KV slow store behind a refcounted index so
     # admission can install matched prompt pages pre-resident.  Lane mode
@@ -217,7 +223,8 @@ class ServeEngine:
                     + scfg.reuse_pages,
                     hot_slots=scfg.kv_tier_slots or scfg.hot_slots,
                     quota_pages=scfg.kv_quota,
-                    row_shape=row_shape, row_dtype="bfloat16")
+                    row_shape=row_shape, row_dtype="bfloat16",
+                    slow_codec=scfg.slow_codec)
                 res = tm.make_resource(
                     "kv", spec, mass_threshold=scfg.kv_mass_threshold)
                 # the slow tier starts empty: pages are flushed down from the
@@ -233,7 +240,8 @@ class ServeEngine:
                     hot_slots=cfg.n_groups * scfg.expert_hot_slots,
                     quota_pages=scfg.expert_quota,
                     row_shape=tuple(payload.shape[1:]),
-                    row_dtype=str(payload.dtype))
+                    row_dtype=str(payload.dtype),
+                    slow_codec=scfg.slow_codec)
                 res = tm.make_resource("experts", spec,
                                        n_experts=cfg.moe.n_experts)
             elif kind == "embeddings":
@@ -244,7 +252,8 @@ class ServeEngine:
                     hot_slots=scfg.embed_hot_slots,
                     quota_pages=scfg.embed_quota,
                     row_shape=tuple(payload.shape[1:]),
-                    row_dtype=str(payload.dtype))
+                    row_dtype=str(payload.dtype),
+                    slow_codec=scfg.slow_codec)
                 res = tm.make_resource("embeddings", spec,
                                        rows_per_page=rows)
             else:

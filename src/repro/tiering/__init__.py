@@ -7,10 +7,15 @@ One API for every consumer of slow memory:
   NeoMemDaemon (multiplexed) ................. one loop, N resources
   TierStats .................................. one telemetry schema
   migrate / TierBuffers ...................... the data plane (DESIGN.md §8)
+  codec ...................................... slow-store wire formats (§14)
 
 The legacy ``repro.core.adapters`` classes and ``repro.core.daemon`` are
 thin deprecation shims over this package.
 """
+from repro.tiering.codec import (  # noqa: F401
+    CODECS, decode_rows, dequantize_int8, encode_rows, quantize_int8,
+    wire_row_bytes,
+)
 from repro.tiering.daemon import (  # noqa: F401
     NeoMemDaemon, ResourceHandle, split_quota,
 )

@@ -1,0 +1,145 @@
+"""Row codecs: the slow tier's wire format (DESIGN.md §14).
+
+NeoMem's premise is that slow-tier bytes are the system's currency — the
+CXL link is bandwidth-bound, so what a page COSTS is what it serializes
+to, not what it dequantizes to.  This module makes that explicit: a codec
+decides how a resource's slow store is encoded at rest, and therefore how
+many bytes every migration epoch, flush, and reuse-store install meters.
+
+Three codecs:
+
+  * ``none`` — identity: the slow store holds rows in their native dtype.
+    The default; byte-for-byte the pre-codec data path.
+  * ``fp32`` — full-precision store: rows upcast to fp32 at rest.  For
+    bf16-native rows this is numerically the identity (bf16 -> fp32 is
+    exact), so it is the "fp arm" of the compression A/B: same values,
+    4 bytes/element on the wire.
+  * ``int8`` — per-row symmetric quantization: ``scale = max|row| / 127``
+    (fp32, one scalar per page row), ``q = round(row / scale)`` as int8.
+    ~4x fewer wire bytes than ``fp32`` and the same byte quota holds ~4x
+    more slow rows; reads dequantize in the fused dual-tier gather, so
+    the jitted decode path stays host-verb-free.
+
+The quantize/dequantize core here is shared with the gradient-compression
+link (:mod:`repro.dist.compression` imports :func:`quantize_int8` /
+:func:`dequantize_int8` with a per-TENSOR scale) — one implementation of
+the symmetric-int8 math serves both consumers, as one NeoProf serves every
+resource.
+
+Design rule for the jitted read path: DECODE dispatches on the payload's
+dtype and the presence of a scale array — both trace-time static — so
+``migrate.read_rows`` / ``lookup_rows`` need no codec name threaded
+through the tier-view pytree.  ENCODE (writes, demotions, installs) takes
+the codec name as a static argument; :mod:`repro.tiering.migrate` keys its
+cached jit builders on it.
+
+This module is a LEAF: it imports only jax/numpy, never the rest of
+``repro.tiering`` or ``repro.dist`` — both packages import it, so any
+repro import here would cycle through the package ``__init__``s.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+CODECS = ("none", "fp32", "int8")
+
+_SCALE_BYTES = 4        # one fp32 scale per int8 page row
+
+
+def check_codec(codec: str) -> str:
+    if codec not in CODECS:
+        raise KeyError(f"unknown slow-tier codec {codec!r}; known: {CODECS}")
+    return codec
+
+
+# ---------------------------------------------------------------------------
+# the shared symmetric-int8 core (repro.dist.compression uses axes=None)
+# ---------------------------------------------------------------------------
+
+def symmetric_scale(x: jax.Array, axes=None) -> jax.Array:
+    """``max|x| / 127`` over ``axes`` (None = the whole tensor), guarded so
+    an all-zero slice quantizes to q == 0 with scale 1 instead of 0/0."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=axes) / 127.0
+    return jnp.where(scale > 0.0, scale, 1.0)
+
+
+def quantize_int8(x: jax.Array, axes=None) -> tuple[jax.Array, jax.Array]:
+    """Symmetric int8: -> (q int8, scale fp32 reduced over ``axes``).
+
+    ``|x| <= 127 * scale`` by construction, so the round never clips; the
+    worst-case per-element reconstruction error is ``scale / 2``.
+    """
+    x = x.astype(jnp.float32)
+    scale = symmetric_scale(x, axes)
+    s = scale.reshape(scale.shape + (1,) * (x.ndim - scale.ndim))
+    q = jnp.round(x / s).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, out_dtype) -> jax.Array:
+    """``q * scale`` broadcast back over the quantized trailing axes."""
+    x = q.astype(jnp.float32)
+    s = scale.reshape(scale.shape + (1,) * (x.ndim - scale.ndim))
+    return (x * s).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# row codecs (the slow store's at-rest format)
+# ---------------------------------------------------------------------------
+
+def encode_rows(codec: str, rows: jax.Array
+                ) -> tuple[jax.Array, jax.Array | None]:
+    """Encode ``(K, *row_shape)`` native rows for the slow store.
+
+    -> ``(payload, scale)``: ``int8`` yields an int8 payload plus a (K,)
+    fp32 per-row scale; ``none``/``fp32`` yield a dtype-cast payload and
+    ``scale=None``.  Pure jnp — safe inside the write verbs' jits.
+    """
+    check_codec(codec)
+    if codec == "int8":
+        return quantize_int8(rows, axes=tuple(range(1, rows.ndim)))
+    if codec == "fp32":
+        return rows.astype(jnp.float32), None
+    return rows, None
+
+
+def decode_rows(payload: jax.Array, scale: jax.Array | None,
+                out_dtype) -> jax.Array:
+    """Decode slow-store rows back to ``out_dtype`` (the fast tier's dtype).
+
+    Dispatch is trace-time static — payload dtype and scale presence — so
+    this inlines into the fused dual-tier gather with no host verb: an
+    int8 payload dequantizes against its per-row scales, anything else is
+    a plain cast (identity for ``none``; exact bf16<->fp32 for ``fp32``).
+    """
+    if payload.dtype == jnp.int8:
+        if scale is None:
+            raise ValueError("int8 slow store decoded without its scales")
+        return dequantize_int8(payload, scale, out_dtype)
+    return payload.astype(out_dtype)
+
+
+def encode_store(codec: str, slow_data: jax.Array
+                 ) -> tuple[jax.Array, jax.Array | None]:
+    """Encode a whole ``(num_pages, *row_shape)`` backing store at bind
+    time (same layout contract as :func:`encode_rows`)."""
+    return encode_rows(codec, jnp.asarray(slow_data))
+
+
+def wire_row_bytes(codec: str, row_shape: tuple, row_dtype) -> int:
+    """Bytes ONE page row costs on the migration wire / at rest.
+
+    This is the byte unit every quota and telemetry counter meters
+    (DESIGN.md §14): ``int8`` pays 1 byte/element + its fp32 scale,
+    ``fp32`` pays 4 bytes/element, ``none`` pays the native dtype.
+    """
+    check_codec(codec)
+    n = math.prod(row_shape)
+    if codec == "int8":
+        return n + _SCALE_BYTES
+    if codec == "fp32":
+        return n * 4
+    return n * jnp.dtype(row_dtype).itemsize

@@ -120,8 +120,10 @@ class ResourceHandle:
 
     def tier_view(self) -> dict[str, jax.Array]:
         """Device-array view for in-jit reads: ``{"fast", "slow",
-        "page_slot"}``, to be threaded as jit arguments into a step that
-        calls :func:`repro.tiering.migrate.lookup_rows` (DESIGN.md §10).
+        "page_slot", "scale"}`` (``scale`` is the int8 codec's per-row
+        scales, ``None`` otherwise), to be threaded as jit arguments into a
+        step that calls :func:`repro.tiering.migrate.lookup_rows`
+        (DESIGN.md §10, §14).
         Reads served this way are metered by the observation stream's touch
         accounting, not the host ``read_rows`` counters."""
         return self.mem.tier_view(self.state)

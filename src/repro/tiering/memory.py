@@ -36,6 +36,7 @@ from repro.core.neoprof import (NeoProfCommands, NeoProfParams, NeoProfState,
 from repro.core.policy import PolicyParams, PolicyState
 from repro.core.policy import update_threshold as _algorithm1
 from repro.core.tiering import TierParams, TierState
+from repro.tiering import codec as codec_lib
 from repro.tiering import migrate as migrate_lib
 from repro.tiering.stats import TierStats, drain_tier_stats
 from repro.tiering.stats import hit_rate as _hit_rate
@@ -138,7 +139,8 @@ class TieredMemory:
         # migration data plane (DESIGN.md §8) — absent until bind_data
         self.spec = None
         self.buffers: migrate_lib.TierBuffers | None = None
-        self.row_bytes = 0
+        self.codec = "none"          # slow-store wire format (DESIGN.md §14)
+        self.row_bytes = 0           # WIRE bytes per page once data is bound
         self.quota_bytes = 0
         # per-page write witness (None until bind_data): see pages_written
         self.written: np.ndarray | None = None
@@ -150,11 +152,17 @@ class TieredMemory:
                   daemon_params=daemon_params, policy_params=policy_params,
                   fixed_theta=fixed_theta)
         mem.spec = spec
+        mem.codec = codec_lib.check_codec(getattr(spec, "slow_codec", "none"))
         return mem
 
     # -- data plane (DESIGN.md §8) -------------------------------------------
-    def bind_data(self, slow_data, initially_valid: bool = True) -> None:
-        """Attach payload buffers: ``slow_data`` is (num_pages, *row_shape).
+    def bind_data(self, slow_data, initially_valid: bool = True,
+                  codec: str | None = None) -> None:
+        """Attach payload buffers: ``slow_data`` is (num_pages, *row_shape),
+        always in the resource's NATIVE dtype — the slow store is encoded to
+        ``codec``'s wire format here (default: the spec's ``slow_codec``;
+        DESIGN.md §14), and ``row_bytes`` / ``quota_bytes`` meter WIRE bytes
+        from then on.
 
         After binding, every promotion epoch physically moves rows between
         the fast/slow buffers (:meth:`apply_migration`) and meters the bytes;
@@ -179,7 +187,10 @@ class TieredMemory:
             if want != got:
                 raise ValueError(
                     f"slow_data rows {got} != ResourceSpec declaration {want}")
-        self.buffers = migrate_lib.init_buffers(slow_data, self.tp.num_slots)
+        if codec is not None:
+            self.codec = codec_lib.check_codec(codec)
+        self.buffers = migrate_lib.init_buffers(slow_data, self.tp.num_slots,
+                                                codec=self.codec)
         self.row_bytes = migrate_lib.row_bytes(self.buffers)
         self.quota_bytes = 2 * self.quota * self.row_bytes
         self.written = np.full(self.tp.num_pages, bool(initially_valid))
@@ -188,8 +199,9 @@ class TieredMemory:
                         stats: TierStats) -> int:
         """Execute one epoch's data movement against the bound buffers.
 
-        Returns the payload bytes moved (promotions + demotion write-backs),
-        metered into ``stats`` against the per-epoch byte quota.  A no-op
+        Returns the WIRE bytes moved (promotions + demotion write-backs, at
+        the codec's at-rest row size), metered into ``stats`` against the
+        per-epoch byte quota.  A no-op
         (no buffers bound, or an empty event) moves and meters nothing.
         """
         if self.buffers is None or event is None:
@@ -197,7 +209,8 @@ class TieredMemory:
         evicted = (event.evicted if event.evicted is not None
                    else jnp.full_like(jnp.asarray(event.victims), -1))
         self.buffers, n_up, n_down = migrate_lib.migrate(
-            self.buffers, event.promoted, event.victims, evicted)
+            self.buffers, event.promoted, event.victims, evicted,
+            codec=self.codec)
         moved = (n_up + n_down) * self.row_bytes
         stats.migration_bytes += moved
         stats.last_epoch_bytes = moved
@@ -226,8 +239,13 @@ class TieredMemory:
         occupied = np.flatnonzero(slot_page >= 0)
         if occupied.size == 0:
             return
-        fast = self.buffers.fast.at[occupied].set(
-            self.buffers.slow[slot_page[occupied]])
+        pages = slot_page[occupied]
+        scale = self.buffers.scale
+        rows = codec_lib.decode_rows(
+            self.buffers.slow[pages],
+            None if scale is None else scale[pages],
+            self.buffers.fast.dtype)
+        fast = self.buffers.fast.at[occupied].set(rows)
         self.buffers = self.buffers._replace(fast=fast)
 
     def lookup_rows(self, state: TieredMemoryState, page_ids) -> jax.Array:
@@ -240,16 +258,20 @@ class TieredMemory:
         if self.buffers is None:
             raise ValueError("no payload bound — call bind_data() first")
         return migrate_lib.lookup_rows(self.buffers.fast, self.buffers.slow,
-                                       state.tier.page_slot, page_ids)
+                                       state.tier.page_slot, page_ids,
+                                       scale=self.buffers.scale)
 
     def tier_view(self, state: TieredMemoryState) -> dict[str, jax.Array]:
-        """The device-array triple an in-jit consumer threads into its step:
-        ``{"fast", "slow", "page_slot"}`` — pass these as jit ARGUMENTS (not
-        closure constants) so daemon epochs swap buffers without retracing."""
+        """The device-array pytree an in-jit consumer threads into its step:
+        ``{"fast", "slow", "page_slot", "scale"}`` (``scale`` is ``None``
+        except under the ``int8`` codec — a valid pytree leaf either way) —
+        pass these as jit ARGUMENTS (not closure constants) so daemon epochs
+        swap buffers without retracing."""
         if self.buffers is None:
             raise ValueError("no payload bound — call bind_data() first")
         return {"fast": self.buffers.fast, "slow": self.buffers.slow,
-                "page_slot": state.tier.page_slot}
+                "page_slot": state.tier.page_slot,
+                "scale": self.buffers.scale}
 
     def read_rows(self, state: TieredMemoryState, page_ids,
                   slots: jax.Array | None = None) -> jax.Array:
@@ -270,16 +292,23 @@ class TieredMemory:
         slots_np = np.asarray(slots)
         ids_np = np.maximum(np.asarray(page_ids), 0)
         hit = slots_np >= 0
+
+        def _slow(ids):     # slow-store gather + wire-format decode
+            scale = self.buffers.scale
+            return codec_lib.decode_rows(
+                self.buffers.slow[ids],
+                None if scale is None else scale[ids],
+                self.buffers.fast.dtype)
+
         if hit.all():
             return self.buffers.fast[slots]
         if not hit.any():
-            return self.buffers.slow[ids_np]
-        rows = jnp.empty(page_ids.shape + self.buffers.slow.shape[1:],
-                         self.buffers.slow.dtype)
+            return _slow(ids_np)
+        rows = jnp.empty(page_ids.shape + self.buffers.fast.shape[1:],
+                         self.buffers.fast.dtype)
         rows = rows.at[np.flatnonzero(hit)].set(
             self.buffers.fast[slots_np[hit]])
-        return rows.at[np.flatnonzero(~hit)].set(
-            self.buffers.slow[ids_np[~hit]])
+        return rows.at[np.flatnonzero(~hit)].set(_slow(ids_np[~hit]))
 
     def write_rows(self, state: TieredMemoryState, page_ids, rows) -> int:
         """Refresh page payloads in both tiers (owners with mutating data):
@@ -290,7 +319,7 @@ class TieredMemory:
         page_ids = jnp.asarray(page_ids, jnp.int32)
         slots, _ = lookup(state, page_ids)
         self.buffers = migrate_lib.write_rows(self.buffers, page_ids, slots,
-                                              rows)
+                                              rows, codec=self.codec)
         return self._mark_written(page_ids)
 
     def write_pages(self, state: TieredMemoryState, page_ids, k_pages,
@@ -305,7 +334,8 @@ class TieredMemory:
         page_ids = jnp.asarray(page_ids, jnp.int32)
         slots, _ = lookup(state, page_ids)
         self.buffers = migrate_lib.write_pages(self.buffers, page_ids, slots,
-                                               k_pages, v_pages)
+                                               k_pages, v_pages,
+                                               codec=self.codec)
         return self._mark_written(page_ids)
 
     def copy_rows(self, state: TieredMemoryState, src_ids, dst_ids) -> int:

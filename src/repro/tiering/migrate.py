@@ -2,20 +2,34 @@
 
 The placement layer (:mod:`repro.core.tiering`) decides WHICH pages move;
 this module moves them.  A resource that binds payload data gets a
-:class:`TierBuffers` pair (DESIGN.md §8):
+:class:`TierBuffers` set (DESIGN.md §8):
 
-  * ``fast``: ``(num_slots, *row_shape)`` — promoted copies, device memory;
-  * ``slow``: ``(num_pages, *row_shape)`` — the full backing store, placed
-    in the ``pinned_host`` slow tier when the backend supports memory kinds
-    (:mod:`repro.dist.host_offload`), or kept as a logically-separate device
-    array on the CPU fallback so the data path runs unchanged in CI.
+  * ``fast``: ``(num_slots, *row_shape)`` — promoted copies, device memory,
+    always in the resource's NATIVE row dtype;
+  * ``slow``: ``(num_pages, *row_shape)`` — the full backing store in the
+    resource's wire format (:mod:`repro.tiering.codec`, DESIGN.md §14):
+    native dtype under the ``none`` codec, fp32 under ``fp32``, int8 under
+    ``int8``.  Placed in the ``pinned_host`` slow tier when the backend
+    supports memory kinds (:mod:`repro.dist.host_offload`), or kept as a
+    logically-separate device array on the CPU fallback so the data path
+    runs unchanged in CI;
+  * ``scale``: ``(num_pages,)`` fp32 per-row quantization scales — present
+    only under the ``int8`` codec (``None`` otherwise).
 
 Each daemon epoch applies ONE fused copy (:func:`migrate`): victims are
-written back to their old slow-tier pages (demotion), then the promoted
-pages are gathered into the freed fast slots.  Both buffers are donated on
-accelerators, so the epoch costs exactly the moved bytes — which the caller
-meters against the per-epoch byte quota in
+written back to their old slow-tier pages (demotion — re-ENCODED to the
+wire format), then the promoted pages are gathered into the freed fast
+slots (DECODED back to native dtype inside the same jit).  Both buffers
+are donated on accelerators, so the epoch costs exactly the moved WIRE
+bytes — which the caller meters against the per-epoch byte quota in
 :class:`~repro.tiering.stats.TierStats`.
+
+The read verbs (:func:`read_rows` / :func:`lookup_rows`) never take a
+codec name: decode dispatches on the payload dtype and scale presence
+(both trace-time static, see :func:`repro.tiering.codec.decode_rows`), so
+the jitted decode step's tier view stays a plain array pytree.  The write
+verbs encode, so they take ``codec`` as a static argument and key their
+cached jit builders on it.
 """
 from __future__ import annotations
 
@@ -27,19 +41,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.dist import host_offload as ho
+from repro.tiering import codec as codec_lib
 
 
 class TierBuffers(NamedTuple):
     """Payload buffers for one resource: fast copies over a slow store."""
 
-    fast: jax.Array   # (num_slots, *row_shape)
-    slow: jax.Array   # (num_pages, *row_shape) — full backing store
+    fast: jax.Array   # (num_slots, *row_shape) — native dtype
+    slow: jax.Array   # (num_pages, *row_shape) — full store, wire format
+    scale: jax.Array | None = None   # (num_pages,) fp32 — int8 codec only
 
 
 def row_bytes(buffers: TierBuffers) -> int:
-    """Payload bytes of one page row (the migration byte unit)."""
-    return int(np.prod(buffers.slow.shape[1:], dtype=np.int64)
-               * buffers.slow.dtype.itemsize)
+    """WIRE bytes of one page row (the migration byte unit): what the slow
+    store actually holds per page — int8 payload plus its fp32 scale under
+    the ``int8`` codec, the stored dtype otherwise."""
+    n = int(np.prod(buffers.slow.shape[1:], dtype=np.int64)
+            * buffers.slow.dtype.itemsize)
+    if buffers.scale is not None:
+        n += int(buffers.scale.dtype.itemsize)
+    return n
 
 
 def place_slow(x: jax.Array) -> jax.Array:
@@ -58,11 +79,23 @@ def place_slow(x: jax.Array) -> jax.Array:
     return ho.to_slow_tier(x, mesh, P())
 
 
-def init_buffers(slow_data: jax.Array, num_slots: int) -> TierBuffers:
-    """Build the buffer pair around an existing slow-tier payload array."""
-    slow = place_slow(slow_data)
-    fast = jnp.zeros((num_slots,) + slow.shape[1:], slow.dtype)
-    return TierBuffers(fast=fast, slow=slow)
+def init_buffers(slow_data: jax.Array, num_slots: int,
+                 codec: str = "none") -> TierBuffers:
+    """Build the buffer set around an existing payload array.
+
+    ``slow_data`` arrives in the resource's native dtype; the store is
+    encoded to the codec's wire format at bind time (the per-row scales
+    ride in the slow tier next to the payload).  The fast buffer keeps the
+    NATIVE dtype — promoted rows are decoded once, on promotion, so every
+    fast-tier hit serves full-precision rows with zero decode cost.
+    """
+    slow_data = jnp.asarray(slow_data)
+    payload, scale = codec_lib.encode_store(codec, slow_data)
+    slow = place_slow(payload)
+    if scale is not None:
+        scale = place_slow(scale)
+    fast = jnp.zeros((num_slots,) + slow.shape[1:], slow_data.dtype)
+    return TierBuffers(fast=fast, slow=slow, scale=scale)
 
 
 def segment_page_ids(segment: int, n_tokens: int, page_t: int,
@@ -88,65 +121,93 @@ def segment_page_ids(segment: int, n_tokens: int, page_t: int,
     return gids
 
 
-def _migrate_impl(fast, slow, promoted, victims, evicted):
+def _donate(n_buffers: int):
+    # donation frees the pre-copy buffers on accelerators; the CPU backend
+    # ignores donation with a warning, so only request it where it works
+    return tuple(range(n_buffers)) if jax.default_backend() != "cpu" else ()
+
+
+def _scale_at(scale, idx):
+    """Per-row scales for a gathered id batch (None under scale-less codecs)."""
+    return None if scale is None else scale[idx]
+
+
+def _migrate_impl(codec, fast, slow, scale, promoted, victims, evicted):
     ok = (promoted >= 0) & (victims >= 0)
     ev_ok = ok & (evicted >= 0)
     n_pages, n_slots = slow.shape[0], fast.shape[0]
     # gather promoted rows BEFORE the write-back scatter (a page promoted in
-    # this batch is never also evicted in it, but order still documents it)
-    gathered = slow[jnp.where(ok, promoted, 0)]
+    # this batch is never also evicted in it, but order still documents it);
+    # promotion is the decode point — fast rows are native dtype
+    up_idx = jnp.where(ok, promoted, 0)
+    gathered = codec_lib.decode_rows(slow[up_idx], _scale_at(scale, up_idx),
+                                     fast.dtype)
     # no-op lanes scatter out of bounds and are dropped — routing them to
     # index 0 would race with a legitimate write to page/slot 0
     ev_idx = jnp.where(ev_ok, evicted, n_pages)
     sl_idx = jnp.where(ok, victims, n_slots)
-    # demotion write-back: the victim slot's current row returns to its page
-    slow = slow.at[ev_idx].set(fast[jnp.where(ev_ok, victims, 0)], mode="drop")
+    # demotion write-back: the victim slot's current row returns to its page,
+    # re-encoded to the wire format (the codec's quantize point)
+    down, down_scale = codec_lib.encode_rows(
+        codec, fast[jnp.where(ev_ok, victims, 0)])
+    slow = slow.at[ev_idx].set(down.astype(slow.dtype), mode="drop")
+    if scale is not None:
+        scale = scale.at[ev_idx].set(down_scale, mode="drop")
     # promotion: hot rows land in the freed slots
     fast = fast.at[sl_idx].set(gathered, mode="drop")
-    return (fast, slow, jnp.sum(ok, dtype=jnp.int32),
+    return (fast, slow, scale, jnp.sum(ok, dtype=jnp.int32),
             jnp.sum(ev_ok, dtype=jnp.int32))
 
 
 @functools.lru_cache(maxsize=None)
-def _migrate_jit():
-    # donation frees the pre-copy buffers on accelerators; the CPU backend
-    # ignores donation with a warning, so only request it where it works
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
-    return jax.jit(_migrate_impl, donate_argnums=donate)
+def _migrate_jit(codec: str):
+    return jax.jit(functools.partial(_migrate_impl, codec),
+                   donate_argnums=_donate(3))
 
 
 def migrate(buffers: TierBuffers, promoted: jax.Array, victims: jax.Array,
-            evicted: jax.Array) -> tuple[TierBuffers, int, int]:
+            evicted: jax.Array, codec: str = "none"
+            ) -> tuple[TierBuffers, int, int]:
     """Apply one promotion batch as ONE fused copy (the epoch's data plane).
 
     ``promoted[i]`` is copied into fast slot ``victims[i]`` after the slot's
     previous occupant ``evicted[i]`` is written back to the slow store
-    (-1 = no-op lane everywhere).  Returns the new buffers plus the promoted
-    / demoted row counts actually moved (multiply by :func:`row_bytes` for
-    the metered traffic).
+    (-1 = no-op lane everywhere).  Decode-on-promote / encode-on-demote
+    happen inside the same jit under the resource's codec.  Returns the new
+    buffers plus the promoted / demoted row counts actually moved (multiply
+    by :func:`row_bytes` for the metered wire traffic).
     """
-    fast, slow, n_up, n_down = _migrate_jit()(
-        buffers.fast, buffers.slow, jnp.asarray(promoted, jnp.int32),
-        jnp.asarray(victims, jnp.int32), jnp.asarray(evicted, jnp.int32))
-    return TierBuffers(fast=fast, slow=slow), int(n_up), int(n_down)
+    fast, slow, scale, n_up, n_down = _migrate_jit(codec)(
+        buffers.fast, buffers.slow, buffers.scale,
+        jnp.asarray(promoted, jnp.int32), jnp.asarray(victims, jnp.int32),
+        jnp.asarray(evicted, jnp.int32))
+    return TierBuffers(fast=fast, slow=slow, scale=scale), int(n_up), \
+        int(n_down)
 
 
-@jax.jit
 def read_rows(fast: jax.Array, slow: jax.Array, slots: jax.Array,
-              page_ids: jax.Array) -> jax.Array:
+              page_ids: jax.Array, scale: jax.Array | None = None
+              ) -> jax.Array:
     """Serve a batch of page reads: fast copy when resident, slow fallback.
 
-    ``slots`` is the placement lookup result (-1 = not resident).  Rows for
+    ``slots`` is the placement lookup result (-1 = not resident).  The slow
+    fallback decodes in the same fused gather (per-row ``scale`` under the
+    int8 codec — dtype-dispatched, see :func:`codec.decode_rows`), so the
+    result is always native-dtype rows.  Pure jnp — runs inside the
+    caller's jit (the decode step) or eagerly from host verbs.  Rows for
     invalid page ids (< 0) read slow page 0 — callers mask them.
     """
     hit = slots >= 0
     safe_page = jnp.where(page_ids >= 0, page_ids, 0)
+    slow_rows = codec_lib.decode_rows(
+        slow[safe_page], _scale_at(scale, safe_page), fast.dtype)
     mask = hit.reshape(hit.shape + (1,) * (fast.ndim - 1))
-    return jnp.where(mask, fast[jnp.where(hit, slots, 0)], slow[safe_page])
+    return jnp.where(mask, fast[jnp.where(hit, slots, 0)], slow_rows)
 
 
 def lookup_rows(fast: jax.Array, slow: jax.Array, page_slot: jax.Array,
-                page_ids: jax.Array) -> jax.Array:
+                page_ids: jax.Array, scale: jax.Array | None = None
+                ) -> jax.Array:
     """The in-jit tiered read fast path (DESIGN.md §10): placement lookup +
     fused dual-tier gather, entirely inside the caller's jit.
 
@@ -154,100 +215,115 @@ def lookup_rows(fast: jax.Array, slow: jax.Array, page_slot: jax.Array,
     (``TierState.page_slot``); ``page_ids`` may have ANY leading shape —
     the result has ``page_ids.shape + row_shape``.  Fast-buffer rows are
     gathered for resident pages, with the slow store as the in-trace
-    fallback (bit-exact either way; tiers are inclusive).  This is what the
-    jitted decode step binds embedding/expert reads to — no host verb, no
-    per-step round-trip; ``TieredMemory.read_rows`` remains the host-side
-    verb whose hit-partitioned gather spares pinned-host bandwidth.
+    fallback — decoded from the wire format where the codec quantizes
+    (DESIGN.md §14), bit-exact under the ``none`` codec (tiers are
+    inclusive).  This is what the jitted decode step binds embedding/expert
+    reads to — no host verb, no per-step round-trip;
+    ``TieredMemory.read_rows`` remains the host-side verb whose
+    hit-partitioned gather spares pinned-host bandwidth.
     Rows for invalid page ids (< 0) read slow page 0 — callers mask them.
     """
     page_ids = jnp.asarray(page_ids, jnp.int32)
     slots = jnp.where(page_ids >= 0,
                       page_slot[jnp.maximum(page_ids, 0)], -1)
-    return read_rows(fast, slow, slots, page_ids)
+    return read_rows(fast, slow, slots, page_ids, scale=scale)
 
 
-def _write_rows_impl(fast, slow, page_ids, slots, rows):
-    rows = rows.astype(slow.dtype)
+def _write_rows_impl(codec, fast, slow, scale, page_ids, slots, rows):
+    payload, row_scale = codec_lib.encode_rows(codec, rows)
     slow_idx = jnp.where(page_ids >= 0, page_ids, slow.shape[0])
-    slow = slow.at[slow_idx].set(rows, mode="drop")
+    slow = slow.at[slow_idx].set(payload.astype(slow.dtype), mode="drop")
+    if scale is not None:
+        scale = scale.at[slow_idx].set(row_scale, mode="drop")
     # keep promoted copies coherent: a page resident in the fast tier gets
-    # its fast row refreshed too, so later reads/write-backs never serve or
-    # demote a stale snapshot
+    # its fast row refreshed too (native dtype — the fast tier never holds
+    # wire format), so later reads/write-backs never serve a stale snapshot
     fast_idx = jnp.where((page_ids >= 0) & (slots >= 0), slots,
                          fast.shape[0])
-    fast = fast.at[fast_idx].set(rows, mode="drop")
-    return fast, slow
+    fast = fast.at[fast_idx].set(rows.astype(fast.dtype), mode="drop")
+    return fast, slow, scale
 
 
 @functools.lru_cache(maxsize=None)
-def _write_rows_jit():
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
-    return jax.jit(_write_rows_impl, donate_argnums=donate)
+def _write_rows_jit(codec: str):
+    return jax.jit(functools.partial(_write_rows_impl, codec),
+                   donate_argnums=_donate(3))
 
 
 def write_rows(buffers: TierBuffers, page_ids: jax.Array, slots: jax.Array,
-               rows: jax.Array) -> TierBuffers:
+               rows: jax.Array, codec: str = "none") -> TierBuffers:
     """Refresh page payloads in BOTH tiers (owners with mutating payloads,
     e.g. the serve engine flushing freshly-filled KV pages).
 
-    The slow store always takes the write; pages currently promoted
-    (``slots[i] >= 0``) also get their fast copy refreshed so the tiers
-    stay coherent.  -1 page ids are dropped lanes.
+    The slow store always takes the write — encoded to the wire format —
+    and pages currently promoted (``slots[i] >= 0``) also get their fast
+    copy refreshed so the tiers stay coherent.  -1 page ids are dropped
+    lanes.
     """
-    fast, slow = _write_rows_jit()(
-        buffers.fast, buffers.slow, jnp.asarray(page_ids, jnp.int32),
-        jnp.asarray(slots, jnp.int32), rows)
-    return TierBuffers(fast=fast, slow=slow)
+    fast, slow, scale = _write_rows_jit(codec)(
+        buffers.fast, buffers.slow, buffers.scale,
+        jnp.asarray(page_ids, jnp.int32), jnp.asarray(slots, jnp.int32),
+        rows)
+    return TierBuffers(fast=fast, slow=slow, scale=scale)
 
 
-def _write_pages_impl(fast, slow, page_ids, slots, k_pages, v_pages):
+def _write_pages_impl(codec, fast, slow, scale, page_ids, slots,
+                      k_pages, v_pages):
     # ring layout (G, L, S, T, hkv, d) -> page-row layout (L*S, G, T, hkv, d)
     rows = jnp.concatenate([k_pages, v_pages], axis=-1)
     rows = jnp.moveaxis(rows, 0, 2)
     rows = rows.reshape((-1,) + rows.shape[2:])
-    return _write_rows_impl(fast, slow, page_ids, slots, rows)
+    return _write_rows_impl(codec, fast, slow, scale, page_ids, slots, rows)
 
 
 @functools.lru_cache(maxsize=None)
-def _write_pages_jit():
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
-    return jax.jit(_write_pages_impl, donate_argnums=donate)
+def _write_pages_jit(codec: str):
+    return jax.jit(functools.partial(_write_pages_impl, codec),
+                   donate_argnums=_donate(3))
 
 
 def write_pages(buffers: TierBuffers, page_ids: jax.Array, slots: jax.Array,
-                k_pages: jax.Array, v_pages: jax.Array) -> TierBuffers:
+                k_pages: jax.Array, v_pages: jax.Array,
+                codec: str = "none") -> TierBuffers:
     """Bulk KV-page write: flush paged-ring slots into the tier store as ONE
     donated fused op (the chunked-prefill / lane-flush data-plane verb).
 
     ``k_pages`` / ``v_pages`` are ring views shaped (G, L, S, T, hkv, dk|dv)
     — layer groups x lanes x ring slots; ``page_ids`` is the (L*S,) slot ->
     logical-page map (-1 = unchanged/dropped slot) and ``slots`` its
-    placement lookup.  The [K | V] concat, slot-major transpose and
-    dual-tier scatter all fuse inside one jit, so a chunk flush costs one
-    dispatch instead of the host-side reshape pipeline + scatter.
+    placement lookup.  The [K | V] concat, slot-major transpose, codec
+    encode and dual-tier scatter all fuse inside one jit, so a chunk flush
+    costs one dispatch instead of the host-side reshape pipeline + scatter.
     """
-    fast, slow = _write_pages_jit()(
-        buffers.fast, buffers.slow, jnp.asarray(page_ids, jnp.int32),
-        jnp.asarray(slots, jnp.int32), k_pages, v_pages)
-    return TierBuffers(fast=fast, slow=slow)
+    fast, slow, scale = _write_pages_jit(codec)(
+        buffers.fast, buffers.slow, buffers.scale,
+        jnp.asarray(page_ids, jnp.int32), jnp.asarray(slots, jnp.int32),
+        k_pages, v_pages)
+    return TierBuffers(fast=fast, slow=slow, scale=scale)
 
 
-def _copy_rows_impl(fast, slow, src_ids, dst_ids, dst_slots):
+def _copy_rows_impl(fast, slow, scale, src_ids, dst_ids, dst_slots):
     # the slow store is coherent by construction (every write verb and the
-    # demotion write-back lands there), so the gather reads slow only
-    rows = slow[jnp.maximum(src_ids, 0)]
+    # demotion write-back lands there), so the gather reads slow only —
+    # and copies the WIRE format verbatim (payload + scale): a quantized
+    # page publishes without a decode/re-encode round trip
+    src_safe = jnp.maximum(src_ids, 0)
+    rows = slow[src_safe]
+    src_scale = _scale_at(scale, src_safe)   # gather BEFORE the scatter below
     valid = (src_ids >= 0) & (dst_ids >= 0)
     slow_idx = jnp.where(valid, dst_ids, slow.shape[0])
     slow = slow.at[slow_idx].set(rows, mode="drop")
+    if scale is not None:
+        scale = scale.at[slow_idx].set(src_scale, mode="drop")
     fast_idx = jnp.where(valid & (dst_slots >= 0), dst_slots, fast.shape[0])
-    fast = fast.at[fast_idx].set(rows, mode="drop")
-    return fast, slow
+    fast = fast.at[fast_idx].set(
+        codec_lib.decode_rows(rows, src_scale, fast.dtype), mode="drop")
+    return fast, slow, scale
 
 
 @functools.lru_cache(maxsize=None)
 def _copy_rows_jit():
-    donate = (0, 1) if jax.default_backend() != "cpu" else ()
-    return jax.jit(_copy_rows_impl, donate_argnums=donate)
+    return jax.jit(_copy_rows_impl, donate_argnums=_donate(3))
 
 
 def copy_rows(buffers: TierBuffers, src_ids: jax.Array, dst_ids: jax.Array,
@@ -255,11 +331,14 @@ def copy_rows(buffers: TierBuffers, src_ids: jax.Array, dst_ids: jax.Array,
     """Duplicate page payloads store-to-store as ONE donated fused op —
     the content-addressed publish verb (DESIGN.md §12): a finished
     request's private segment pages are copied into shared pool pages
-    without a host round-trip.  Destinations currently promoted
+    without a host round-trip.  Wire format travels verbatim (no codec
+    transcode — the scales ride along), so the publish costs exactly the
+    compressed bytes.  Destinations currently promoted
     (``dst_slots[i] >= 0``) get their fast copy refreshed for coherence;
     -1 in either id array drops that pair.
     """
-    fast, slow = _copy_rows_jit()(
-        buffers.fast, buffers.slow, jnp.asarray(src_ids, jnp.int32),
-        jnp.asarray(dst_ids, jnp.int32), jnp.asarray(dst_slots, jnp.int32))
-    return TierBuffers(fast=fast, slow=slow)
+    fast, slow, scale = _copy_rows_jit()(
+        buffers.fast, buffers.slow, buffers.scale,
+        jnp.asarray(src_ids, jnp.int32), jnp.asarray(dst_ids, jnp.int32),
+        jnp.asarray(dst_slots, jnp.int32))
+    return TierBuffers(fast=fast, slow=slow, scale=scale)

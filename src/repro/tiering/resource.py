@@ -56,6 +56,7 @@ class ResourceSpec:
     touch_cap: int = 4096         # max page ids fed to tier accounting per step
     row_shape: tuple | None = None   # payload shape of ONE page (data plane)
     row_dtype: str = "bfloat16"      # payload dtype name
+    slow_codec: str = "none"         # slow-store wire format (tiering.codec)
 
     def prof_params(self) -> NeoProfParams:
         return NeoProfParams(sketch=SketchParams(
@@ -67,16 +68,28 @@ class ResourceSpec:
 
     @property
     def row_bytes(self) -> int:
-        """Payload bytes per page (0 when no data plane is declared)."""
+        """NATIVE payload bytes per page (0 when no data plane is declared)."""
         if self.row_shape is None:
             return 0
         return math.prod(self.row_shape) * jnp.dtype(self.row_dtype).itemsize
 
     @property
+    def wire_row_bytes(self) -> int:
+        """Bytes one page costs on the migration wire under ``slow_codec``
+        (== ``row_bytes`` for the ``none`` codec; DESIGN.md §14)."""
+        if self.row_shape is None:
+            return 0
+        from repro.tiering import codec as codec_lib
+        return codec_lib.wire_row_bytes(self.slow_codec, self.row_shape,
+                                        self.row_dtype)
+
+    @property
     def quota_bytes(self) -> int:
         """Per-epoch migration byte budget: each of ``quota_pages``
-        promotions moves at most one row up AND one written-back row down."""
-        return 2 * self.quota_pages * self.row_bytes
+        promotions moves at most one row up AND one written-back row down.
+        Metered in WIRE bytes — the same page-count quota costs ~4x fewer
+        bytes (holds ~4x more rows per byte) under the ``int8`` codec."""
+        return 2 * self.quota_pages * self.wire_row_bytes
 
 
 @runtime_checkable

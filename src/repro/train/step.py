@@ -40,6 +40,7 @@ class TrainConfig:
     remat: bool = True
     grad_compression: bool = False
     zero1: bool = False
+    compress_collective: bool = False  # int8+EF ZeRO-1 delta gather (§14)
     fsdp: bool = False                 # ZeRO-3 weight sharding over 'data'
     local_grads: bool = False          # defer the DP grad all-reduce out of
                                        # the microbatch loop (§Perf cell B)
@@ -59,6 +60,13 @@ def build_train_step(cfg: ArchConfig, mesh, tcfg: TrainConfig = TrainConfig()):
     ep = _ep_context(cfg, mesh)
     opt_init, opt_update = make_optimizer(tcfg.opt)
     prof_params = NeoProfParams(sketch=SketchParams(width=tcfg.sketch_width))
+    z1spec = None
+    if tcfg.zero1:
+        # the flat spec is trace-time static (shapes + treedef only), so it
+        # lives in the closure, never in the jitted state pytree
+        p_shapes = jax.eval_shape(
+            lambda: tr.init_params(cfg, jax.random.PRNGKey(0)))
+        z1spec = zero1.flat_spec(p_shapes, zero1._n_shards(mesh))
 
     def loss_fn(params, mb):
         loss, (metrics, aux) = tr.train_loss(cfg, params, mb,
@@ -136,7 +144,8 @@ def build_train_step(cfg: ArchConfig, mesh, tcfg: TrainConfig = TrainConfig()):
             grads = compression.decompress_grads(qs)
         if tcfg.zero1:
             new_params, new_opt, om = zero1.zero1_update(
-                tcfg.opt, params, grads, opt_state, state["z1spec"], mesh)
+                tcfg.opt, params, grads, opt_state, z1spec, mesh,
+                compress_collective=tcfg.compress_collective)
         else:
             new_params, new_opt, om = opt_update(params, grads, opt_state)
 
@@ -162,6 +171,8 @@ def make_state_shapes(cfg: ArchConfig, tcfg: TrainConfig, mesh=None):
             state["opt"] = {"m": jnp.zeros((1,), jnp.float32),
                             "v": jnp.zeros((1,), jnp.float32),
                             "step": jnp.zeros((), jnp.int32)}
+            if tcfg.compress_collective:
+                state["opt"]["ef"] = jnp.zeros((1,), jnp.float32)
         else:
             state["opt"] = opt_init(params)
         if tcfg.grad_compression:

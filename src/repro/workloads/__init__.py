@@ -1,8 +1,9 @@
 """repro.workloads — trace-driven multi-tenant workload generators.
 
 Seeded, replayable arrival traces (zipf-hot / diurnal-shift /
-scan-antagonist / prefill-heavy / agentic) for the continuous-batching
-scheduler; see :mod:`repro.workloads.traces` and DESIGN.md §9 / §12 / §13.
+scan-antagonist / prefill-heavy / agentic / prod-mixture) for the
+continuous-batching scheduler; see :mod:`repro.workloads.traces` and
+DESIGN.md §9 / §12 / §13.
 """
 from repro.workloads.traces import (  # noqa: F401
     ARRIVAL_KINDS, DEFAULT_TENANTS, PREFILL_HEAVY_TENANTS, TRACE_KINDS,

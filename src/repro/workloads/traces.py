@@ -34,6 +34,20 @@ CONTENT from a distribution the tiering daemon can (or cannot) exploit:
                           the SHAPE mixture is the workload.  Defaults to
                           :data:`PREFILL_HEAVY_TENANTS` when no explicit
                           tenant set is passed.
+  * ``prod-mixture``    — production prompt-LENGTH mixture: each arrival
+                          draws its prompt length from a two-component
+                          lognormal — a dominant short conversational mode
+                          plus a long-context document tail — the bimodal
+                          shape public serving traces show (the Azure LLM
+                          inference traces of the Splitwise/DistServe line
+                          of work: most requests are short, the byte mass
+                          lives in the tail).  Token content is the static
+                          Zipf head (as ``zipf-hot``), so against
+                          ``zipf-hot`` it isolates what REALISTIC length
+                          dispersion — ragged prefill walls, uneven segment
+                          occupancy — does to tiering and scheduling.
+                          Lengths are clipped to the KV segment budget
+                          (``max_total`` minus the output reservation).
   * ``agentic``         — multi-turn tool-agent sessions, the workload the
                           content-addressed KV store (DESIGN.md §12) exists
                           for.  Each tenant owns one fixed system prompt S;
@@ -58,9 +72,10 @@ Arrival PROCESSES are deliberately identical across the three content kinds
 for the same (seed, arrival) pair (same per-step draws, same prompt/output
 lengths) — only token content differs, so hit-rate deltas between traces
 measure the access pattern, not accidental load differences.  ``agentic``
-is the exception: its session structure (spaced turns, growing prompts) IS
-the workload, so it draws its own arrival schedule from the same structural
-stream.
+and ``prod-mixture`` are the exceptions: the agentic session structure
+(spaced turns, growing prompts) and the lognormal length draws ARE those
+workloads, so their structural draw sequences diverge from the shared-load
+trio by construction.
 
 Two arrival processes (the CXL-at-scale study's point: tails live in the
 bursts, not the means):
@@ -84,8 +99,17 @@ import functools
 import numpy as np
 
 TRACE_KINDS = ("zipf-hot", "diurnal-shift", "scan-antagonist",
-               "prefill-heavy", "agentic")
+               "prefill-heavy", "agentic", "prod-mixture")
 ARRIVAL_KINDS = ("bernoulli", "mmpp")
+
+# ``prod-mixture`` length model: (meanlog, sdlog) per lognormal component
+# and the short component's mixture share.  exp(meanlog) ~ median length:
+# ~7-token conversational prompts ~70% of the time, a ~27-token document
+# tail otherwise — the bimodal public-trace shape scaled to the serve
+# benches' max_seq=56 segments.
+PROD_MIX_SHORT = (1.9, 0.45)
+PROD_MIX_LONG = (3.3, 0.25)
+PROD_MIX_SHORT_SHARE = 0.7
 
 # MMPP defaults: calm->burst 0.05, burst->calm 0.25 => stationary burst
 # share 1/6; burst triples the rate and calm_scale is solved so the
@@ -220,8 +244,9 @@ def make_trace(kind: str, *, n_steps: int = 200, vocab: int = 256,
     kind; token content comes from a second stream — so for a fixed
     (seed, arrival) pair, traces of different kinds carry the SAME load at
     the same steps and differ only in what they touch.  The ``turn_gap`` /
-    ``sys_len`` / ``n_convs`` / ``work_len`` / ``max_total`` knobs apply to
-    ``kind="agentic"`` only (see :func:`_agentic_arrivals`).
+    ``sys_len`` / ``n_convs`` / ``work_len`` knobs apply to
+    ``kind="agentic"`` only (see :func:`_agentic_arrivals`); ``max_total``
+    also caps ``kind="prod-mixture"``'s lognormal prompt lengths.
     """
     if kind not in TRACE_KINDS:
         raise KeyError(f"unknown trace kind {kind!r}; known: {TRACE_KINDS}")
@@ -263,8 +288,19 @@ def make_trace(kind: str, *, n_steps: int = 200, vocab: int = 256,
         for ti, t in enumerate(tenants):
             if struct.random() >= min(1.0, t.rate * rate_scale[step]):
                 continue
-            plen = int(struct.integers(*t.prompt_len))
-            n_out = int(struct.integers(*t.out_len))
+            if kind == "prod-mixture":
+                # two-component lognormal prompt length (struct stream —
+                # this kind is exempt from the identical-load invariant),
+                # clipped to what fits a KV segment next to the output
+                n_out = int(struct.integers(*t.out_len))
+                mu, sig = (PROD_MIX_SHORT
+                           if struct.random() < PROD_MIX_SHORT_SHARE
+                           else PROD_MIX_LONG)
+                plen = int(np.clip(int(round(struct.lognormal(mu, sig))),
+                                   1, max(1, max_total - n_out - 1)))
+            else:
+                plen = int(struct.integers(*t.prompt_len))
+                n_out = int(struct.integers(*t.out_len))
             if kind == "scan-antagonist" and ti == 1:
                 # the antagonist sweeps the vocab with no reuse
                 tokens = ((scan_cursor + np.arange(plen)) % vocab

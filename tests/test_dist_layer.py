@@ -235,3 +235,40 @@ def test_state_shapes_include_ef():
     el = jax.tree_util.tree_leaves(shapes["ef"])
     assert [tuple(e.shape) for e in el] == [tuple(p.shape) for p in pl]
     assert all(e.dtype == jnp.float32 for e in el)
+
+
+def test_train_step_zero1_compressed_collective_end_to_end():
+    """build_train_step(zero1=True, compress_collective=True) jits and
+    descends: the flat spec is closure-static (never in the state pytree),
+    the EF residual threads through, and the collective-byte aux prices
+    the int8 gather under the fp32 one."""
+    from repro.configs.registry import get_smoke_config
+    from repro.core.neoprof import NeoProfParams, neoprof_init
+    from repro.core.sketch import SketchParams
+    from repro.models import transformer as tr
+    from repro.optim import zero1
+    from repro.optim.optimizers import OptConfig
+    from repro.train.step import TrainConfig, build_train_step
+
+    cfg = get_smoke_config("llama3.2-3b")
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=0, total_steps=10),
+                       microbatches=2, remat=False, zero1=True,
+                       compress_collective=True)
+    step = jax.jit(build_train_step(cfg, None, tcfg))
+
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    opt, spec = zero1.zero1_init(params, None, compress_collective=True)
+    state = {"params": params, "opt": opt,
+             "prof": neoprof_init(NeoProfParams(
+                 sketch=SketchParams(width=tcfg.sketch_width)))}
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0, cfg.vocab)
+    batch = {"tokens": tokens, "labels": tokens}
+
+    losses = []
+    for _ in range(3):
+        state, metrics = step(state, batch)
+        losses.append(float(metrics["loss"]))
+    assert np.isfinite(losses).all(), losses
+    assert losses[-1] < losses[0]
+    assert float(jnp.sum(jnp.abs(state["opt"]["ef"]))) > 0.0
+    assert int(metrics["collective_bytes"]) < 4 * spec.padded

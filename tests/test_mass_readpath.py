@@ -158,11 +158,13 @@ def test_handle_tier_view_roundtrip():
     from repro.tiering import migrate as migrate_lib
     mem, state, _ = _tiered_memory()
     view = mem.tier_view(state)
-    assert set(view) == {"fast", "slow", "page_slot"}
+    assert set(view) == {"fast", "slow", "page_slot", "scale"}
+    assert view["scale"] is None          # "none" codec stores no scales
     ids = jnp.asarray([3, 30], jnp.int32)
     np.testing.assert_array_equal(
         np.asarray(migrate_lib.lookup_rows(view["fast"], view["slow"],
-                                           view["page_slot"], ids)),
+                                           view["page_slot"], ids,
+                                           scale=view["scale"])),
         np.asarray(mem.lookup_rows(state, ids)))
 
 

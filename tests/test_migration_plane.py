@@ -304,8 +304,31 @@ def _bench_doc(tmp_path, mutate=None):
                 "off": reuse_arm("off", 0, 0.0, 0.13),
                 "prefix": reuse_arm("prefix", 32, 0.63, 0.13),
                 "substring": reuse_arm("substring", 32, 0.67, 0.136)}
+    def comp_arm(codec, wire, hit):
+        return {"codec": codec, "steps": 240, "tokens": 96, "wall_s": 9.0,
+                "hit_steady": {"embeddings": hit, "kv": 0.4},
+                "wire_row_bytes": {"embeddings": wire, "kv": wire * 2},
+                "migration_bytes": wire * 100, "max_epoch_bytes": wire * 8,
+                "quota_bytes": wire * 16,
+                "resources": {"embeddings": dict(row)}}
+    compress = {"arch": "a", "trace": "zipf-hot", "arrival": "mmpp",
+                "lanes": 4, "seed": 0, "trace_steps": 160, "quick": True,
+                "arms": {"none": comp_arm("none", 1024, 0.72),
+                         "fp32": comp_arm("fp32", 2048, 0.72),
+                         "int8": comp_arm("int8", 516, 0.73)},
+                "bytes_ratio_int8_fp32": 516 / 2048,
+                "bytes_ratio_bound": 0.35, "hit_eps": 0.02,
+                "tokens_match_none_fp32": True,
+                "probe": {"prompt_len": 12, "n_steps": 8,
+                          "tokens_match_none_fp32": True,
+                          "drift_fp32": 0.0, "drift_int8": 0.19,
+                          "drift_bound": 0.25},
+                "zero1": {"steps": 6, "padded": 1632, "bytes_fp32": 39168,
+                          "bytes_int8": 9840, "byte_ratio": 9840 / 39168,
+                          "byte_ratio_bound": 0.30, "update_drift": 4e-5,
+                          "drift_tolerance": 1e-3}}
     doc = {"quick": True, "cases": [case], "mass_ab": mass_ab,
-           "prefill": prefill, "kv_reuse": kv_reuse}
+           "prefill": prefill, "kv_reuse": kv_reuse, "compress": compress}
     if mutate:
         mutate(doc)
     p = tmp_path / "BENCH_serve.json"
@@ -411,6 +434,47 @@ def test_validate_bench_rejects_violations(tmp_path):
         del doc["kv_reuse"]["substring"]["reuse"]["tokens_saved"]
     assert any("reuse stats missing" in e
                for e in validate(_bench_doc(tmp_path, reuse_stat_missing)))
+
+    def no_compress(doc):
+        del doc["compress"]
+    assert any("compress section missing" in e
+               for e in validate(_bench_doc(tmp_path, no_compress)))
+
+    def byte_ratio_blown(doc):
+        doc["compress"]["bytes_ratio_int8_fp32"] = 0.5
+    assert any("not paying its way" in e
+               for e in validate(_bench_doc(tmp_path, byte_ratio_blown)))
+
+    def fp_arm_not_identity(doc):
+        doc["compress"]["probe"]["drift_fp32"] = 0.01
+    assert any("not transparent" in e
+               for e in validate(_bench_doc(tmp_path, fp_arm_not_identity)))
+
+    def int8_drift_blown(doc):
+        doc["compress"]["probe"]["drift_int8"] = 0.9
+    assert any("visibly moved" in e
+               for e in validate(_bench_doc(tmp_path, int8_drift_blown)))
+
+    def compress_tokens_diverge(doc):
+        doc["compress"]["tokens_match_none_fp32"] = False
+    assert any("full-precision slow store changed" in e
+               for e in validate(_bench_doc(tmp_path,
+                                            compress_tokens_diverge)))
+
+    def compress_hit_degraded(doc):
+        doc["compress"]["arms"]["int8"]["hit_steady"]["embeddings"] = 0.5
+    assert any("degraded tiering behaviour" in e
+               for e in validate(_bench_doc(tmp_path, compress_hit_degraded)))
+
+    def zero1_parity_lost(doc):
+        doc["compress"]["zero1"]["update_drift"] = 0.1
+    assert any("lost fp32 parity" in e
+               for e in validate(_bench_doc(tmp_path, zero1_parity_lost)))
+
+    def compress_uneven_load(doc):
+        doc["compress"]["arms"]["int8"]["tokens"] = 95
+    assert any("every codec" in e
+               for e in validate(_bench_doc(tmp_path, compress_uneven_load)))
 
 
 # ---------------------------------------------------------------------------

@@ -135,3 +135,23 @@ def test_mmpp_replayable_and_validated():
         != [_arrival_key(a) for a in t3.arrivals]
     with pytest.raises(KeyError):
         make_trace("zipf-hot", arrival="poisson")
+
+
+def test_prod_mixture_bimodal_replayable_and_capped():
+    """The production prompt-length mixture (DESIGN.md §14 bench workloads):
+    a 2-component lognormal — most prompts short-interactive, a heavy tail
+    of long-document prompts — deterministic per seed and always fitting
+    the KV segment budget (prompt + output reservation < max_total)."""
+    t1 = make_trace("prod-mixture", n_steps=200, vocab=128, seed=7)
+    t2 = make_trace("prod-mixture", n_steps=200, vocab=128, seed=7)
+    assert [_arrival_key(a) for a in t1.arrivals] == \
+        [_arrival_key(a) for a in t2.arrivals]
+    lens = np.array([len(a.tokens) for a in t1.arrivals])
+    assert len(lens) > 30
+    # both mixture components land: a short-interactive majority and a
+    # nonempty long-document tail well past the short mode
+    assert 0.4 <= float((lens <= 12).mean()) <= 0.95
+    assert int((lens >= 18).sum()) > 0
+    for a in t1.arrivals:
+        assert 1 <= len(a.tokens)
+        assert len(a.tokens) + a.max_new < 56       # the max_total cap
