@@ -1,7 +1,7 @@
 PYTEST ?= python -m pytest
 
 .PHONY: test test-fast test-dist dryrun bench-serve bench-traffic \
-	bench-reuse bench-disagg bench-compress validate-bench
+	bench-reuse bench-disagg bench-compress bench-overlap validate-bench
 
 # full tier-1 suite (includes slow 8-host-device subprocess parity tests)
 test:
@@ -53,6 +53,14 @@ bench-disagg:
 # and fp32-arm bit-exactness gates)
 bench-compress:
 	PYTHONPATH=src:. python benchmarks/serve_bench.py --quick --compress
+
+# async-migration A/B (DESIGN.md §15): the MoE smoke arch (paged KV +
+# experts + embeddings) served with the synchronous data plane vs the
+# double-buffered async one — writes the "overlap" section of
+# BENCH_serve.json (bit-exactness, equal-migration-bytes, stall-cut, and
+# achieved-overlap gates)
+bench-overlap:
+	PYTHONPATH=src:. python benchmarks/serve_bench.py --quick --overlap
 
 # check BENCH_serve.json against the schema documented in benchmarks/README.md
 validate-bench:

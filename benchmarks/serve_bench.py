@@ -75,6 +75,19 @@ COMPRESS_KW = dict(AB_KW, resources=("embeddings",), embed_hot_slots=6,
 # Logit-drift probe: single-request decode sized to stay inside the paged
 # ring (prompt + steps <= (hot_slots-1)*page_t), so drift isolates the
 # embedding read path's dequantization.
+# The overlap A/B (DESIGN.md §15): the MoE smoke arch served twice —
+# synchronous data plane vs the double-buffered async one — so the gate
+# covers every resource class at once (paged KV + experts + embeddings).
+# Identical model/trace/quota: same tokens, same migration bytes; only
+# WHEN decode pays for the copies differs (sync: a metered block every
+# epoch; async: the copy overlaps decode and the commit is a pointer swap).
+OVERLAP_ARCH = "kimi-k2-1t-a32b"
+OVERLAP_KW = dict(max_seq=64, paged=True, page_t=4, hot_slots=6,
+                  migration_interval=4, kv_quota=16,
+                  resources=("experts", "embeddings"),
+                  expert_hot_slots=2, embed_hot_slots=2)
+OVERLAP_STALL_RATIO = 0.25   # async stall gate: <= 1/4 of the sync arm's
+
 PROBE_PROMPT, PROBE_STEPS = 12, 8
 PROBE_DRIFT_BOUND = 0.25     # max |logit(int8) - logit(none)|, fp32 compare
 COMPRESS_BYTES_RATIO = 0.35  # int8/fp32 migration-byte gate (expect ~0.26)
@@ -331,6 +344,72 @@ def _compress_ab(quick: bool) -> dict:
     }
 
 
+def _overlap_run(async_on: bool, batch: int, prompt_len: int,
+                 n_tokens: int) -> tuple[np.ndarray, dict]:
+    cfg = get_smoke_config(OVERLAP_ARCH)
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, ServeConfig(async_migration=async_on,
+                                               **OVERLAP_KW))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab, (batch, prompt_len)).astype(np.int32)
+    t0 = time.perf_counter()
+    eng.generate(prompts, n_tokens=2)       # trace+compile warmup
+    compile_s = time.perf_counter() - t0
+    # close the warmup's books so the timed window meters only itself: the
+    # forced finalize commits any epoch the warmup left in flight (its
+    # block time lands in the warmup stall baseline, subtracted below)
+    eng.daemon.finalize()
+    res0 = eng.tier_stats()
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, n_tokens=n_tokens)
+    wall = time.perf_counter() - t0
+    eng.daemon.finalize()                   # equal-bytes accounting barrier
+    res = eng.tier_stats()
+    moved = sum(r["migration_bytes"] - res0[n]["migration_bytes"]
+                for n, r in res.items())
+    stall = sum(r["stall_s"] - res0[n]["stall_s"] for n, r in res.items())
+    return out, {
+        "mode": "async" if async_on else "sync",
+        "steps": n_tokens,
+        "compile_s": compile_s,
+        "wall_s": wall,
+        "tokens_per_s": batch * n_tokens / wall,
+        "stall_s": stall,
+        "migration_bytes": moved,
+        "resources": res,
+    }
+
+
+def _overlap_ab(quick: bool) -> dict:
+    batch, prompt_len = 2, 12
+    n_tokens = 16 if quick else 32
+    out_sync, arm_sync = _overlap_run(False, batch, prompt_len, n_tokens)
+    out_async, arm_async = _overlap_run(True, batch, prompt_len, n_tokens)
+    return {
+        "arch": OVERLAP_ARCH,
+        "batch": batch,
+        "prompt_len": prompt_len,
+        "n_tokens": n_tokens,
+        "tokens_match": bool(np.array_equal(out_sync, out_async)),
+        "stall_ratio_bound": OVERLAP_STALL_RATIO,
+        "sync": arm_sync,
+        "async": arm_async,
+    }
+
+
+def run_overlap(quick: bool = False) -> dict:
+    ov = _overlap_ab(quick)
+    s, a = ov["sync"], ov["async"]
+    emit("serve_overlap", 0.0,
+         f"match={ov['tokens_match']} "
+         f"stall sync={s['stall_s']:.3f}s async={a['stall_s']:.3f}s "
+         f"(gate <= {ov['stall_ratio_bound']} x) "
+         f"bytes sync={s['migration_bytes']} async={a['migration_bytes']}")
+    update_bench_json(OUT_PATH, overlap=ov)
+    emit("serve_bench_json", 0.0, os.path.normpath(OUT_PATH))
+    return ov
+
+
 def run_compress(quick: bool = False) -> dict:
     comp = _compress_ab(quick)
     emit("serve_compress_bytes", 0.0,
@@ -378,8 +457,13 @@ if __name__ == "__main__":
                     help="shorter traces / fewer decode tokens")
     ap.add_argument("--compress", action="store_true",
                     help="run only the codec A/B (the `compress` section)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="run only the async-migration A/B (the `overlap` "
+                         "section, DESIGN.md §15)")
     ns = ap.parse_args()
     if ns.compress:
         run_compress(quick=ns.quick)
+    elif ns.overlap:
+        run_overlap(quick=ns.quick)
     else:
         run(quick=ns.quick)

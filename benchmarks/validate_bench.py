@@ -56,12 +56,23 @@ and int8 drift within its bound, and the zero1 ``compress_collective``
 consumer: fp32-parity update drift within tolerance at <= 0.30x the
 collective bytes.
 
+The ``overlap`` section (written by ``serve_bench --overlap``, so ``make
+bench-overlap`` runs the gate in CI) carries the async-migration A/B
+(DESIGN.md §15): the MoE smoke arch — paged KV + experts + embeddings —
+served with the synchronous data plane and with the double-buffered async
+one, same model/trace/quota.  Gates: output tokens bit-exact (the stale
+committed epoch must serve the same bytes), per-resource migration bytes
+identical across arms (overlap hides the copies, it must not skip them),
+the sync arm's decode stall nonzero and the async arm's <= 1/4 of it, and
+every resource that moved payload reporting achieved overlap
+(``overlap_bytes_per_decode_s`` > 0).
+
 Every resource row is additionally held to the telemetry conservation
 laws: ``hit_rate`` must equal ``fast_reads / (fast_reads + slow_reads)``
 (every metered read is either fast or slow — none lost, none invented),
 and ``max_epoch_bytes`` — the LARGEST migration epoch, hand-off flushes
-included — must respect ``quota_bytes``, which ``last_epoch_bytes`` can
-never exceed.
+AND the issued-but-uncommitted epoch's ``inflight_bytes`` included — must
+respect ``quota_bytes``, which ``last_epoch_bytes`` can never exceed.
 
 Run after ``make bench-serve`` / ``make bench-traffic`` /
 ``make bench-reuse`` / ``make bench-disagg``:
@@ -81,7 +92,8 @@ CASE_KEYS = {
 RESOURCE_KEYS = {
     "name", "fast_reads", "slow_reads", "hit_rate", "promoted", "demoted",
     "ping_pong", "migration_bytes", "last_epoch_bytes", "max_epoch_bytes",
-    "quota_bytes", "migration_epochs", "flush_bytes",
+    "quota_bytes", "migration_epochs", "flush_bytes", "inflight_bytes",
+    "stall_s", "overlap_bytes_per_decode_s",
 }
 TRACE_KEYS = {
     "trace", "seed", "arrival", "kv_mass_source", "trace_steps", "steps",
@@ -146,6 +158,10 @@ COMPRESS_ZERO1_KEYS = {"steps", "padded", "bytes_fp32", "bytes_int8",
                        "byte_ratio", "byte_ratio_bound", "update_drift",
                        "drift_tolerance"}
 COMPRESS_ARMS = ("none", "fp32", "int8")
+OVERLAP_KEYS = {"arch", "batch", "prompt_len", "n_tokens", "tokens_match",
+                "stall_ratio_bound", "sync", "async"}
+OVERLAP_ARM_KEYS = {"mode", "steps", "compile_s", "wall_s", "tokens_per_s",
+                    "stall_s", "migration_bytes", "resources"}
 
 
 def _check_resources(tag: str, resources: dict, errors: list[str]) -> None:
@@ -169,6 +185,11 @@ def _check_resources(tag: str, resources: dict, errors: list[str]) -> None:
                 f"{tag}/{name}: last_epoch_bytes {row['last_epoch_bytes']}"
                 f" exceeds max_epoch_bytes {row['max_epoch_bytes']} — "
                 "the epoch maximum lost an epoch")
+        if row["inflight_bytes"] > row["max_epoch_bytes"]:
+            errors.append(
+                f"{tag}/{name}: inflight_bytes {row['inflight_bytes']}"
+                f" exceeds max_epoch_bytes {row['max_epoch_bytes']} — "
+                "the snapshot failed to fold the in-flight epoch")
         if not 0.0 <= row["hit_rate"] <= 1.0:
             errors.append(f"{tag}/{name}: hit_rate {row['hit_rate']} "
                           "out of [0, 1]")
@@ -452,6 +473,54 @@ def _check_compress(c: dict, errors: list[str]) -> None:
             f"exceeds {z['byte_ratio_bound']}")
 
 
+def _check_overlap(o: dict, errors: list[str]) -> None:
+    """The async-migration overlap gate (DESIGN.md §15): the double-buffered
+    data plane must hide the epoch copies, not skip them — bit-exact tokens,
+    byte-identical migration work per resource, decode stall cut to <= the
+    declared fraction of the sync arm's, and nonzero achieved overlap on
+    every resource that moved payload."""
+    missing = OVERLAP_KEYS - set(o)
+    if missing:
+        errors.append(f"overlap: missing keys {sorted(missing)}")
+        return
+    for arm in ("sync", "async"):
+        amissing = OVERLAP_ARM_KEYS - set(o[arm])
+        if amissing:
+            errors.append(f"overlap/{arm}: missing {sorted(amissing)}")
+            return
+        _check_resources(f"overlap/{arm}", o[arm]["resources"], errors)
+    if not o["tokens_match"]:
+        errors.append("overlap: async output tokens diverge from sync — "
+                      "the stale committed epoch served different bytes")
+    s, a = o["sync"], o["async"]
+    for name in s["resources"]:
+        sb = s["resources"][name]["migration_bytes"]
+        ab = a["resources"].get(name, {}).get("migration_bytes")
+        if sb != ab:
+            errors.append(
+                f"overlap/{name}: migration bytes diverge (sync {sb} vs "
+                f"async {ab}) — overlap must hide the copies, not skip them")
+    if not s["stall_s"] > 0:
+        errors.append("overlap/sync: stall_s must be > 0 — the synchronous "
+                      "arm's metered copy blocks are the A/B's baseline")
+    elif not a["stall_s"] <= o["stall_ratio_bound"] * s["stall_s"]:
+        errors.append(
+            f"overlap: async stall {a['stall_s']:.3f}s exceeds "
+            f"{o['stall_ratio_bound']} x sync {s['stall_s']:.3f}s — the "
+            "async plane is blocking decode")
+    for name, row in a["resources"].items():
+        if row["migration_bytes"] and not row["overlap_bytes_per_decode_s"] > 0:
+            errors.append(
+                f"overlap/async/{name}: moved {row['migration_bytes']} bytes "
+                "with zero overlap_bytes_per_decode_s — achieved-overlap "
+                "metering is broken")
+        if row["inflight_bytes"]:
+            errors.append(
+                f"overlap/async/{name}: inflight_bytes "
+                f"{row['inflight_bytes']} after the finalize barrier — the "
+                "bench failed to commit the tail epoch")
+
+
 def _check_prefill(p: dict, errors: list[str]) -> None:
     """The chunked-prefill TTFT gate (DESIGN.md §11): a >= 512-token prompt
     served through the Scheduler must reach its first token in <= 1/4 the
@@ -492,11 +561,12 @@ def validate(path: str) -> list[str]:
         doc = json.load(f)
     errors: list[str] = []
     if not set(doc) <= {"quick", "cases", "traffic", "mass_ab", "prefill",
-                        "kv_reuse", "disagg", "compress"} or \
+                        "kv_reuse", "disagg", "compress", "overlap"} or \
             not {"quick", "cases"} <= set(doc):
         errors.append(f"top-level keys {sorted(doc)} not in expected "
                       "['cases', 'quick'] (+ optional 'traffic', 'mass_ab', "
-                      "'prefill', 'kv_reuse', 'disagg', 'compress')")
+                      "'prefill', 'kv_reuse', 'disagg', 'compress', "
+                      "'overlap')")
         return errors
     if not doc["cases"] and "traffic" not in doc:
         errors.append("no benchmark cases recorded")
@@ -531,6 +601,8 @@ def validate(path: str) -> list[str]:
         _check_kv_reuse(doc["kv_reuse"], errors)
     if "disagg" in doc:
         _check_disagg(doc["disagg"], errors)
+    if "overlap" in doc:
+        _check_overlap(doc["overlap"], errors)
     return errors
 
 
@@ -562,10 +634,13 @@ def main() -> int:
     compress = (f", int8/fp32 bytes {cp['bytes_ratio_int8_fp32']:.3f} "
                 f"(drift {cp['probe']['drift_int8']:.3f}, zero1 "
                 f"{cp['zero1']['byte_ratio']:.3f})" if cp else "")
+    ov = doc.get("overlap")
+    overlap = (f", overlap stall {ov['async']['stall_s']:.3f}s vs sync "
+               f"{ov['sync']['stall_s']:.3f}s" if ov else "")
     print(f"BENCH_serve.json ok: {n} cases, {t} traffic traces{gap}{ttft}"
-          f"{reuse}{disagg}{compress}, schema + quota + conservation + "
-          "adaptivity + fidelity + prefill + reuse + disagg + compress "
-          "checks pass")
+          f"{reuse}{disagg}{compress}{overlap}, schema + quota + "
+          "conservation + adaptivity + fidelity + prefill + reuse + disagg "
+          "+ compress + overlap checks pass")
     return 0
 
 

@@ -79,7 +79,8 @@ def _n_shards(mesh) -> int:
     return int(np.prod(mesh.devices.shape)) if mesh is not None else 1
 
 
-def zero1_init(params, mesh, compress_collective: bool = False):
+def zero1_init(params, mesh, compress_collective: bool = False,
+               offload: bool = False):
     n = _n_shards(mesh)
     spec = flat_spec(params, n)
     sh = flat_sharding(mesh) if mesh is not None else None
@@ -94,7 +95,40 @@ def zero1_init(params, mesh, compress_collective: bool = False):
         # local error-feedback residual of the quantized delta collective —
         # flat-sharded exactly like m/v, never itself gathered
         state["ef"] = z()
+    if offload:
+        # park the master vectors in the slow tier between steps
+        # (DESIGN.md §15): the train step prefetches them back during the
+        # backward (``fetch_opt``) and re-offloads after the update
+        state = offload_opt(state, mesh)
     return state, spec
+
+
+def _opt_tiered(state, mesh, mover):
+    """Move every flat master vector (m/v/ef — not the step scalar) between
+    memory tiers with :mod:`repro.dist.host_offload`.  Identity without a
+    mesh, and logical-only on backends without memory kinds (CPU), so the
+    offloaded path stays BITWISE identical to the resident one — the tier
+    move never changes values, only placement."""
+    if mesh is None:
+        return state
+    spec = P(tuple(mesh.axis_names))
+    return {k: (v if k == "step" else mover(v, mesh, spec))
+            for k, v in state.items()}
+
+
+def offload_opt(state, mesh):
+    """Demote the ZeRO-1 master/EF vectors to the pinned-host slow tier."""
+    from repro.dist import host_offload  # lazy: optim must stay dist-free
+    return _opt_tiered(state, mesh, host_offload.to_slow_tier)
+
+
+def fetch_opt(state, mesh):
+    """Promote the master/EF vectors back to device memory.  Issue this
+    BEFORE the gradient computation inside the jitted step: the fetch has
+    no data dependency on the grads, so XLA's scheduler overlaps the
+    host→device copy with the backward pass (prefetch-before-consume)."""
+    from repro.dist import host_offload
+    return _opt_tiered(state, mesh, host_offload.to_fast_tier)
 
 
 def compress_delta(delta: jax.Array, ef: jax.Array, n_shards: int

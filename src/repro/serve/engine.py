@@ -54,6 +54,7 @@ benchmarks; the dry-run lowers the same step functions at production shapes.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
@@ -64,6 +65,7 @@ from repro.cache import KVReuseStore
 from repro.configs.base import ArchConfig
 from repro.models import decode as dec
 from repro.models import transformer as tr
+from repro.serve.clock import TickClock
 
 
 @dataclasses.dataclass
@@ -107,6 +109,12 @@ class ServeConfig:
     # admission can install matched prompt pages pre-resident.  Lane mode
     # only; 0 = off.
     reuse_pages: int = 0
+    # Asynchronous migration data plane (DESIGN.md §15): daemon epochs are
+    # issued as non-blocking double-buffered copies and committed by pointer
+    # swap at the NEXT tick — decode reads the previous committed epoch's
+    # views (bit-exact, both tiers coherent) instead of stalling on the
+    # fused copy.  Off = the synchronous stop-the-world plane.
+    async_migration: bool = False
 
 
 class ServeEngine:
@@ -148,7 +156,8 @@ class ServeEngine:
             self.reuse = attach_to.reuse
             self.reuse_mass = attach_to.reuse_mass
         else:
-            self.daemon = tm.NeoMemDaemon()
+            self.daemon = tm.NeoMemDaemon(tm.DaemonParams(
+                async_plane=scfg.async_migration))
             self._register_resources()
             # content-addressed shared pool (repro.cache, DESIGN.md §12):
             # pool page ids sit ABOVE every private segment in the KV
@@ -169,7 +178,8 @@ class ServeEngine:
         self._prefill_dense_jit = jax.jit(self._prefill_dense_fn)
         self._prefill_paged_jit = jax.jit(self._prefill_paged_fn)
         self.cache = None
-        self.step_count = 0
+        self._clock = TickClock(scfg.migration_interval)
+        self._decode_s = 0.0            # decode wall time (overlap metering)
         self._last_kv_mass = None       # (B, n_slots) kernel mass, post-step
         # (lane, slot) -> (page id, fill) change tracking for the KV flush
         # (single-request mode uses lane 0)
@@ -488,6 +498,7 @@ class ServeEngine:
             raise ValueError("advance_lanes requires ServeConfig.lanes > 0")
         if self.cache is None:
             self.start_lanes()
+        t0 = time.perf_counter()
         self._lane_active = np.asarray(active, bool).copy()
         self._lane_segments = np.asarray(segments, np.int32).copy()
         tokens = np.asarray(tokens, np.int32)
@@ -502,7 +513,9 @@ class ServeEngine:
         self._set_kv_mass(streams)
         self._observe_lanes(tokens, streams)
         self._maybe_tick()
-        return np.asarray(logits[:, -1])
+        out_logits = np.asarray(logits[:, -1])   # host sync = the step's end
+        self._decode_s += time.perf_counter() - t0
+        return out_logits
 
     def prefill_lane(self, lane: int, tokens, segment: int,
                      chunk: int | None = None) -> np.ndarray:
@@ -883,6 +896,7 @@ class ServeEngine:
     def _advance(self, tok: jax.Array):
         """One decode step: run the jitted body, feed the tiering streams,
         tick the multiplexed daemon on its cadence."""
+        t0 = time.perf_counter()
         if self.scfg.paged:
             out = self._decode_paged(self.params, self.cache, tok,
                                      self._tier_reads(), None)
@@ -896,6 +910,7 @@ class ServeEngine:
         self._set_kv_mass(streams)
         self._observe(tok, streams)
         self._maybe_tick()
+        self._decode_s += time.perf_counter() - t0
         return logits
 
     def _set_kv_mass(self, streams: dict) -> None:
@@ -1100,13 +1115,16 @@ class ServeEngine:
         is resident, slow-tier fallback otherwise (bit-exact either way)."""
         return self.daemon[name].read_rows(page_ids)
 
+    @property
+    def step_count(self) -> int:
+        """Engine steps so far (decode steps + prefilled prompt positions)."""
+        return self._clock.steps
+
     def _maybe_tick(self, n: int = 1) -> None:
         """Advance the engine step counter by ``n`` (1 for a decode step, the
         chunk length for a prefill chunk) and run one daemon tick per
         migration-interval boundary crossed, flushing the KV ring first."""
-        interval = self.scfg.migration_interval
-        ticks = (self.step_count + n) // interval - self.step_count // interval
-        self.step_count += n
+        ticks = self._clock.advance(n)
         if not self.daemon.resources:
             return
         if not self._daemon_owner:
@@ -1125,6 +1143,8 @@ class ServeEngine:
     # -- telemetry ------------------------------------------------------------
     def tier_stats(self) -> dict[str, dict]:
         """Per-resource telemetry rows (the BENCH_serve.json schema)."""
+        for h in self.daemon.resources.values():
+            h.stats.decode_s = self._decode_s
         return self.daemon.snapshot()
 
     @property

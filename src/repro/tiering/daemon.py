@@ -140,7 +140,9 @@ class ResourceHandle:
         touch accounting (invalid ids < 0 are padding and not counted).
         """
         ids = jnp.asarray(page_ids, jnp.int32)
-        slots, _ = lookup(self.state, ids)        # the ONE placement lookup
+        # the ONE placement lookup — against the COMMITTED view, so reads
+        # issued mid-epoch resolve exactly like the payload gather below
+        slots = self.mem.lookup_slots(self.state, ids)
         hits = int(np.sum(np.asarray(slots) >= 0))
         self.stats.fast_reads += hits
         self.stats.slow_reads += int(np.sum(np.asarray(ids) >= 0)) - hits
@@ -173,6 +175,13 @@ class ResourceHandle:
         row["fast_reads"] += int(self.state.tier.fast_reads)
         row["slow_reads"] += int(self.state.tier.slow_reads)
         row["hit_rate"] = self.hit_rate()
+        # fold the in-flight epoch the same way: a snapshot taken mid-epoch
+        # must still satisfy last_epoch <= max_epoch <= quota row-level
+        # conservation — the issued bytes count against the epoch quota the
+        # moment they are in flight, not only once committed
+        if self.stats.inflight_bytes:
+            row["max_epoch_bytes"] = max(row["max_epoch_bytes"],
+                                         self.stats.inflight_bytes)
         return row
 
 
@@ -202,7 +211,8 @@ class NeoMemDaemon:
                 migration_interval=self.dp.migration_interval,
                 threshold_update_period=self.dp.threshold_update_period,
                 clear_interval=self.dp.clear_interval,
-                quota_pages=spec.quota_pages),
+                quota_pages=spec.quota_pages,
+                async_plane=self.dp.async_plane),
             policy_params=policy_params, fixed_theta=fixed_theta)
         handle = ResourceHandle(spec.name, resource, mem, weight=weight)
         self.resources[spec.name] = handle
@@ -232,19 +242,35 @@ class NeoMemDaemon:
         events: dict[str, MigrationEvent] = {}
 
         if t % dp.migration_interval == 0:
+            # COMMIT phase first (async plane, DESIGN.md §15): witness each
+            # in-flight epoch's readiness token and pointer-swap — never
+            # blocks; an epoch whose copy has not landed stays in flight
+            for h in self.resources.values():
+                if h.mem.async_on:
+                    h.mem.commit_migration(h.stats)
+            # PLAN phase (unchanged policy): drain hot pages, split the
+            # shared budget.  A busy resource (epoch still uncommitted) is
+            # capped at 0 — no N+2 issue before N+1 commits, and its share
+            # flows to the others via the weighted max-min redistribution.
             demands: dict[str, int] = {}
             for name, h in self.resources.items():
                 h.state, demands[name] = h.mem.collect(h.state, h.stats)
-            caps = {n: h.mem.quota for n, h in self.resources.items()}
+            caps = {n: (0 if h.mem.busy else h.mem.quota)
+                    for n, h in self.resources.items()}
             weights = {n: h.weight for n, h in self.resources.items()}
             shares = split_quota(self.budget, demands, caps, weights)
+            # ISSUE phase: promote + dispatch the epoch's data movement
+            # (async: non-blocking issue; sync: fused donated copy, with
+            # the blocking wait metered as stall_s)
             for name, h in self.resources.items():
+                if h.mem.busy:
+                    continue
                 h.state, event = h.mem.migrate(h.state, h.stats,
                                                quota=shares.get(name, 0))
                 if event is not None:
-                    # data plane first (one fused copy against the bound
-                    # buffers, bytes metered), then the resource's own hook
-                    h.mem.apply_migration(event, h.stats)
+                    # data plane first (bytes metered), then the
+                    # resource's own hook
+                    h.mem.dispatch_migration(h.state, event, h.stats)
                     h.resource.apply_migration(event.promoted, event.victims)
                     events[name] = event
 
@@ -265,8 +291,19 @@ class NeoMemDaemon:
         a restored server resumes with a warm placement map.  The host-side
         pending FIFOs are best-effort (DESIGN.md §6) and not included — they
         are re-derived from the next sketch epoch after restore.
+
+        Any in-flight async epoch is FINALIZED (force-committed) first: the
+        persisted placement map is the control table, so the payload the
+        checkpoint implies must match it deterministically (DESIGN.md §15).
         """
+        self.finalize()
         return {n: h.state for n, h in self.resources.items()}
+
+    def finalize(self) -> None:
+        """Force-commit every in-flight async epoch (accounting barrier:
+        checkpoint save, benchmark end-of-run byte parity, shutdown)."""
+        for h in self.resources.values():
+            h.mem.finalize_epoch(h.stats)
 
     def load_state(self, states: dict[str, TieredMemoryState]) -> None:
         """Restore a ``state_dict()`` pytree into the registered resources.
@@ -292,10 +329,14 @@ class NeoMemDaemon:
             h.state = jax.tree.map(
                 lambda cur, new: jnp.asarray(new, jnp.asarray(cur).dtype), h.state, st)
             # the pending backlog belongs to the PRE-restore stream — keeping
-            # it would promote stale pages into the restored placement map
+            # it would promote stale pages into the restored placement map,
+            # and so does any issued-but-uncommitted epoch: DROP it (the
+            # deterministic half of commit-or-drop, DESIGN.md §15)
             h.mem.clear_pending()
             h.stats.pending = 0
+            h.mem.drop_inflight(h.stats)
             h.mem.refill_fast(h.state)
+            h.mem.reset_committed(h.state)
 
     # -- telemetry -----------------------------------------------------------
     def stats(self) -> dict[str, TierStats]:

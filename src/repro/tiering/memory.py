@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import NamedTuple
 
 import jax
@@ -57,6 +58,11 @@ class DaemonParams:
     threshold_update_period: int = 8   # ticks between Algorithm-1 runs
     clear_interval: int = 64           # ticks between sketch resets
     quota_pages: int | None = None     # promotion budget per interval
+    # Asynchronous data plane (DESIGN.md §15): epochs are ISSUED as
+    # non-donated async copies and COMMITTED by pointer swap at a later
+    # tick, once the copy's readiness token is witnessed — decode keeps
+    # reading the previous epoch's committed views in between.
+    async_plane: bool = False
 
 
 class TieredMemoryState(NamedTuple):
@@ -77,6 +83,25 @@ class MigrationEvent:
     victims: jax.Array    # (k,) int32 slot ids, -1 = no-op lane
     n_promoted: int
     evicted: jax.Array | None = None   # (k,) int32 demoted page ids, -1 no-op
+
+
+@dataclasses.dataclass
+class InFlightEpoch:
+    """One issued-but-uncommitted migration epoch (DESIGN.md §15).
+
+    ``fast`` is the NEXT epoch's fast buffer, produced by a non-donated
+    async gather (:func:`migrate.issue_migrate`); ``page_slot`` the
+    placement table it was built against (the control state already
+    points at it — decode keeps reading the previous committed table
+    until the pointer swap).  ``token`` is the cheap device→host
+    readiness witness: a () int32 from the same XLA executable as the
+    copy, so ``token.is_ready()`` implies the buffer is materialized.
+    """
+
+    fast: jax.Array
+    page_slot: jax.Array
+    token: jax.Array
+    bytes: int
 
 
 @functools.partial(jax.jit, static_argnames=("prof_params",))
@@ -144,6 +169,10 @@ class TieredMemory:
         self.quota_bytes = 0
         # per-page write witness (None until bind_data): see pages_written
         self.written: np.ndarray | None = None
+        # async data plane (DESIGN.md §15): the issued-but-uncommitted
+        # epoch, and the placement table decode reads until it commits
+        self._inflight: InFlightEpoch | None = None
+        self._committed_slot: jax.Array | None = None
 
     @classmethod
     def from_spec(cls, spec, daemon_params=None, policy_params=None,
@@ -208,9 +237,15 @@ class TieredMemory:
             return 0
         evicted = (event.evicted if event.evicted is not None
                    else jnp.full_like(jnp.asarray(event.victims), -1))
+        t0 = time.perf_counter()
         self.buffers, n_up, n_down = migrate_lib.migrate(
             self.buffers, event.promoted, event.victims, evicted,
             codec=self.codec)
+        # the synchronous arm stops the world: the donated fused copy must
+        # land before the next decode step can read the swapped buffers —
+        # that wait is exactly the stall the async plane (§15) removes
+        jax.block_until_ready(self.buffers.fast)
+        stats.stall_s += time.perf_counter() - t0
         moved = (n_up + n_down) * self.row_bytes
         stats.migration_bytes += moved
         stats.last_epoch_bytes = moved
@@ -219,6 +254,137 @@ class TieredMemory:
         if moved:
             stats.migration_epochs += 1
         return moved
+
+    # -- async data plane (DESIGN.md §15) ------------------------------------
+    @property
+    def async_on(self) -> bool:
+        """Whether this resource runs the double-buffered async plane."""
+        return self.dp.async_plane and self.buffers is not None
+
+    @property
+    def busy(self) -> bool:
+        """An epoch is issued but not yet committed — the daemon must not
+        issue N+2 (and excludes this resource from the quota split)."""
+        return self._inflight is not None
+
+    def _view_slot(self, state: TieredMemoryState) -> jax.Array:
+        """The placement table READS resolve against: the committed epoch's
+        snapshot under the async plane, the live control table otherwise."""
+        if self.async_on and self._committed_slot is not None:
+            return self._committed_slot
+        return state.tier.page_slot
+
+    def lookup_slots(self, state: TieredMemoryState, page_ids) -> jax.Array:
+        """Placement lookup against the COMMITTED view (== tiering.lookup's
+        slots under the synchronous plane)."""
+        ps = self._view_slot(state)
+        ids = jnp.asarray(page_ids, jnp.int32)
+        return jnp.where(ids >= 0, ps[jnp.maximum(ids, 0)], -1)
+
+    def issue_migration(self, state: TieredMemoryState,
+                        event: MigrationEvent | None,
+                        stats: TierStats) -> int:
+        """Issue phase: dispatch the epoch's promotion gather WITHOUT
+        blocking and record the in-flight epoch.  ``state`` is the
+        post-promote control state (its ``page_slot`` is the table the new
+        buffer is built against).  Returns the epoch's wire bytes, metered
+        as ``inflight_bytes`` until :meth:`commit_migration` folds them
+        into the lifetime counters.
+
+        The demotion write-back is ELIDED here: under the write-both-tiers
+        rule every fast row already has a byte-identical slow copy, so the
+        write-back would be a rewrite of identical bytes.  Its wire cost is
+        still metered — the epoch moves the same bytes either way.
+        """
+        if self.buffers is None or event is None:
+            return 0
+        if self._inflight is not None:
+            raise RuntimeError(
+                "migration epoch already in flight — commit (or drop) epoch "
+                "N+1 before issuing N+2")
+        # host-side byte accounting off the tiny promote outputs (these are
+        # products of tiering.promote's executable, NOT the bulk copy — the
+        # np.asarray below never waits on payload movement)
+        ok = (np.asarray(event.promoted) >= 0) & (np.asarray(event.victims) >= 0)
+        if event.evicted is not None:
+            n_down = int(np.sum(ok & (np.asarray(event.evicted) >= 0)))
+        else:
+            n_down = 0
+        new_fast, token = migrate_lib.issue_migrate(
+            self.buffers, event.promoted, event.victims)
+        moved = (int(np.sum(ok)) + n_down) * self.row_bytes
+        self._inflight = InFlightEpoch(fast=new_fast,
+                                       page_slot=state.tier.page_slot,
+                                       token=token, bytes=moved)
+        stats.inflight_bytes = moved
+        stats.quota_bytes = self.quota_bytes
+        return moved
+
+    def commit_ready(self) -> bool:
+        """Non-blocking probe: has the in-flight epoch's copy landed?"""
+        return (self._inflight is not None
+                and migrate_lib.token_ready(self._inflight.token))
+
+    def commit_migration(self, stats: TierStats, block: bool = False) -> int:
+        """Commit phase: pointer-swap the in-flight epoch's buffer + table
+        into the committed view and fold its bytes into the lifetime
+        counters.  Without ``block`` this is a no-op unless the readiness
+        token is already witnessed — the swap NEVER waits; ``block=True``
+        forces the commit (checkpoint finalize, sync fallback) and meters
+        the wait as ``stall_s``."""
+        fl = self._inflight
+        if fl is None:
+            return 0
+        if not migrate_lib.token_ready(fl.token):
+            if not block:
+                return 0
+            t0 = time.perf_counter()
+            jax.block_until_ready(fl.fast)
+            stats.stall_s += time.perf_counter() - t0
+        self.buffers = self.buffers._replace(fast=fl.fast)
+        self._committed_slot = fl.page_slot
+        self._inflight = None
+        moved = fl.bytes
+        stats.inflight_bytes = 0
+        stats.migration_bytes += moved
+        stats.last_epoch_bytes = moved
+        stats.max_epoch_bytes = max(stats.max_epoch_bytes, moved)
+        stats.quota_bytes = self.quota_bytes
+        if moved:
+            stats.migration_epochs += 1
+        return moved
+
+    def finalize_epoch(self, stats: TierStats) -> int:
+        """Force-commit any in-flight epoch (checkpoint save: the persisted
+        placement map is the control table, so the payload must match)."""
+        return self.commit_migration(stats, block=True)
+
+    def drop_inflight(self, stats: TierStats | None = None) -> None:
+        """Abandon the in-flight epoch (checkpoint restore: the issued copy
+        belongs to the pre-restore placement stream)."""
+        self._inflight = None
+        if stats is not None:
+            stats.inflight_bytes = 0
+
+    def reset_committed(self, state: TieredMemoryState) -> None:
+        """Align the committed view with the control state (restore path):
+        no epoch is in flight and decode reads the live table."""
+        self._inflight = None
+        self._committed_slot = (state.tier.page_slot if self.async_on
+                                else None)
+
+    def dispatch_migration(self, state: TieredMemoryState,
+                           event: MigrationEvent | None,
+                           stats: TierStats) -> int:
+        """Route one epoch's data movement: async issue or sync apply."""
+        if self.async_on:
+            return self.issue_migration(state, event, stats)
+        return self.apply_migration(event, stats)
+
+    def _inflight_slots(self, page_ids) -> jax.Array:
+        ps = self._inflight.page_slot
+        ids = jnp.asarray(page_ids, jnp.int32)
+        return jnp.where(ids >= 0, ps[jnp.maximum(ids, 0)], -1)
 
     def refill_fast(self, state: TieredMemoryState) -> None:
         """Re-gather the fast copy of every resident page from the slow store.
@@ -258,7 +424,7 @@ class TieredMemory:
         if self.buffers is None:
             raise ValueError("no payload bound — call bind_data() first")
         return migrate_lib.lookup_rows(self.buffers.fast, self.buffers.slow,
-                                       state.tier.page_slot, page_ids,
+                                       self._view_slot(state), page_ids,
                                        scale=self.buffers.scale)
 
     def tier_view(self, state: TieredMemoryState) -> dict[str, jax.Array]:
@@ -270,7 +436,7 @@ class TieredMemory:
         if self.buffers is None:
             raise ValueError("no payload bound — call bind_data() first")
         return {"fast": self.buffers.fast, "slow": self.buffers.slow,
-                "page_slot": state.tier.page_slot,
+                "page_slot": self._view_slot(state),
                 "scale": self.buffers.scale}
 
     def read_rows(self, state: TieredMemoryState, page_ids,
@@ -288,7 +454,7 @@ class TieredMemory:
             raise ValueError("no payload bound — call bind_data() first")
         page_ids = jnp.asarray(page_ids, jnp.int32)
         if slots is None:
-            slots, _ = lookup(state, page_ids)
+            slots = self.lookup_slots(state, page_ids)
         slots_np = np.asarray(slots)
         ids_np = np.maximum(np.asarray(page_ids), 0)
         hit = slots_np >= 0
@@ -317,9 +483,15 @@ class TieredMemory:
         if self.buffers is None:
             raise ValueError("no payload bound — call bind_data() first")
         page_ids = jnp.asarray(page_ids, jnp.int32)
-        slots, _ = lookup(state, page_ids)
+        slots = self.lookup_slots(state, page_ids)
         self.buffers = migrate_lib.write_rows(self.buffers, page_ids, slots,
                                               rows, codec=self.codec)
+        if self._inflight is not None:
+            # replay onto the in-flight epoch's buffer under ITS table, so a
+            # page promoted by the issued-but-uncommitted copy does not keep
+            # a stale fast row past the commit (DESIGN.md §15)
+            self._inflight.fast = migrate_lib.refresh_rows(
+                self._inflight.fast, self._inflight_slots(page_ids), rows)
         return self._mark_written(page_ids)
 
     def write_pages(self, state: TieredMemoryState, page_ids, k_pages,
@@ -332,10 +504,14 @@ class TieredMemory:
         if self.buffers is None:
             raise ValueError("no payload bound — call bind_data() first")
         page_ids = jnp.asarray(page_ids, jnp.int32)
-        slots, _ = lookup(state, page_ids)
+        slots = self.lookup_slots(state, page_ids)
         self.buffers = migrate_lib.write_pages(self.buffers, page_ids, slots,
                                                k_pages, v_pages,
                                                codec=self.codec)
+        if self._inflight is not None:
+            self._inflight.fast = migrate_lib.refresh_pages(
+                self._inflight.fast, self._inflight_slots(page_ids),
+                k_pages, v_pages)
         return self._mark_written(page_ids)
 
     def copy_rows(self, state: TieredMemoryState, src_ids, dst_ids) -> int:
@@ -347,9 +523,13 @@ class TieredMemory:
             raise ValueError("no payload bound — call bind_data() first")
         src_ids = jnp.asarray(src_ids, jnp.int32)
         dst_ids = jnp.asarray(dst_ids, jnp.int32)
-        dst_slots, _ = lookup(state, dst_ids)
+        dst_slots = self.lookup_slots(state, dst_ids)
         self.buffers = migrate_lib.copy_rows(self.buffers, src_ids, dst_ids,
                                              dst_slots)
+        if self._inflight is not None:
+            self._inflight.fast = migrate_lib.refresh_copy(
+                self._inflight.fast, self.buffers.slow, self.buffers.scale,
+                src_ids, self._inflight_slots(dst_ids))
         valid = (np.asarray(src_ids) >= 0) & (np.asarray(dst_ids) >= 0)
         if self.written is not None:
             self.written[np.asarray(dst_ids)[valid]] = True
@@ -443,7 +623,14 @@ class TieredMemory:
                 ) -> tuple[TieredMemoryState, MigrationEvent | None]:
         """Promote up to ``quota`` pending pages (batch width stays static)."""
         k = self.quota                       # static promote width (no retrace)
-        stats.last_epoch_bytes = 0   # an epoch that moves nothing reports 0
+        if self.async_on:
+            # first promote under the async plane: snapshot the pre-promote
+            # table as epoch 0's committed view — from here on the control
+            # table runs ahead of what decode reads until each commit
+            if self._committed_slot is None:
+                self._committed_slot = state.tier.page_slot
+        else:
+            stats.last_epoch_bytes = 0  # an epoch that moves nothing reports 0
         take = min(quota if quota is not None else k, k, len(self._pending))
         if take <= 0:
             stats.pending = len(self._pending)
@@ -511,9 +698,12 @@ class TieredMemory:
         state = state._replace(tick=state.tick + 1)
         t, dp, event = int(state.tick), self.dp, None
         if t % dp.migration_interval == 0:
+            if self.async_on:
+                self.commit_migration(stats)   # commit FIRST, never blocks
             state, _ = self.collect(state, stats)
-            state, event = self.migrate(state, stats)
-            self.apply_migration(event, stats)   # no-op without bound data
+            if not self.busy:                  # no N+2 issue before N+1 commit
+                state, event = self.migrate(state, stats)
+                self.dispatch_migration(state, event, stats)
         if t % dp.threshold_update_period == 0:
             state = self.update_threshold(state, stats)
         if t % dp.clear_interval == 0:

@@ -267,12 +267,16 @@ def write_rows(buffers: TierBuffers, page_ids: jax.Array, slots: jax.Array,
     return TierBuffers(fast=fast, slow=slow, scale=scale)
 
 
-def _write_pages_impl(codec, fast, slow, scale, page_ids, slots,
-                      k_pages, v_pages):
+def _pages_to_rows(k_pages, v_pages):
     # ring layout (G, L, S, T, hkv, d) -> page-row layout (L*S, G, T, hkv, d)
     rows = jnp.concatenate([k_pages, v_pages], axis=-1)
     rows = jnp.moveaxis(rows, 0, 2)
-    rows = rows.reshape((-1,) + rows.shape[2:])
+    return rows.reshape((-1,) + rows.shape[2:])
+
+
+def _write_pages_impl(codec, fast, slow, scale, page_ids, slots,
+                      k_pages, v_pages):
+    rows = _pages_to_rows(k_pages, v_pages)
     return _write_rows_impl(codec, fast, slow, scale, page_ids, slots, rows)
 
 
@@ -300,6 +304,111 @@ def write_pages(buffers: TierBuffers, page_ids: jax.Array, slots: jax.Array,
         jnp.asarray(page_ids, jnp.int32), jnp.asarray(slots, jnp.int32),
         k_pages, v_pages)
     return TierBuffers(fast=fast, slow=slow, scale=scale)
+
+
+# -- async data plane (DESIGN.md §15) ---------------------------------------
+#
+# The asynchronous epoch is the promotion gather ONLY, dispatched without
+# donation: the committed fast buffer stays alive (decode keeps reading the
+# stale epoch bit-exactly) while XLA produces the NEXT epoch's fast buffer —
+# the "double buffer".  The demotion write-back is elided: under the
+# write-both-tiers rule every resident fast row equals decode(slow row), so
+# the write-back would re-write identical wire bytes; its traffic is still
+# metered by the caller (the bytes are real on a CXL port).  Writes landing
+# while an epoch is in flight are replayed onto the in-flight buffer by the
+# ``refresh_*`` verbs below, so commit never serves a pre-write snapshot.
+
+
+@jax.jit
+def _issue_migrate_jit(fast, slow, scale, promoted, victims):
+    ok = (promoted >= 0) & (victims >= 0)
+    up_idx = jnp.where(ok, promoted, 0)
+    gathered = codec_lib.decode_rows(slow[up_idx], _scale_at(scale, up_idx),
+                                     fast.dtype)
+    sl_idx = jnp.where(ok, victims, fast.shape[0])
+    new_fast = fast.at[sl_idx].set(gathered, mode="drop")
+    return new_fast, jnp.sum(ok, dtype=jnp.int32)
+
+
+def issue_migrate(buffers: TierBuffers, promoted: jax.Array,
+                  victims: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Dispatch one epoch's promotion copy asynchronously (no donation, no
+    host block): returns ``(new_fast, token)`` where ``new_fast`` is the
+    NEXT epoch's fast buffer and ``token`` a cheap () int32 readiness
+    witness (the promoted-row count — an output of the same executable, so
+    it completes exactly when the copy does).  The caller commits by
+    pointer swap once :func:`token_ready` says so."""
+    return _issue_migrate_jit(
+        buffers.fast, buffers.slow, buffers.scale,
+        jnp.asarray(promoted, jnp.int32), jnp.asarray(victims, jnp.int32))
+
+
+def token_ready(token: jax.Array) -> bool:
+    """Non-blocking readiness probe of an issued epoch's witness token."""
+    try:
+        return bool(token.is_ready())
+    except AttributeError:      # no probe on this runtime: degrade to sync
+        token.block_until_ready()
+        return True
+
+
+def _refresh_rows_impl(fast, slots, rows):
+    idx = jnp.where(slots >= 0, slots, fast.shape[0])
+    return fast.at[idx].set(rows.astype(fast.dtype), mode="drop")
+
+
+@functools.lru_cache(maxsize=None)
+def _refresh_rows_jit():
+    return jax.jit(_refresh_rows_impl, donate_argnums=_donate(1))
+
+
+def refresh_rows(fast: jax.Array, slots: jax.Array, rows: jax.Array
+                 ) -> jax.Array:
+    """Replay an owner write onto the IN-FLIGHT fast buffer (native dtype,
+    no slow-store touch — the committed write verb already encoded there):
+    keeps a write that lands mid-epoch coherent with the epoch about to
+    commit.  ``slots`` is the lookup under the in-flight placement table."""
+    return _refresh_rows_jit()(fast, jnp.asarray(slots, jnp.int32), rows)
+
+
+def _refresh_pages_impl(fast, slots, k_pages, v_pages):
+    return _refresh_rows_impl(fast, slots, _pages_to_rows(k_pages, v_pages))
+
+
+@functools.lru_cache(maxsize=None)
+def _refresh_pages_jit():
+    return jax.jit(_refresh_pages_impl, donate_argnums=_donate(1))
+
+
+def refresh_pages(fast: jax.Array, slots: jax.Array, k_pages: jax.Array,
+                  v_pages: jax.Array) -> jax.Array:
+    """Bulk-flush analogue of :func:`refresh_rows` for KV ring views."""
+    return _refresh_pages_jit()(fast, jnp.asarray(slots, jnp.int32),
+                                k_pages, v_pages)
+
+
+def _refresh_copy_impl(fast, slow, scale, src_ids, dst_slots):
+    src_safe = jnp.maximum(src_ids, 0)
+    rows = codec_lib.decode_rows(slow[src_safe], _scale_at(scale, src_safe),
+                                 fast.dtype)
+    idx = jnp.where((src_ids >= 0) & (dst_slots >= 0), dst_slots,
+                    fast.shape[0])
+    return fast.at[idx].set(rows, mode="drop")
+
+
+@functools.lru_cache(maxsize=None)
+def _refresh_copy_jit():
+    return jax.jit(_refresh_copy_impl, donate_argnums=_donate(1))
+
+
+def refresh_copy(fast: jax.Array, slow: jax.Array, scale: jax.Array | None,
+                 src_ids: jax.Array, dst_slots: jax.Array) -> jax.Array:
+    """:func:`copy_rows` replay onto the in-flight fast buffer: re-decode
+    the (already copied) destination rows from the slow store into the
+    destinations' in-flight slots."""
+    return _refresh_copy_jit()(fast, slow, scale,
+                               jnp.asarray(src_ids, jnp.int32),
+                               jnp.asarray(dst_slots, jnp.int32))
 
 
 def _copy_rows_impl(fast, slow, scale, src_ids, dst_ids, dst_slots):

@@ -42,6 +42,14 @@ class TierStats:
     quota_bytes: int = 0           # per-epoch byte budget (2 * quota * row)
     migration_epochs: int = 0      # epochs that actually moved payload
     flush_bytes: int = 0           # owner write_rows traffic (e.g. KV flush)
+    # Async data plane (DESIGN.md §15; zero in the synchronous mode).
+    inflight_bytes: int = 0        # bytes of the issued-but-uncommitted epoch
+    # Achieved-overlap metering (DESIGN.md §15).
+    stall_s: float = 0.0           # wall time decode spent BLOCKED on a
+    #                                migration copy (sync: every epoch's
+    #                                fused copy; async: forced commits only)
+    decode_s: float = 0.0          # decode wall time (set by the owner —
+    #                                the serve engine's step-loop clock)
     # Fig. 14-style traces, appended once per threshold-update period.
     theta_trace: list = dataclasses.field(default_factory=list)
     bw_trace: list = dataclasses.field(default_factory=list)
@@ -58,6 +66,14 @@ class TierStats:
     @property
     def drained_hit_rate(self) -> float:
         return self.fast_reads / max(self.total_reads, 1)
+
+    @property
+    def overlap_bytes_per_decode_s(self) -> float:
+        """Achieved overlap: migration bytes moved per second of decode wall
+        time (DESIGN.md §15).  Zero until the owner meters ``decode_s``."""
+        if self.decode_s <= 0:
+            return 0.0
+        return self.migration_bytes / self.decode_s
 
     def as_row(self) -> dict:
         """Flat schema for benchmark emission (BENCH_serve.json rows —
@@ -76,6 +92,9 @@ class TierStats:
             "quota_bytes": self.quota_bytes,
             "migration_epochs": self.migration_epochs,
             "flush_bytes": self.flush_bytes,
+            "inflight_bytes": self.inflight_bytes,
+            "stall_s": self.stall_s,
+            "overlap_bytes_per_decode_s": self.overlap_bytes_per_decode_s,
         }
 
 

@@ -22,6 +22,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+try:                                # jax<=0.4.x: experimental namespace
+    from jax.experimental.shard_map import shard_map
+except ImportError:                 # newer jax promoted it to the top level
+    from jax import shard_map       # type: ignore
+
 from repro.configs.base import ArchConfig
 from repro.core.neoprof import NeoProfParams, neoprof_init, neoprof_observe
 from repro.core.sketch import SketchParams
@@ -44,6 +49,9 @@ class TrainConfig:
     fsdp: bool = False                 # ZeRO-3 weight sharding over 'data'
     local_grads: bool = False          # defer the DP grad all-reduce out of
                                        # the microbatch loop (§Perf cell B)
+    offload_master: bool = False       # ZeRO-1 m/v/ef on the pinned-host
+                                       # slow tier; prefetched back during
+                                       # the backward (DESIGN.md §15)
     profile_experts: bool = True       # NeoMem router-stream profiling
     sketch_width: int = 1 << 14
 
@@ -76,6 +84,11 @@ def build_train_step(cfg: ArchConfig, mesh, tcfg: TrainConfig = TrainConfig()):
 
     def train_step(state, batch):
         params, opt_state, prof = state["params"], state["opt"], state["prof"]
+        if tcfg.zero1 and tcfg.offload_master:
+            # promote the parked master vectors FIRST: the fetch has no data
+            # dependency on the grads, so XLA overlaps the host→device copy
+            # with the whole backward below (prefetch-before-optimizer-step)
+            opt_state = zero1.fetch_opt(opt_state, mesh)
 
         def micro(carry, mb):
             gacc, lacc = carry
@@ -101,8 +114,13 @@ def build_train_step(cfg: ArchConfig, mesh, tcfg: TrainConfig = TrainConfig()):
             # bytes).  Going manual over the DP axes keeps grads shard-local
             # through the accumulation; one psum after the loop does the job.
             dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+            # satellite of ROADMAP item 4: under grad_compression the DP
+            # all-reduce itself runs through the shared int8+EF core — each
+            # shard quantizes its local sum and the wire carries int8 + one
+            # fp32 scale per tensor instead of fp32 everywhere
+            dp_compress = tcfg.grad_compression
 
-            def grad_loop(params_l, mbs_l):
+            def grad_loop(params_l, mbs_l, ef_l):
                 z = jax.tree.map(
                     lambda p: jnp.zeros(p.shape, jnp.float32), params_l)
 
@@ -115,21 +133,30 @@ def build_train_step(cfg: ArchConfig, mesh, tcfg: TrainConfig = TrainConfig()):
                     return (gacc, lacc + loss), None
 
                 (gsum, lsum), _ = jax.lax.scan(f, (z, 0.0), mbs_l)
-                gsum = jax.lax.psum(gsum, dp)
+                if dp_compress:
+                    gsum, ef_l = compression.compress_psum(gsum, ef_l, dp)
+                else:
+                    gsum = jax.lax.psum(gsum, dp)
                 lsum = jax.lax.psum(lsum, dp) / jax.lax.psum(1.0, dp)
-                return gsum, lsum
+                return gsum, lsum, ef_l
 
             pspec = jax.tree.map(lambda _: P(), params)
             mspec = jax.tree.map(lambda _: P(None, dp), mbs)
-            gsum, lsum = jax.shard_map(
-                grad_loop, mesh=mesh, axis_names=set(dp),
-                in_specs=(pspec, mspec),
-                out_specs=(pspec, P()),
-                check_vma=False,
-            )(params, mbs)
+            ef_in = state["ef"] if dp_compress else jax.tree.map(
+                lambda _: jnp.zeros((0,), jnp.float32), params)
+            smap_kw = dict(mesh=mesh,
+                           in_specs=(pspec, mspec, pspec),
+                           out_specs=(pspec, P(), pspec),
+                           check_rep=False)
+            other = frozenset(mesh.axis_names) - frozenset(dp)
+            if other:       # leave non-DP axes to the partitioner
+                smap_kw["auto"] = other
+            gsum, lsum, new_ef = shard_map(grad_loop, **smap_kw)(
+                params, mbs, ef_in)
             streams = None
         else:
             (gsum, lsum), streams = jax.lax.scan(micro, (zero_g, 0.0), mbs)
+            dp_compress = False
         grads = jax.tree.map(lambda g: g / tcfg.microbatches, gsum)
         loss = lsum / tcfg.microbatches
 
@@ -139,13 +166,17 @@ def build_train_step(cfg: ArchConfig, mesh, tcfg: TrainConfig = TrainConfig()):
             page_stream = streams.reshape(-1)[: 8192].astype(jnp.int32)
             prof = neoprof_observe(prof, page_stream, prof_params)
 
-        if tcfg.grad_compression:
+        if tcfg.grad_compression and not dp_compress:
+            # link-sim mode: compress AFTER the (uncompressed) reduce; under
+            # local_grads the reduce itself was the compressed hop above
             qs, new_ef = compression.compress_grads(grads, state["ef"])
             grads = compression.decompress_grads(qs)
         if tcfg.zero1:
             new_params, new_opt, om = zero1.zero1_update(
                 tcfg.opt, params, grads, opt_state, z1spec, mesh,
                 compress_collective=tcfg.compress_collective)
+            if tcfg.offload_master:
+                new_opt = zero1.offload_opt(new_opt, mesh)
         else:
             new_params, new_opt, om = opt_update(params, grads, opt_state)
 
@@ -153,6 +184,10 @@ def build_train_step(cfg: ArchConfig, mesh, tcfg: TrainConfig = TrainConfig()):
         if tcfg.grad_compression:
             new_state["ef"] = new_ef
         metrics = {"loss": loss, **om}
+        if tcfg.local_grads and mesh is not None:
+            # wire bytes ONE shard contributes to the DP grad reduce (static)
+            metrics["dp_psum_bytes"] = compression.psum_bytes(
+                grads, compressed=dp_compress)
         return new_state, metrics
 
     return train_step

@@ -1,0 +1,318 @@
+"""Async migration data plane (DESIGN.md §15): double-buffered placement
+tables that overlap the daemon's epoch copies with decode.
+
+Pins the double-buffer semantics end to end: reads against the stale
+committed epoch are bit-exact while a copy is in flight, writes landing
+mid-epoch replay onto the in-flight buffer, no epoch N+2 issues before
+N+1 commits, checkpoints commit-or-drop deterministically, and the serve
+engine's sync/async arms produce identical tokens with the async arm's
+decode stall at zero.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.tiering as tm
+from repro.tiering import migrate as migrate_lib
+from repro.tiering.memory import DaemonParams, TieredMemory
+from repro.tiering.stats import TierStats
+
+ROWS = np.arange(32 * 4, dtype=np.float32).reshape(32, 4) * 0.5
+
+
+def _mem(async_plane, quota=4):
+    spec = tm.ResourceSpec(name="t", n_pages=32, hot_slots=8,
+                           quota_pages=quota, row_shape=(4,),
+                           row_dtype="float32")
+    mem = TieredMemory.from_spec(spec, daemon_params=DaemonParams(
+        migration_interval=1, async_plane=async_plane))
+    mem.bind_data(ROWS.copy())
+    return mem, mem.init(), TierStats("t")
+
+
+def _daemon(async_plane, n_pages=32, quota=8):
+    # threshold updates frozen: these tests pin the DATA plane's epoch
+    # lifecycle, so Algorithm-1 must not throttle promotions mid-test
+    daemon = tm.NeoMemDaemon(tm.DaemonParams(
+        async_plane=async_plane, threshold_update_period=10_000))
+    spec = tm.ResourceSpec("embeddings", n_pages=n_pages, hot_slots=4,
+                           quota_pages=quota, row_shape=(8, 16),
+                           row_dtype="float32")
+    h = daemon.register(tm.make_resource("embeddings", spec, rows_per_page=8))
+    h.bind_data(jax.random.normal(jax.random.PRNGKey(0), (n_pages, 8, 16)))
+    return daemon, h
+
+
+def _drive(daemon, h, steps=24, seed=0, shift=0):
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        toks = ((rng.zipf(1.5, size=64) + shift) % 32) * 8
+        h.observe(jnp.asarray(toks, jnp.int32))
+        daemon.tick()
+
+
+# -- stale-epoch read parity --------------------------------------------------
+
+def test_async_reads_bit_exact_vs_sync():
+    """The same promotion stream through the sync and async planes: every
+    read along the way is bit-identical (the stale committed epoch serves
+    the same bytes because both tiers stay coherent), and total migration
+    bytes agree once the last epoch is finalized."""
+    runs = {}
+    for mode in (False, True):
+        mem, st, stats = _mem(mode)
+        reads = []
+        for i in range(12):
+            mem.enqueue([i % 32, (i * 3) % 32, (i * 7) % 32])
+            st, _ = mem.tick(st, stats)
+            reads.append(np.asarray(mem.read_rows(st, jnp.arange(32))))
+        mem.finalize_epoch(stats)
+        reads.append(np.asarray(mem.read_rows(st, jnp.arange(32))))
+        runs[mode] = (reads, stats)
+    for i, (a, b) in enumerate(zip(runs[False][0], runs[True][0])):
+        np.testing.assert_array_equal(a, b, err_msg=f"read {i}")
+    s_sync, s_async = runs[False][1], runs[True][1]
+    assert s_async.migration_bytes == s_sync.migration_bytes
+    assert s_async.migration_bytes > 0
+    assert s_async.inflight_bytes == 0       # finalize drained the epoch
+    assert s_async.stall_s == 0.0            # never blocked on a commit
+    assert s_sync.stall_s > 0.0              # the sync arm always blocks
+
+
+def test_reads_during_inflight_epoch_are_stale_and_exact(monkeypatch):
+    """With the readiness token held not-ready, reads resolve against the
+    committed (pre-epoch) placement: promoted pages still serve from the
+    slow tier, bit-exactly."""
+    mem, st, stats = _mem(True)
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: False)
+    mem.enqueue([3, 9, 17])
+    st, _ = mem.tick(st, stats)
+    assert mem.busy and stats.inflight_bytes > 0
+    # control table says promoted, committed view still says miss
+    slots_ctl, _ = tm.lookup(st, jnp.asarray([3, 9, 17]))
+    slots_seen = mem.lookup_slots(st, jnp.asarray([3, 9, 17]))
+    assert (np.asarray(slots_ctl) >= 0).any()
+    np.testing.assert_array_equal(np.asarray(slots_seen), -1)
+    np.testing.assert_array_equal(
+        np.asarray(mem.read_rows(st, jnp.arange(32))), ROWS)
+    np.testing.assert_array_equal(
+        np.asarray(mem.lookup_rows(st, jnp.arange(32))), ROWS)
+
+
+# -- commit ordering ----------------------------------------------------------
+
+def test_no_epoch_n2_issued_before_n1_commit(monkeypatch):
+    """While the in-flight epoch's token is not ready, further ticks must
+    neither commit nor issue — the single-buffer depth is an invariant."""
+    mem, st, stats = _mem(True)
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: False)
+    mem.enqueue([1, 2, 3, 4])
+    st, _ = mem.tick(st, stats)
+    assert mem.busy
+    fl = mem._inflight
+    inflight0 = stats.inflight_bytes
+    for i in range(4):
+        mem.enqueue([(5 + i) % 32])
+        st, event = mem.tick(st, stats)
+        assert event is None                 # no new promotion batch
+        assert mem._inflight is fl           # same epoch still in flight
+        assert stats.inflight_bytes == inflight0
+        assert stats.migration_epochs == 0   # nothing committed either
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: True)
+    st, _ = mem.tick(st, stats)              # commit N+1, issue N+2
+    assert stats.migration_epochs == 1
+    assert stats.migration_bytes == inflight0
+    # direct issue while busy is a programming error, not a silent overwrite
+    mem2, st2, stats2 = _mem(True)
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: False)
+    mem2.enqueue([1, 2])
+    st2, _ = mem2.tick(st2, stats2)
+    from repro.tiering.memory import MigrationEvent
+    ev = MigrationEvent(jnp.asarray([5], jnp.int32),
+                        jnp.asarray([0], jnp.int32), 1)
+    with pytest.raises(RuntimeError, match="in flight"):
+        mem2.issue_migration(st2, ev, stats2)
+
+
+def test_daemon_excludes_busy_resource_from_quota_split(monkeypatch):
+    """The multiplexed daemon caps a busy resource at 0 in the budget split
+    and re-issues only after its commit."""
+    daemon, h = _daemon(True)
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: False)
+    _drive(daemon, h, steps=6)
+    assert h.mem.busy
+    assert h.stats.migration_epochs == 0
+    pending_while_busy = h.stats.pending     # demand queues but never issues
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: True)
+    _drive(daemon, h, steps=2, seed=1)
+    assert h.stats.migration_epochs >= 1     # committed + re-issued
+    assert h.stats.pending <= pending_while_busy + 64
+
+
+# -- writes landing mid-epoch -------------------------------------------------
+
+def test_write_mid_epoch_replays_onto_inflight_buffer(monkeypatch):
+    """A write to a page being promoted by the in-flight epoch must land in
+    BOTH the committed store and the in-flight buffer — otherwise the
+    commit would resurrect the pre-write payload."""
+    mem, st, stats = _mem(True)
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: False)
+    mem.enqueue([7, 21])
+    st, _ = mem.tick(st, stats)
+    assert mem.busy
+    fresh = np.full((2, 4), 123.0, np.float32)
+    mem.write_rows(st, jnp.asarray([7, 21]), jnp.asarray(fresh))
+    # stale view: the write is visible right away through the slow tier
+    np.testing.assert_array_equal(
+        np.asarray(mem.read_rows(st, jnp.asarray([7, 21]))), fresh)
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: True)
+    st, _ = mem.tick(st, stats)              # the epoch commits
+    slots = mem.lookup_slots(st, jnp.asarray([7, 21]))
+    assert (np.asarray(slots) >= 0).all()    # now served from the fast tier
+    np.testing.assert_array_equal(
+        np.asarray(mem.read_rows(st, jnp.asarray([7, 21]))), fresh)
+
+
+# -- checkpointing: commit-or-drop -------------------------------------------
+
+def test_state_dict_finalizes_inflight_epoch(monkeypatch):
+    """Saving with an uncommitted epoch force-commits it: the persisted
+    placement map (the control table) matches the payload."""
+    daemon, h = _daemon(True)
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: False)
+    _drive(daemon, h, steps=6)
+    assert h.mem.busy and h.stats.inflight_bytes > 0
+    states = daemon.state_dict()             # the commit half
+    assert not h.mem.busy and h.stats.inflight_bytes == 0
+    resident = np.flatnonzero(np.asarray(states["embeddings"].tier.page_slot)
+                              >= 0)
+    assert resident.size > 0
+    # post-finalize reads serve resident pages from the fast tier
+    slots = h.mem.lookup_slots(h.state, jnp.asarray(resident[:4], jnp.int32))
+    assert (np.asarray(slots) >= 0).all()
+
+
+def test_load_state_drops_inflight_epoch(monkeypatch):
+    """Restoring with an uncommitted epoch drops it: the issued copy
+    belongs to the pre-restore stream, and the committed view realigns
+    with the restored control table."""
+    daemon, h = _daemon(True)
+    _drive(daemon, h, steps=8)
+    daemon.finalize()
+    saved = jax.tree.map(np.asarray, daemon.state_dict())
+    table = np.asarray(h.state.tier.page_slot).copy()
+    ref = np.asarray(h.read_rows(jnp.arange(8)))
+
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: False)
+    # drift toward a DIFFERENT hot set so an epoch is issued + left open
+    _drive(daemon, h, steps=8, seed=3, shift=16)
+    assert h.mem.busy
+    monkeypatch.undo()
+    daemon.load_state(saved)                 # the drop half
+    assert not h.mem.busy and h.stats.inflight_bytes == 0
+    np.testing.assert_array_equal(np.asarray(h.state.tier.page_slot), table)
+    np.testing.assert_array_equal(np.asarray(h.read_rows(jnp.arange(8))), ref)
+
+
+# -- mid-epoch snapshot conservation (satellite fix) -------------------------
+
+def test_snapshot_folds_inflight_bytes(monkeypatch):
+    """A telemetry snapshot taken mid-epoch still satisfies the row-level
+    conservation gates: the issued bytes are folded into max_epoch_bytes
+    so last <= max <= quota holds while the copy is in flight."""
+    daemon, h = _daemon(True)
+    monkeypatch.setattr(migrate_lib, "token_ready", lambda t: False)
+    _drive(daemon, h, steps=6)
+    assert h.mem.busy
+    row = h.snapshot()
+    assert row["inflight_bytes"] > 0
+    assert row["last_epoch_bytes"] <= row["max_epoch_bytes"]
+    assert row["inflight_bytes"] <= row["max_epoch_bytes"]
+    assert row["max_epoch_bytes"] <= row["quota_bytes"]
+
+
+# -- serve engine: sync/async A/B --------------------------------------------
+
+ENGINE_KW = dict(max_seq=64, paged=True, page_t=4, hot_slots=6,
+                 migration_interval=4, resources=("embeddings",),
+                 embed_hot_slots=4, kv_quota=8)
+
+
+@pytest.fixture(scope="module")
+def engine_pair():
+    from repro.configs.registry import get_smoke_config
+    from repro.models import transformer as tr
+    from repro.serve.engine import ServeConfig, ServeEngine
+    cfg = get_smoke_config("llama3.2-3b")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = (np.arange(2 * 12).reshape(2, 12) * 7) % cfg.vocab
+    sync = ServeEngine(cfg, params, ServeConfig(**ENGINE_KW))
+    out_s = sync.generate(prompt, n_tokens=10)
+    anc = ServeEngine(cfg, params, ServeConfig(async_migration=True,
+                                               **ENGINE_KW))
+    out_a = anc.generate(prompt, n_tokens=10)
+    return sync, anc, out_s, out_a
+
+
+def test_engine_async_bit_exact(engine_pair):
+    sync, anc, out_s, out_a = engine_pair
+    np.testing.assert_array_equal(out_s, out_a)
+
+
+def test_engine_async_zero_stall_equal_bytes(engine_pair):
+    sync, anc, _, _ = engine_pair
+    anc.daemon.finalize()                    # end-of-run accounting barrier
+    ss, sa = sync.tier_stats(), anc.tier_stats()
+    for name in ss:
+        assert ss[name]["migration_bytes"] == sa[name]["migration_bytes"], name
+        assert sa[name]["stall_s"] == 0.0, name
+        if ss[name]["migration_bytes"]:
+            assert ss[name]["stall_s"] > 0.0, name
+            assert sa[name]["overlap_bytes_per_decode_s"] > 0.0, name
+        assert ss[name]["hit_rate"] == pytest.approx(sa[name]["hit_rate"],
+                                                     abs=0.2), name
+
+
+# -- preempt/resume + disagg hand-off landing mid-epoch ----------------------
+
+def test_sched_disagg_preempt_bit_exact_under_async(engine_pair):
+    """The full serving stack — chunked disaggregated prefill, hand-off,
+    decode-lane preemption under a tight patience — replayed with the
+    async plane on: token-for-token identical to the sync run, with
+    hand-offs and preemptions actually exercised mid-epoch."""
+    from repro.configs.registry import get_smoke_config
+    from repro.models import transformer as tr
+    from repro.serve.engine import ServeConfig, ServeEngine
+    from repro.serve.sched import SchedConfig, Scheduler, Tenant
+    cfg = get_smoke_config("llama3.2-3b")
+    params = tr.init_params(cfg, jax.random.PRNGKey(0))
+    base = dict(max_seq=48, paged=True, page_t=4, hot_slots=5,
+                migration_interval=2, resources=("embeddings",),
+                embed_hot_slots=4, embed_rows_per_page=8, kv_quota=8,
+                lanes=2, kv_segments=5)
+    work = [("a", 1, 18, 5), ("b", 2, 6, 6), ("a", 3, 11, 4),
+            ("b", 4, 21, 3)]
+
+    def serve(async_plane):
+        eng = ServeEngine(cfg, params, ServeConfig(
+            async_migration=async_plane, **base))
+        sched = Scheduler(eng, [Tenant("a"), Tenant("b")], SchedConfig(
+            preempt_patience=6, prefill_chunk=4, prefill_lanes=1,
+            temperature=0.0, seed=7))
+        rng = np.random.default_rng(0)
+        reqs = [sched.submit(t, (rng.integers(0, cfg.vocab, n)
+                                 .astype(np.int32)), max_new=m)
+                for t, s, n, m in work]
+        sched.run(max_steps=2000)
+        return ({r.rid: list(r.out) for r in reqs},
+                sum(r.preemptions for r in reqs), sched.handoffs, eng)
+
+    out_s, _, _, _ = serve(False)
+    out_a, preempts, handoffs, eng_a = serve(True)
+    assert out_s == out_a
+    assert handoffs == len(work)             # every request handed off
+    eng_a.daemon.finalize()
+    stats = eng_a.tier_stats()
+    assert any(s["migration_bytes"] > 0 for s in stats.values())
+    assert all(s["stall_s"] == 0.0 for s in stats.values())

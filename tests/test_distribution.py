@@ -282,3 +282,113 @@ def test_host_offload_fallback():
     z = ho.to_fast_tier(y, mesh, P(None))
     assert float(jnp.sum(z - x)) == 0.0
     assert isinstance(ho.supports_memory_kinds(), bool)
+
+
+@pytest.mark.slow
+def test_local_grads_compressed_psum_parity():
+    """local_grads DP grad psum through the shared int8+EF core: losses
+    track the fp32 reduce and the metered wire bytes drop ~4x."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_smoke_config
+        from repro.core.neoprof import NeoProfParams, neoprof_init
+        from repro.core.sketch import SketchParams
+        from repro.dist import compression
+        from repro.models import transformer as tr
+        from repro.optim.optimizers import OptConfig, make_optimizer
+        from repro.train.step import TrainConfig, build_train_step
+
+        cfg = get_smoke_config('llama3.2-3b')
+        mesh = jax.make_mesh((4,), ('data',))
+        params = tr.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                    cfg.vocab)
+        batch = {'tokens': tokens, 'labels': tokens}
+
+        def run(local, compress):
+            tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=0,
+                                             total_steps=10),
+                               microbatches=2, remat=False,
+                               local_grads=local, grad_compression=compress)
+            opt_init, _ = make_optimizer(tcfg.opt)
+            state = {'params': params, 'opt': opt_init(params),
+                     'prof': neoprof_init(NeoProfParams(
+                         sketch=SketchParams(width=tcfg.sketch_width)))}
+            if compress:
+                state['ef'] = compression.ef_init(params)
+            losses, wire = [], None
+            with mesh:
+                step = jax.jit(build_train_step(cfg, mesh, tcfg))
+                for _ in range(3):
+                    state, m = step(state, batch)
+                    losses.append(float(m['loss']))
+                    if 'dp_psum_bytes' in m:
+                        wire = int(m['dp_psum_bytes'])
+            return losses, wire, state
+
+        l_ref, _, _ = run(False, False)        # pjit-reduced baseline
+        l_fp, b_fp, _ = run(True, False)       # manual fp32 psum
+        l_q, b_q, st_q = run(True, True)       # manual int8+EF psum
+        assert np.isfinite(l_ref + l_fp + l_q).all()
+        for a, b in zip(l_ref, l_fp):          # manual == pjit (fp32, up to
+            assert abs(a - b) < 1e-3, (l_ref, l_fp)   # reduction order)
+        for a, b in zip(l_fp, l_q):            # int8+EF tracks fp32
+            assert abs(a - b) < 5e-3, (l_fp, l_q)
+        assert l_q[-1] < l_q[0]                # and still descends
+        ratio = b_fp / b_q
+        assert 3.5 < ratio <= 4.0, ratio
+        ef_norm = sum(float(jnp.sum(jnp.abs(l)))
+                      for l in jax.tree_util.tree_leaves(st_q['ef']))
+        assert ef_norm > 0.0                   # error feedback is live
+        print('OK', l_fp[-1], l_q[-1], ratio)
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_zero1_offload_master_parity():
+    """ZeRO-1 with the master/EF vectors parked on the pinned-host slow
+    tier (prefetch-before-optimizer-step): bitwise identical to resident."""
+    out = _run_subprocess("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs.registry import get_smoke_config
+        from repro.core.neoprof import NeoProfParams, neoprof_init
+        from repro.core.sketch import SketchParams
+        from repro.models import transformer as tr
+        from repro.optim import zero1
+        from repro.optim.optimizers import OptConfig
+        from repro.train.step import TrainConfig, build_train_step
+
+        cfg = get_smoke_config('llama3.2-3b')
+        mesh = jax.make_mesh((8,), ('data',))
+        params = tr.init_params(cfg, jax.random.PRNGKey(0))
+        tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0,
+                                    cfg.vocab)
+        batch = {'tokens': tokens, 'labels': tokens}
+
+        def run(offload):
+            tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=0,
+                                             total_steps=10),
+                               microbatches=2, remat=False, zero1=True,
+                               offload_master=offload)
+            opt, _ = zero1.zero1_init(params, mesh, offload=offload)
+            state = {'params': params, 'opt': opt,
+                     'prof': neoprof_init(NeoProfParams(
+                         sketch=SketchParams(width=tcfg.sketch_width)))}
+            losses = []
+            with mesh:
+                step = jax.jit(build_train_step(cfg, mesh, tcfg))
+                for _ in range(3):
+                    state, m = step(state, batch)
+                    losses.append(float(m['loss']))
+            return losses, state
+
+        l_res, st_res = run(False)
+        l_off, st_off = run(True)
+        assert l_res == l_off, (l_res, l_off)
+        for k in ('m', 'v'):
+            np.testing.assert_array_equal(np.asarray(st_res['opt'][k]),
+                                          np.asarray(st_off['opt'][k]))
+        print('OK', l_off[-1])
+    """)
+    assert "OK" in out

@@ -258,7 +258,8 @@ def _bench_doc(tmp_path, mutate=None):
            "hit_rate": 10 / 12, "promoted": 4, "demoted": 1, "ping_pong": 0,
            "migration_bytes": 1024, "last_epoch_bytes": 256,
            "max_epoch_bytes": 256, "quota_bytes": 512,
-           "migration_epochs": 4, "flush_bytes": 0}
+           "migration_epochs": 4, "flush_bytes": 0, "inflight_bytes": 0,
+           "stall_s": 0.2, "overlap_bytes_per_decode_s": 340.0}
     case = {"arch": "a", "batch": 2, "prompt_len": 8, "n_tokens": 4,
             "compile_s": 0.5, "tokens_per_s": 1.0, "wall_s": 8.0,
             "migration_bytes": 1024, "migration_bytes_per_s": 128.0,
@@ -327,8 +328,17 @@ def _bench_doc(tmp_path, mutate=None):
                           "bytes_int8": 9840, "byte_ratio": 9840 / 39168,
                           "byte_ratio_bound": 0.30, "update_drift": 4e-5,
                           "drift_tolerance": 1e-3}}
+    def ov_arm(mode, stall):
+        return {"mode": mode, "steps": 16, "compile_s": 2.0, "wall_s": 4.0,
+                "tokens_per_s": 8.0, "stall_s": stall,
+                "migration_bytes": 1024,
+                "resources": {"embeddings": dict(row)}}
+    overlap = {"arch": "a", "batch": 2, "prompt_len": 12, "n_tokens": 16,
+               "tokens_match": True, "stall_ratio_bound": 0.25,
+               "sync": ov_arm("sync", 0.4), "async": ov_arm("async", 0.0)}
     doc = {"quick": True, "cases": [case], "mass_ab": mass_ab,
-           "prefill": prefill, "kv_reuse": kv_reuse, "compress": compress}
+           "prefill": prefill, "kv_reuse": kv_reuse, "compress": compress,
+           "overlap": overlap}
     if mutate:
         mutate(doc)
     p = tmp_path / "BENCH_serve.json"
@@ -475,6 +485,46 @@ def test_validate_bench_rejects_violations(tmp_path):
         doc["compress"]["arms"]["int8"]["tokens"] = 95
     assert any("every codec" in e
                for e in validate(_bench_doc(tmp_path, compress_uneven_load)))
+
+
+    def overlap_tokens_diverge(doc):
+        doc["overlap"]["tokens_match"] = False
+    assert any("served different bytes" in e
+               for e in validate(_bench_doc(tmp_path, overlap_tokens_diverge)))
+
+    def overlap_bytes_skipped(doc):
+        doc["overlap"]["async"]["resources"]["embeddings"][
+            "migration_bytes"] = 512
+    assert any("not skip them" in e
+               for e in validate(_bench_doc(tmp_path, overlap_bytes_skipped)))
+
+    def overlap_stall_blown(doc):
+        doc["overlap"]["async"]["stall_s"] = 0.2   # > 0.25 * sync 0.4
+    assert any("blocking decode" in e
+               for e in validate(_bench_doc(tmp_path, overlap_stall_blown)))
+
+    def overlap_no_baseline(doc):
+        doc["overlap"]["sync"]["stall_s"] = 0.0
+    assert any("baseline" in e
+               for e in validate(_bench_doc(tmp_path, overlap_no_baseline)))
+
+    def overlap_not_achieved(doc):
+        doc["overlap"]["async"]["resources"]["embeddings"][
+            "overlap_bytes_per_decode_s"] = 0.0
+    assert any("metering is broken" in e
+               for e in validate(_bench_doc(tmp_path, overlap_not_achieved)))
+
+    def overlap_tail_uncommitted(doc):
+        doc["overlap"]["async"]["resources"]["embeddings"][
+            "inflight_bytes"] = 128
+    assert any("finalize barrier" in e
+               for e in validate(_bench_doc(tmp_path,
+                                            overlap_tail_uncommitted)))
+
+    def inflight_not_folded(doc):
+        doc["cases"][0]["resources"]["embeddings"]["inflight_bytes"] = 400
+    assert any("failed to fold" in e
+               for e in validate(_bench_doc(tmp_path, inflight_not_folded)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,66 @@
+"""TickClock: the daemon-cadence counter's interval-boundary arithmetic.
+
+Pins the off-by-one class of bug the inline `_maybe_tick` arithmetic was
+prone to: a chunk advance that lands exactly ON an interval boundary owes
+that boundary's tick exactly once, and any partition of the same step
+stream into advances must produce the same total tick count.
+"""
+import pytest
+
+from repro.serve.clock import TickClock
+
+
+def test_unit_steps_tick_every_interval():
+    c = TickClock(4)
+    ticks = [c.advance() for _ in range(12)]
+    assert ticks == [0, 0, 0, 1] * 3
+    assert c.steps == 12
+
+
+def test_chunk_equal_to_interval_ticks_once():
+    """The interval-boundary chunk length: n == interval owes exactly 1."""
+    c = TickClock(8)
+    assert c.advance(8) == 1
+    assert c.advance(8) == 1
+    assert c.steps == 16
+
+
+def test_chunk_spanning_multiple_boundaries():
+    c = TickClock(4)
+    assert c.advance(11) == 2      # crosses 4 and 8
+    assert c.advance(1) == 1       # reaches 12
+    assert c.advance(3) == 0       # 13..15: no boundary
+    assert c.advance(1) == 1       # 16
+
+
+def test_boundary_landing_vs_crossing():
+    """Landing ON a boundary and starting FROM one are not double counted."""
+    c = TickClock(5)
+    assert c.advance(5) == 1       # lands on 5: the boundary's tick
+    assert c.advance(1) == 0       # starts from 5: already paid
+    assert c.advance(4) == 1       # lands on 10
+
+
+@pytest.mark.parametrize("interval", [1, 2, 3, 5, 8])
+@pytest.mark.parametrize("chunks", [
+    [1] * 20,
+    [7, 7, 7],
+    [3, 5, 2, 8, 1, 1, 1],
+    [20],
+    [0, 4, 0, 4],                  # zero-length advances are free
+])
+def test_partition_invariance(interval, chunks):
+    """Any partition of the step stream yields floor(total/interval) ticks."""
+    c = TickClock(interval)
+    total_ticks = sum(c.advance(n) for n in chunks)
+    assert total_ticks == sum(chunks) // interval
+    assert c.steps == sum(chunks)
+
+
+def test_rejects_bad_arguments():
+    with pytest.raises(ValueError):
+        TickClock(0)
+    with pytest.raises(ValueError):
+        TickClock(-3)
+    with pytest.raises(ValueError):
+        TickClock(4).advance(-1)
